@@ -1,0 +1,134 @@
+"""Render the dry-run results as the EXPERIMENTS.md roofline tables.
+
+Run after ``python -m repro.launch.dryrun --all``:
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+RESULTS = "benchmarks/results/dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str = RESULTS) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        parts = os.path.basename(path)[:-5].split("__")
+        rec.setdefault("tag", parts[3] if len(parts) > 3 else "")
+        rows.append(rec)
+    return rows
+
+
+def _ms(x) -> str:
+    return f"{x*1e3:10.2f}"
+
+
+def table(rows: list[dict], mesh: str) -> str:
+    rows = [r for r in rows if r.get("mesh") == mesh
+            and r.get("status") == "ok" and not r.get("tag")]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = [
+        f"### Roofline — mesh {mesh} "
+        f"({512 if mesh.startswith('2x') else 256} chips)",
+        "",
+        "| arch | shape | step | compute(ms) | memory(ms) | coll(ms) | "
+        "dominant | useful | peak GiB/dev |",
+        "|---|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} |"
+            f"{_ms(r['compute_s'])} |{_ms(r['memory_s'])} |"
+            f"{_ms(r['collective_s'])} | {r['dominant']} |"
+            f" {r['useful_flops_ratio']:.2f} |"
+            f" {r['peak_memory_bytes']/2**30:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def failures(rows: list[dict]) -> list[str]:
+    return [
+        f"{r['arch']} x {r['shape']} x {r['mesh']}: {r['status']}"
+        for r in rows if r.get("status") != "ok"
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--dir", default=RESULTS)
+    args = ap.parse_args()
+    rows = load(args.dir)
+    meshes = [args.mesh] if args.mesh else ["16x16", "2x16x16"]
+    for mesh in meshes:
+        print(table(rows, mesh))
+        print()
+    bad = failures(rows)
+    if bad:
+        print("### Failures")
+        for b in bad:
+            print(" -", b)
+    print(f"({len(rows)} results loaded)")
+
+
+if __name__ == "__main__":
+    main()
+
+
+def remark(r: dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    dom, step = r["dominant"], r["step"]
+    if step == "train_step":
+        if dom == "collective":
+            return ("fuse/convert the per-block TP activation all-reduces "
+                    "to bf16 reduce-scatter+all-gather (Megatron-SP) and "
+                    "overlap FSDP weight gathers with compute")
+        if dom == "memory":
+            return ("cut op-level HBM traffic: flash-attention kernel "
+                    "instead of streamed jnp softmax passes, fused "
+                    "norm/residual, microbatching for resident activations")
+        return "increase per-chip arithmetic intensity (larger microbatch)"
+    if step == "prefill_step":
+        if dom == "collective":
+            return ("drop FSDP weight gathers for serving (resident TP "
+                    "weights) and keep activations sequence-sharded")
+        return ("flash prefill kernel (Pallas chunked_prefill) removes "
+                "softmax round-trips to HBM")
+    # serve_step
+    if dom == "collective":
+        return ("serve with resident (non-FSDP) weights; only the "
+                "flash-decoding psums over the striped cache remain")
+    return ("int8 KVC (paper's 8-bit trade-off) + grouped-GQA decode "
+            "halve cache traffic; fuse the one-hot cache write")
+
+
+def experiments_tables() -> str:
+    rows = load()
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        sel = [r for r in rows if r.get("mesh") == mesh
+               and r.get("status") == "ok" and not r.get("tag")]
+        sel.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+        out.append(f"### Roofline — mesh {mesh} "
+                   f"({512 if mesh.startswith('2x') else 256} chips)\n")
+        out.append("| arch | shape | compute(ms) | memory(ms) | coll(ms) | "
+                   "dominant | useful | peak GiB/dev | to move the dominant "
+                   "term down |")
+        out.append("|---|---|---:|---:|---:|---|---:|---:|---|")
+        for r in sel:
+            out.append(
+                f"| {r['arch']} | {r['shape']} |{_ms(r['compute_s'])} |"
+                f"{_ms(r['memory_s'])} |{_ms(r['collective_s'])} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                f"{r['peak_memory_bytes']/2**30:.1f} | {remark(r)} |")
+        out.append("")
+    return "\n".join(out)

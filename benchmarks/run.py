@@ -1,0 +1,231 @@
+"""Benchmark driver -- one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig1_2_isl_latency   -- intra-plane ISL latency vs (M, h)   (Figs 1-2)
+  * table1_memory_tiers  -- memory-hierarchy placement of LEO    (Table 1)
+  * fig16_strategy_sim   -- worst-case latency per strategy      (Fig 16)
+  * table3_kvc_speedup   -- generation speedup from the KVC      (Table 3)
+  * tpu_strategy_costs   -- chip-scale placement costs (beyond-paper)
+  * protocol_micro       -- set/get/lookup microbenchmarks
+
+Run: PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def _time_us(fn, iters=3):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def fig1_2_isl_latency():
+    from repro.core.simulator import intra_plane_latency_s, isl_latency_grid
+
+    grid = isl_latency_grid()
+    us = _time_us(lambda: isl_latency_grid())
+    # derived: latency at the paper's extrapolation point (50 sats, 550 km)
+    lat50 = intra_plane_latency_s(50, 550.0) * 1e3
+    rows = [("fig1_2_isl_latency", us, f"lat(M=50,h=550km)={lat50:.2f}ms")]
+    for m, h, lat in grid:
+        if m in (15, 50, 100) and h in (550, 2000):
+            rows.append((f"fig1_2[M={m},h={int(h)}km]", 0.0,
+                         f"{lat*1e3:.3f}ms"))
+    return rows
+
+
+def table1_memory_tiers():
+    from repro.core.simulator import (
+        MEMORY_HIERARCHY_S,
+        intra_plane_latency_s,
+        memory_tier_for_latency,
+        required_sats_per_plane_for,
+    )
+
+    lat = intra_plane_latency_s(60, 550.0)
+    tier = memory_tier_for_latency(lat)
+    m_needed = required_sats_per_plane_for(2e-3, 550.0)
+    us = _time_us(lambda: memory_tier_for_latency(lat))
+    return [
+        ("table1_memory_tiers", us,
+         f"one-hop(M=60)={lat*1e3:.2f}ms tier='{tier}' "
+         f"M_for_2ms={m_needed} tiers={len(MEMORY_HIERARCHY_S)}"),
+    ]
+
+
+def fig16_strategy_sim():
+    import dataclasses
+
+    from repro.core.mapping import Strategy
+    from repro.core.simulator import SimConfig, sweep, worst_case_latency
+
+    us = _time_us(lambda: sweep(), iters=1)
+    rows = [("fig16_strategy_sim", us, "sweep=3x4x4")]
+    for s in (9, 81):
+        per = {}
+        for strat in Strategy:
+            cfg = dataclasses.replace(SimConfig(), num_servers=s,
+                                      altitude_km=550.0)
+            per[strat.value] = worst_case_latency(strat, cfg).worst_latency_s
+        rows.append((f"fig16[servers={s},h=550]", 0.0,
+                     " ".join(f"{k}={v*1e3:.1f}ms" for k, v in per.items())))
+    lo = worst_case_latency(
+        Strategy.ROTATION_HOP,
+        dataclasses.replace(SimConfig(), num_servers=9))
+    hi = worst_case_latency(
+        Strategy.ROTATION_HOP,
+        dataclasses.replace(SimConfig(), num_servers=81))
+    red = (1 - hi.worst_latency_s / lo.worst_latency_s) * 100
+    rows.append(("fig16[9->81 servers]", 0.0,
+                 f"latency_reduction={red:.1f}% (paper: ~90%)"))
+    return rows
+
+
+def table3_kvc_speedup(quick: bool = True):
+    """Paper §5: generation with vs without the SkyMemory KVC.
+
+    The paper's testbed (TinyLlama-1.1B on a Jetson + 19x5 cFS
+    constellation) measured 21-24% end-to-end speedup for a ~250-char
+    context prompt.  Same protocol in-process: TinyLlama-family model
+    (reduced depth in quick mode so the benchmark stays CPU-friendly),
+    128-token blocks, 6 kB chunks, 10 LOS servers.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import (
+        ConstellationKVC, ConstellationSpec, LosWindow, Sat, Strategy,
+    )
+    from repro.models.model import Model
+    from repro.serving import Engine, Request, SamplingParams
+
+    cfg = get_config("skymemory-tinyllama")
+    if quick:
+        # reduced depth + f32 (CPU-native) so outputs are bit-comparable
+        cfg = cfg.replace(num_layers=4, d_model=512, num_heads=8,
+                          num_kv_heads=4, head_dim=64, d_ff=1408,
+                          dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = ConstellationSpec(num_planes=5, sats_per_plane=19,
+                             altitude_km=550.0)  # the paper's 19x5 testbed
+    kvc = ConstellationKVC(
+        spec, LosWindow(Sat(2, 9), 5, 5), Strategy.ROTATION_HOP,
+        num_servers=10, chunk_bytes=6 * 1024,
+    )
+    prompt = ("SkyMemory expands cache memory to LEO constellations, "
+              "highly distributed systems with thousands of satellites "
+              "connected by free-space optics, always one hop from any "
+              "point on earth. This context repeats in RAG workloads. ") * 8
+    sp = SamplingParams(max_new_tokens=30)
+
+    # each path runs twice; the second run is timed (steady-state graphs,
+    # as on the paper's testbed where the model is long-resident)
+    eng_cold = Engine(model, params, kvc=None, max_seq_len=1024)
+    eng_cold.generate([Request(prompt=prompt, sampling=sp)])
+    t0 = time.perf_counter()
+    r_cold = eng_cold.generate([Request(prompt=prompt, sampling=sp)])[0]
+    t_cold = time.perf_counter() - t0
+
+    eng_warm = Engine(model, params, kvc=kvc, block_size=128,
+                      max_seq_len=1024, write_back=True)
+    eng_warm.generate([Request(prompt=prompt, sampling=sp)])  # warm cache
+    eng_warm.write_back = False
+    eng_warm.generate([Request(prompt=prompt, sampling=sp)])  # warm graphs
+    t0 = time.perf_counter()
+    r_warm = eng_warm.generate([Request(prompt=prompt, sampling=sp)])[0]
+    t_warm = time.perf_counter() - t0
+
+    speedup = (1 - t_warm / t_cold) * 100
+    # token-level agreement: identical up to float reduction-order ties
+    # (the cached path evaluates a 1-row attention graph, the cold path a
+    # full-prefill graph; a near-tie may flip one greedy token after which
+    # sequences diverge -- tests/test_serving.py checks strict identity on
+    # controlled cases)
+    pairs = list(zip(r_cold.token_ids, r_warm.token_ids))
+    div = next((i for i, (a, b) in enumerate(pairs) if a != b), len(pairs))
+    return [(
+        "table3_kvc_speedup", t_cold * 1e6,
+        f"no_kvc={t_cold:.2f}s kvc={t_warm:.2f}s speedup={speedup:.0f}% "
+        f"cached_tokens={r_warm.cached_tokens} "
+        f"tokens_identical_until={div}/{len(pairs)} (paper: 21-24%)",
+    )]
+
+
+def tpu_strategy_costs():
+    from repro.core.tpu_cache import TorusGrid, strategy_cost_table
+
+    grid = TorusGrid(16, 16)
+    costs = strategy_cost_table(grid, num_shards=64,
+                                bytes_per_shard=2 * 1024 * 1024)
+    us = _time_us(lambda: strategy_cost_table(grid, 64, 2 * 1024 * 1024))
+    return [(
+        "tpu_strategy_costs", us,
+        " ".join(f"{k.split('(')[0]}={v*1e6:.1f}us" for k, v in costs.items()),
+    )]
+
+
+def protocol_micro():
+    from repro.core import (
+        ConstellationKVC, ConstellationSpec, LosWindow, Sat, Strategy,
+        chain_hashes,
+    )
+
+    spec = ConstellationSpec(15, 15, 550.0)
+    kvc = ConstellationKVC(spec, LosWindow(Sat(7, 7), 9, 9),
+                           Strategy.ROTATION_HOP, num_servers=10,
+                           chunk_bytes=6 * 1024)
+    payload = b"x" * (128 * 1024)
+    h = chain_hashes(list(range(128)), 128)[0]
+    kvc.set_block(h, payload)
+    rows = []
+    rows.append(("protocol_set_128kB",
+                 _time_us(lambda: kvc.set_block(h, payload), iters=20),
+                 f"chunks={kvc.directory[h]}"))
+    rows.append(("protocol_get_128kB",
+                 _time_us(lambda: kvc.get_block(h), iters=20),
+                 f"sim_latency={kvc.transport.stats.op_latencies_s[-1]*1e3:.2f}ms"))
+    hashes = chain_hashes(list(range(128 * 64)), 128)
+    rows.append(("protocol_hash_64blocks",
+                 _time_us(lambda: chain_hashes(list(range(128 * 64)), 128),
+                          iters=10),
+                 f"blocks={len(hashes)}"))
+    rows.append(("protocol_rotate",
+                 _time_us(lambda: kvc.rotate(1), iters=5),
+                 f"migrations={kvc.stats.migrations}"))
+    return rows
+
+
+BENCHES = [
+    fig1_2_isl_latency,
+    table1_memory_tiers,
+    fig16_strategy_sim,
+    tpu_strategy_costs,
+    protocol_micro,
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", dest="quick", action="store_false",
+                    default=True, help="full-size TinyLlama for Table 3")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in table3_kvc_speedup(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

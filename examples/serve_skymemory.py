@@ -1,0 +1,96 @@
+"""End-to-end serving driver: batched requests over a SkyMemory prefix cache.
+
+Serves a TinyLlama-family model (the paper's §5 testbed model; reduced depth
+by default so the demo runs in ~a minute on CPU) against a simulated 19x5
+constellation.  Repeated contexts hit cached blocks, skipping prefill -- the
+paper's Table-3 experiment.
+
+Run: PYTHONPATH=src python examples/serve_skymemory.py [--full] [--requests N]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import (  # noqa: E402
+    ConstellationKVC,
+    ConstellationSpec,
+    LosWindow,
+    Sat,
+    Strategy,
+)
+from repro.models.model import Model  # noqa: E402
+from repro.serving import Engine, Request, SamplingParams  # noqa: E402
+
+CONTEXT = (
+    "SkyMemory expands the scope of cache memory to include LEO "
+    "constellations: highly distributed systems with thousands of "
+    "satellites connected with free-space optics inter-satellite links, "
+    "always only one hop from any point on earth. "
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full TinyLlama-1.1B dims (slow on CPU)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config("skymemory-tinyllama")
+    if not args.full:
+        cfg = cfg.replace(num_layers=4, d_model=512, num_heads=8,
+                          num_kv_heads=4, head_dim=64, d_ff=1408)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params)")
+
+    spec = ConstellationSpec(num_planes=5, sats_per_plane=19,
+                             altitude_km=550.0)  # paper's 19x5 testbed
+    kvc = ConstellationKVC(
+        spec, LosWindow(Sat(2, 9), 5, 5), Strategy.ROTATION_HOP,
+        num_servers=10, chunk_bytes=6 * 1024,
+    )
+    engine = Engine(model, params, kvc=kvc, block_size=128, max_seq_len=512,
+                    max_batch=4)
+
+    sp = SamplingParams(max_new_tokens=args.max_new)
+    reqs = [
+        Request(prompt=CONTEXT * 2 + f" Question {i}: what is cached?",
+                sampling=sp)
+        for i in range(args.requests)
+    ]
+    t0 = time.perf_counter()
+    results = engine.generate(reqs)
+    wall = time.perf_counter() - t0
+
+    for r in results:
+        hit = r.cached_tokens / max(r.prompt_tokens, 1) * 100
+        print(f"req {r.request_id}: prompt={r.prompt_tokens}tok "
+              f"cached={r.cached_tokens} ({hit:.0f}% hit) "
+              f"prefilled={r.prefill_tokens} -> {len(r.token_ids)} new tok")
+    s = engine.stats
+    print(f"\nengine: {s.requests} requests in {wall:.1f}s | "
+          f"cached {s.cached_tokens} tok, prefilled {s.prefilled_tokens} "
+          f"tok, decoded {s.decoded_tokens} tok")
+    print(f"constellation: hits={kvc.stats.block_hits} "
+          f"misses={kvc.stats.block_misses} blocks_set={kvc.stats.blocks_set}")
+    print(f"simulated worst-case fetch latency "
+          f"{max(kvc.transport.stats.op_latencies_s)*1e3:.2f} ms over "
+          f"{kvc.transport.stats.messages} ISL messages")
+
+    # Rotate mid-service: hits must survive migration.
+    kvc.rotate(steps=3)
+    r = engine.generate([Request(prompt=CONTEXT * 2 + " after rotation",
+                                 sampling=sp)])[0]
+    print(f"\nafter 3 rotation steps: cached={r.cached_tokens} tok "
+          f"(migrations={kvc.stats.migrations})")
+
+
+if __name__ == "__main__":
+    main()

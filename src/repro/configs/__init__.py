@@ -1,0 +1,92 @@
+"""Assigned architecture configs (``--arch <id>``) + the paper's own model.
+
+Each module defines ``CONFIG`` with the exact assigned dimensions (source
+cited in ``source``) and registers it here.  ``smoke_config`` derives the
+reduced same-family variant used by CPU smoke tests (2 layers,
+d_model <= 512, <= 4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCH_IDS = [
+    "llava-next-34b",
+    "zamba2-1.2b",
+    "nemotron-4-340b",
+    "yi-9b",
+    "internlm2-1.8b",
+    "mamba2-1.3b",
+    "granite-moe-3b-a800m",
+    "stablelm-12b",
+    "deepseek-v3-671b",
+    "seamless-m4t-large-v2",
+    "skymemory-tinyllama",   # the paper's own testbed model (§5)
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def list_configs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts."""
+    d = min(cfg.d_model, 256)
+    heads = 4 if cfg.num_heads else 0
+    kv = min(cfg.num_kv_heads, heads) or heads
+    kw = dict(
+        num_layers=2,
+        d_model=d,
+        num_heads=heads,
+        num_kv_heads=max(1, kv if kv <= heads else heads),
+        head_dim=d // heads if heads else 0,
+        d_ff=2 * d,
+        vocab_size=512,
+        num_image_tokens=min(cfg.num_image_tokens, 16),
+        moe_group_size=64,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=4, num_experts_per_tok=2, moe_d_ff=2 * d,
+                  first_k_dense=min(cfg.first_k_dense, 1))
+    if cfg.use_mla:
+        kw.update(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                  qk_rope_head_dim=8, v_head_dim=16, mtp_depth=cfg.mtp_depth)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if cfg.attn_layer_period:
+        kw.update(attn_layer_period=1, num_layers=2)
+    if cfg.is_encoder_decoder:
+        kw.update(num_encoder_layers=2)
+    return dataclasses.replace(cfg, **kw)
+
+
+def shape_variant(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config tweaks: long-context decode needs sub-quadratic
+    memory, so full-attention families switch to the sliding-window cache
+    (DESIGN.md §4); SSM/hybrid run natively."""
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm",):
+        if cfg.arch_type == "hybrid":
+            return cfg.replace(sliding_window=32_768)  # shared-attn windows
+        return cfg.replace(sliding_window=32_768)
+    return cfg
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "get_config",
+    "list_configs",
+    "smoke_config",
+    "shape_variant",
+]

@@ -1,0 +1,25 @@
+"""SeamlessM4T-large-v2: encoder-decoder transformer backbone.
+
+[arXiv:2308.11596] -- the speech frontend (mel + conformer feature
+extractor) is stubbed per the brief; ``input_specs`` provides frame
+embeddings.  Source/target each take seq_len/2 of the assigned shape.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    arch_type="audio",
+    num_layers=24,             # decoder
+    num_encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    head_dim=64,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    is_encoder_decoder=True,
+    frontend="audio",
+    source="arXiv:2308.11596",
+)

@@ -1,0 +1,81 @@
+"""SkyMemory core: the paper's distributed KVC protocol and placement math."""
+from repro.core.constellation import (
+    C_KM_S,
+    R_EARTH_KM,
+    ConstellationSpec,
+    LosWindow,
+    Sat,
+)
+from repro.core.hashing import NULL_HASH, chain_hashes, hash_block, split_token_blocks
+from repro.core.chunking import (
+    arrays_to_bytes,
+    bytes_to_arrays,
+    bytes_to_dequantized,
+    chunk_server,
+    join_chunks,
+    num_chunks,
+    quantized_to_bytes,
+    split_chunks,
+)
+from repro.core.mapping import Strategy, bounding_box_side, layout_grid, place_servers
+from repro.core.migration import Move, migration_planes, plan_migration
+from repro.core.protocol import (
+    ConstellationKVC,
+    IslTransport,
+    KVCManager,
+)
+from repro.core.radix import BlockMeta, RadixBlockIndex
+from repro.core.simulator import (
+    MEMORY_HIERARCHY_S,
+    SimConfig,
+    SimResult,
+    intra_plane_latency_s,
+    isl_latency_grid,
+    sweep,
+    worst_case_latency,
+)
+from repro.core.store import SatelliteStore
+from repro.core.tpu_cache import TorusGrid, gather_cost_s, migrate_shards
+
+__all__ = [
+    "C_KM_S",
+    "R_EARTH_KM",
+    "ConstellationSpec",
+    "LosWindow",
+    "Sat",
+    "NULL_HASH",
+    "chain_hashes",
+    "hash_block",
+    "split_token_blocks",
+    "arrays_to_bytes",
+    "bytes_to_arrays",
+    "bytes_to_dequantized",
+    "chunk_server",
+    "join_chunks",
+    "num_chunks",
+    "quantized_to_bytes",
+    "split_chunks",
+    "Strategy",
+    "bounding_box_side",
+    "layout_grid",
+    "place_servers",
+    "Move",
+    "migration_planes",
+    "plan_migration",
+    "ConstellationKVC",
+    "IslTransport",
+    "KVCManager",
+    "BlockMeta",
+    "RadixBlockIndex",
+    "MEMORY_HIERARCHY_S",
+    "SimConfig",
+    "SimResult",
+    "intra_plane_latency_s",
+    "isl_latency_grid",
+    "sweep",
+    "worst_case_latency",
+    "SatelliteStore",
+    "TorusGrid",
+    "gather_cost_s",
+    "migrate_shards",
+]

@@ -1,0 +1,146 @@
+"""Chunking + KVC (de)serialization (paper §3.1).
+
+A block's KV-cache payload (several MB even for small models) is split into
+fixed-byte chunks; chunk ``i`` maps to virtual server ``i mod num_servers``.
+A failed lookup of any single chunk means the block is absent.
+
+Also provides the byte serialization of a KVC block payload -- a list of
+numpy arrays (K and V per layer, or SSM state tensors) -- plus the optional
+int8 quantization the paper's testbed used (optimum-quanto / HQQ 8-bit).
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+_MAGIC = b"SKYM"
+_VERSION = 1
+
+
+def split_chunks(data: bytes, chunk_bytes: int) -> list[bytes]:
+    if chunk_bytes < 1:
+        raise ValueError("chunk_bytes must be >= 1")
+    if not data:
+        return [b""]
+    return [data[i : i + chunk_bytes] for i in range(0, len(data), chunk_bytes)]
+
+
+def num_chunks(total_bytes: int, chunk_bytes: int) -> int:
+    if total_bytes == 0:
+        return 1
+    return -(-total_bytes // chunk_bytes)
+
+
+def join_chunks(chunks: list[bytes]) -> bytes:
+    return b"".join(chunks)
+
+
+def chunk_server(chunk_id: int, num_servers: int) -> int:
+    """Virtual server (0-based) for a chunk: chunk_id mod n (paper §3.1)."""
+    return chunk_id % num_servers
+
+
+# ---------------------------------------------------------------------------
+# KVC payload serialization.
+# ---------------------------------------------------------------------------
+
+def _dtype_name(dt: np.dtype) -> bytes:
+    """Stable dtype tag; extended floats (bfloat16, ...) go by name since
+    their numpy .str is an opaque void type."""
+    if dt.kind == "V" or dt.str.startswith("|V"):
+        return dt.name.encode()
+    return dt.str.encode()
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered by jax
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def arrays_to_bytes(arrays: list[np.ndarray]) -> bytes:
+    """Serialize a list of arrays: magic | version | n | per-array header."""
+    parts = [_MAGIC, struct.pack("<HI", _VERSION, len(arrays))]
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        dt = _dtype_name(a.dtype)
+        parts.append(struct.pack("<B", len(dt)))
+        parts.append(dt)
+        parts.append(struct.pack("<B", a.ndim))
+        parts.append(struct.pack(f"<{a.ndim}q", *a.shape))
+        raw = a.tobytes()
+        parts.append(struct.pack("<q", len(raw)))
+        parts.append(raw)
+    return b"".join(parts)
+
+
+def bytes_to_arrays(data: bytes) -> list[np.ndarray]:
+    if data[:4] != _MAGIC:
+        raise ValueError("not a SkyMemory KVC payload")
+    ver, n = struct.unpack_from("<HI", data, 4)
+    if ver != _VERSION:
+        raise ValueError(f"unsupported KVC payload version {ver}")
+    off = 10
+    out: list[np.ndarray] = []
+    for _ in range(n):
+        (dlen,) = struct.unpack_from("<B", data, off)
+        off += 1
+        dt = _dtype_from_name(data[off : off + dlen].decode())
+        off += dlen
+        (ndim,) = struct.unpack_from("<B", data, off)
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}q", data, off)
+        off += 8 * ndim
+        (rlen,) = struct.unpack_from("<q", data, off)
+        off += 8
+        a = np.frombuffer(data[off : off + rlen], dtype=dt).reshape(shape)
+        off += rlen
+        out.append(a)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# int8 KVC quantization (paper §5 used 8-bit quantized KVC blocks).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QuantizedArray:
+    q: np.ndarray       # int8 values
+    scale: np.ndarray   # per-last-axis-channel float32 scale
+
+
+def quantize_int8(a: np.ndarray) -> QuantizedArray:
+    """Symmetric per-channel (last axis) int8 quantization."""
+    a = np.asarray(a, dtype=np.float32)
+    amax = np.max(np.abs(a), axis=tuple(range(a.ndim - 1)), keepdims=True)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(a / scale), -127, 127).astype(np.int8)
+    return QuantizedArray(q=q, scale=scale)
+
+
+def dequantize_int8(qa: QuantizedArray) -> np.ndarray:
+    return qa.q.astype(np.float32) * qa.scale
+
+
+def quantized_to_bytes(arrays: list[np.ndarray]) -> bytes:
+    flat: list[np.ndarray] = []
+    for a in arrays:
+        qa = quantize_int8(a)
+        flat.append(qa.q)
+        flat.append(qa.scale)
+    return arrays_to_bytes(flat)
+
+
+def bytes_to_dequantized(data: bytes) -> list[np.ndarray]:
+    flat = bytes_to_arrays(data)
+    if len(flat) % 2:
+        raise ValueError("corrupt quantized payload")
+    out = []
+    for i in range(0, len(flat), 2):
+        out.append(dequantize_int8(QuantizedArray(q=flat[i], scale=flat[i + 1])))
+    return out

@@ -1,0 +1,411 @@
+"""The SkyMemory Set/Get KVC protocol (paper §3.1, §3.8).
+
+``ConstellationKVC`` is the distributed chunk store spread over the torus:
+chunks of a block's payload are striped ``chunk_id mod num_servers`` across
+virtual servers placed on satellites by a strategy (``mapping.py``).  All
+chunk operations of one block run in parallel, so the modeled latency of a
+block set/get is the *max* over its chunk operations (paper §4).
+
+``KVCManager`` is the paper's §3.3 interface bound to a tokenizer and a
+KVC-producing model function, with the §3.10 local radix index in front.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from repro.core import migration as migration_mod
+from repro.core.chunking import chunk_server, join_chunks, split_chunks
+from repro.core.constellation import ConstellationSpec, LosWindow, Sat
+from repro.core.hashing import chain_hashes, split_token_blocks
+from repro.core.mapping import Strategy, place_servers
+from repro.core.radix import BlockMeta, RadixBlockIndex
+from repro.core.store import SatelliteStore
+
+
+# ---------------------------------------------------------------------------
+# Transport cost model.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TransportStats:
+    messages: int = 0
+    bytes_moved: int = 0
+    total_latency_s: float = 0.0
+    op_latencies_s: list[float] = field(default_factory=list)
+
+
+@dataclass
+class IslTransport:
+    """Latency accounting for chunk ops; execution itself is in-process.
+
+    ``ground_hosted``: the LLM sits on the ground under the window center
+    (one reliable uplink to the closest satellite, then ISL routing) --
+    paper's rotation / rotation+hop scenario.  Otherwise the LLM is on board
+    the center satellite (hop-aware scenario) and only ISL legs apply.
+    """
+
+    spec: ConstellationSpec
+    ground_hosted: bool = True
+    chunk_processing_time_s: float = 0.0
+    link_bandwidth_bytes_s: float | None = None
+    stats: TransportStats = field(default_factory=TransportStats)
+
+    def chunk_op_latency_s(
+        self, center: Sat, target: Sat, n_bytes: int, *, round_trip: bool
+    ) -> float:
+        lat = 0.0
+        if self.ground_hosted:
+            lat += self.spec.slant_range_km(0.0) / 299_792.458  # up to center
+        lat += self.spec.isl_latency_s(center, target, routed=True)
+        if round_trip:
+            lat *= 2.0
+        lat += self.chunk_processing_time_s
+        if self.link_bandwidth_bytes_s:
+            lat += n_bytes / self.link_bandwidth_bytes_s
+        self.stats.messages += 1
+        self.stats.bytes_moved += n_bytes
+        return lat
+
+    def record_op(self, latency_s: float) -> None:
+        self.stats.total_latency_s += latency_s
+        self.stats.op_latencies_s.append(latency_s)
+
+
+# ---------------------------------------------------------------------------
+# Distributed constellation-hosted KVC.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CacheStats:
+    block_hits: int = 0
+    block_misses: int = 0
+    blocks_set: int = 0
+    blocks_purged: int = 0
+    migrations: int = 0
+    lookup_probes: int = 0
+
+
+class ConstellationKVC:
+    """Chunk store striped over the constellation with rotation migration."""
+
+    def __init__(
+        self,
+        spec: ConstellationSpec,
+        window: LosWindow,
+        strategy: Strategy = Strategy.ROTATION_HOP,
+        *,
+        num_servers: int | None = None,
+        chunk_bytes: int = 6 * 1024,
+        per_sat_capacity_bytes: int | None = None,
+        transport: IslTransport | None = None,
+    ) -> None:
+        self.spec = spec
+        self.window = window
+        self.strategy = strategy
+        self.num_servers = num_servers or (window.rows * window.cols)
+        self.chunk_bytes = chunk_bytes
+        self.transport = transport or IslTransport(spec)
+        self.stats = CacheStats()
+        self.server_map: list[Sat] = place_servers(
+            strategy, spec, window, self.num_servers
+        )
+        self._stores: dict[Sat, SatelliteStore] = {}
+        self._capacity = per_sat_capacity_bytes
+        # block hash -> n_chunks for blocks believed stored (server-side dir).
+        self.directory: dict[bytes, int] = {}
+        self.on_block_lost: Callable[[bytes], None] | None = None
+
+    # -- plumbing ------------------------------------------------------
+    def store_for(self, sat: Sat) -> SatelliteStore:
+        sat = self.spec.wrap(sat)
+        if sat not in self._stores:
+            self._stores[sat] = SatelliteStore(
+                capacity_bytes=self._capacity, on_evict=self._on_evict
+            )
+        return self._stores[sat]
+
+    def _on_evict(self, store: SatelliteStore, key: tuple[bytes, int]) -> None:
+        """LRU eviction of one chunk invalidates its whole block (§3.9)."""
+        block_hash, _ = key
+        self.purge_block(block_hash)
+
+    def server_sat(self, server_id0: int) -> Sat:
+        return self.server_map[server_id0]
+
+    @property
+    def center(self) -> Sat:
+        return self.window.center
+
+    # -- Set KVC (paper §3.8) ------------------------------------------
+    def set_block(self, block_hash: bytes, payload: bytes) -> BlockMeta:
+        chunks = split_chunks(payload, self.chunk_bytes)
+        worst = 0.0
+        for cid, chunk in enumerate(chunks):
+            sid = chunk_server(cid, self.num_servers)
+            sat = self.server_sat(sid)
+            self.store_for(sat).set((block_hash, cid), chunk)
+            worst = max(
+                worst,
+                self.transport.chunk_op_latency_s(
+                    self.center, sat, len(chunk), round_trip=False
+                ),
+            )
+        self.transport.record_op(worst)
+        self.directory[block_hash] = len(chunks)
+        self.stats.blocks_set += 1
+        return BlockMeta(
+            n_chunks=len(chunks), set_time=time.time(), payload_bytes=len(payload)
+        )
+
+    # -- Get KVC (paper §3.8) ------------------------------------------
+    def has_block(self, block_hash: bytes) -> bool:
+        """Probe chunk 0 at its server -- a missing first chunk means the
+        block is absent (paper: lookups start at the nearest satellite)."""
+        self.stats.lookup_probes += 1
+        sat = self.server_sat(chunk_server(0, self.num_servers))
+        self.transport.record_op(
+            self.transport.chunk_op_latency_s(self.center, sat, 0, round_trip=True)
+        )
+        return self.store_for(sat).contains((block_hash, 0))
+
+    def get_block(self, block_hash: bytes, n_chunks: int | None = None) -> bytes | None:
+        if n_chunks is None:
+            n_chunks = self.directory.get(block_hash, 0)
+            if n_chunks == 0:
+                self.stats.block_misses += 1
+                return None
+        chunks: list[bytes] = []
+        worst = 0.0
+        for cid in range(n_chunks):
+            sid = chunk_server(cid, self.num_servers)
+            sat = self.server_sat(sid)
+            chunk = self.store_for(sat).get((block_hash, cid))
+            if chunk is None:
+                # A single missing chunk fails the block (§3.1); lazy-evict.
+                self.stats.block_misses += 1
+                self.purge_block(block_hash)
+                return None
+            worst = max(
+                worst,
+                self.transport.chunk_op_latency_s(
+                    self.center, sat, len(chunk), round_trip=True
+                ),
+            )
+            chunks.append(chunk)
+        self.transport.record_op(worst)
+        self.stats.block_hits += 1
+        return join_chunks(chunks)
+
+    def lookup_longest(self, hashes: Sequence[bytes]) -> int:
+        """Binary search for the furthest cached hash (Get steps 3-6).
+
+        The chained-hash prefix property makes presence monotone in the block
+        index, so bisect for the rightmost present block.  Returns the number
+        of cached prefix blocks (0 = none).
+        """
+        lo, hi = 0, len(hashes)  # invariant: blocks < lo present
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.has_block(hashes[mid]):
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
+
+    # -- eviction (§3.9) -------------------------------------------------
+    def purge_block(self, block_hash: bytes) -> int:
+        """Gossip-style purge: remove every chunk of the block everywhere."""
+        n = self.directory.pop(block_hash, None)
+        removed = 0
+        for store in self._stores.values():
+            for key in [k for k in store.keys() if k[0] == block_hash]:
+                store.delete(key)
+                removed += 1
+        if removed or n:
+            self.stats.blocks_purged += 1
+            if self.on_block_lost is not None:
+                self.on_block_lost(block_hash)
+        return removed
+
+    def sweep_incomplete(self) -> int:
+        """Periodic cleanup: purge blocks with missing chunks (§3.9)."""
+        purged = 0
+        for block_hash, n_chunks in list(self.directory.items()):
+            ok = all(
+                self.store_for(
+                    self.server_sat(chunk_server(cid, self.num_servers))
+                ).contains((block_hash, cid))
+                for cid in range(n_chunks)
+            )
+            if not ok:
+                self.purge_block(block_hash)
+                purged += 1
+        return purged
+
+    # -- predictive prefetch (§3.7, closing remark) -----------------------
+    def prefetch_for_rotation(self, block_hash: bytes, steps: int) -> int:
+        """Pre-position a block's chunks where they will be needed after
+        ``steps`` rotation steps (paper: 'the set of satellites in the LOS
+        at that future time is known exactly').
+
+        Copies each chunk to the satellite that will host its server after
+        the rotation; harmless double-residency until the window arrives
+        (§3.7).  Returns the number of chunks copied.
+        """
+        n_chunks = self.directory.get(block_hash)
+        if not n_chunks or self.strategy is Strategy.HOP:
+            return 0
+        # simulate the window/servers 'steps' ahead without moving data
+        future_window = self.window
+        future_map = list(self.server_map)
+        for _ in range(steps):
+            nw = future_window.shifted(self.spec, d_slot=1)
+            for mv in migration_mod.plan_migration(
+                    self.spec, future_window, nw, future_map):
+                future_map[mv.server_id - 1] = mv.dst
+            future_window = nw
+        copied = 0
+        for cid in range(n_chunks):
+            sid = chunk_server(cid, self.num_servers)
+            src, dst = self.server_sat(sid), future_map[sid]
+            if src == dst:
+                continue
+            chunk = self.store_for(src).get((block_hash, cid))
+            if chunk is None:
+                continue
+            self.store_for(dst).set((block_hash, cid), chunk)
+            self.transport.stats.messages += 1
+            self.transport.stats.bytes_moved += len(chunk)
+            copied += 1
+        return copied
+
+    # -- rotation (§3.4) --------------------------------------------------
+    def rotate(self, steps: int = 1) -> list[migration_mod.Move]:
+        """Advance the LOS window ``steps`` within-plane positions and
+        migrate chunks of exiting satellites (no-op for HOP: on-board)."""
+        all_moves: list[migration_mod.Move] = []
+        for _ in range(steps):
+            new_window = self.window.shifted(self.spec, d_slot=1)
+            if self.strategy is Strategy.HOP:
+                self.window = new_window
+                continue
+            moves = migration_mod.plan_migration(
+                self.spec, self.window, new_window, self.server_map
+            )
+            for mv in moves:
+                src_store = self.store_for(mv.src)
+                dst_store = self.store_for(mv.dst)
+                for key, value in src_store.pop_all():
+                    dst_store.set(key, value)
+                    self.transport.stats.messages += 1
+                    self.transport.stats.bytes_moved += len(value)
+                self.server_map[mv.server_id - 1] = mv.dst
+                self.stats.migrations += 1
+            self.window = new_window
+            all_moves.extend(moves)
+        return all_moves
+
+
+# ---------------------------------------------------------------------------
+# Paper §3.3 interface.
+# ---------------------------------------------------------------------------
+
+# (tokens, past_payload|None, past_len) -> payload bytes for the next block.
+KvcFn = Callable[[Sequence[int], bytes | None, int], bytes]
+
+
+class KVCManager:
+    """``init(model, tokenizer) / add_blocks(prompt) / get_cache(prompt)``.
+
+    ``kvc_fn`` computes the serialized KVC payload of one token block given
+    the payload covering the preceding blocks -- supplied by the serving
+    layer (any model family: K/V lists or SSM state snapshots; the protocol
+    only sees bytes).  The §3.10 radix tree indexes block hashes locally so
+    lookups usually skip the constellation entirely.
+    """
+
+    def __init__(
+        self,
+        tokenize: Callable[[str], list[int]],
+        kvc_fn: KvcFn,
+        cache: ConstellationKVC,
+        *,
+        block_size: int = 128,
+        use_radix: bool = True,
+    ) -> None:
+        self.tokenize = tokenize
+        self.kvc_fn = kvc_fn
+        self.cache = cache
+        self.block_size = block_size
+        self.use_radix = use_radix
+        self.index = RadixBlockIndex()
+        cache.on_block_lost = self._on_block_lost
+        self._hash_to_chain: dict[bytes, list[bytes]] = {}
+
+    def _on_block_lost(self, block_hash: bytes) -> None:
+        chain = self._hash_to_chain.pop(block_hash, None)
+        if chain is not None:
+            self.index.remove(chain)
+
+    # ------------------------------------------------------------------
+    def add_blocks(self, prompt: str) -> int:
+        """Compute + store the KVC for every uncached full block (Set KVC)."""
+        return self.add_blocks_tokens(self.tokenize(prompt))
+
+    def add_blocks_tokens(self, tokens: Sequence[int]) -> int:
+        """Token-level Set KVC (serving engines pass their exact, possibly
+        truncated token sequence so cache coverage matches what they run)."""
+        hashes = chain_hashes(tokens, self.block_size)
+        if not hashes:
+            return 0
+        blocks = split_token_blocks(tokens, self.block_size)
+        n_cached, _ = (
+            self.index.longest_cached_prefix(hashes)
+            if self.use_radix
+            else (self.cache.lookup_longest(hashes), None)
+        )
+        past: bytes | None = None
+        if n_cached:
+            past = self.cache.get_block(hashes[n_cached - 1])
+            if past is None:  # lazily evicted under us - recompute all
+                n_cached = 0
+        added = 0
+        metas: list[BlockMeta | None] = [None] * len(hashes)
+        for i in range(n_cached, len(hashes)):
+            block_tokens = [t for b in blocks[: i + 1] for t in b]
+            payload = self.kvc_fn(block_tokens, past, i * self.block_size)
+            meta = self.cache.set_block(hashes[i], payload)
+            metas[i] = meta
+            self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
+            past = payload
+            added += 1
+        if self.use_radix and added:
+            self.index.insert(hashes, metas)
+        return added
+
+    def get_cache(self, prompt: str) -> tuple[bytes | None, int]:
+        """Longest-prefix KVC for ``prompt`` (Get KVC).
+
+        Returns ``(payload, n_cached_tokens)``; ``(None, 0)`` on full miss.
+        """
+        return self.get_cache_tokens(self.tokenize(prompt))
+
+    def get_cache_tokens(
+        self, tokens: Sequence[int]
+    ) -> tuple[bytes | None, int]:
+        """Token-level Get KVC (longest cached prefix of ``tokens``)."""
+        hashes = chain_hashes(tokens, self.block_size)
+        if not hashes:
+            return None, 0
+        if self.use_radix:
+            n, _meta = self.index.longest_cached_prefix(hashes)
+        else:
+            n = self.cache.lookup_longest(hashes)
+        while n > 0:
+            payload = self.cache.get_block(hashes[n - 1])
+            if payload is not None:
+                return payload, n * self.block_size
+            n -= 1  # lazy eviction already pruned index; try shorter prefix
+        return None, 0

@@ -1,0 +1,88 @@
+"""Per-satellite chunk store with LRU eviction (paper §3.9).
+
+Each satellite hosts an in-memory hashtable keyed by ``(block_hash,
+chunk_id)``.  Under memory pressure the least-recently-used chunk is evicted;
+an eviction callback lets the owning constellation propagate the eviction
+(gossip / lazy policies live in ``eviction.py``).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable
+
+ChunkKey = tuple[bytes, int]  # (block_hash, chunk_id)
+EvictionCallback = Callable[["SatelliteStore", ChunkKey], None]
+
+
+@dataclass
+class StoreStats:
+    hits: int = 0
+    misses: int = 0
+    sets: int = 0
+    evictions: int = 0
+    bytes_stored: int = 0
+
+
+@dataclass
+class SatelliteStore:
+    """LRU key-value store for KVC chunks on one satellite."""
+
+    capacity_bytes: int | None = None
+    on_evict: EvictionCallback | None = None
+    _data: OrderedDict = field(default_factory=OrderedDict)
+    stats: StoreStats = field(default_factory=StoreStats)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    @property
+    def used_bytes(self) -> int:
+        return self.stats.bytes_stored
+
+    def set(self, key: ChunkKey, value: bytes) -> None:
+        if key in self._data:
+            self.stats.bytes_stored -= len(self._data[key])
+            del self._data[key]
+        self._data[key] = value
+        self.stats.bytes_stored += len(value)
+        self.stats.sets += 1
+        self._enforce_capacity()
+
+    def get(self, key: ChunkKey) -> bytes | None:
+        if key not in self._data:
+            self.stats.misses += 1
+            return None
+        self._data.move_to_end(key)  # LRU touch
+        self.stats.hits += 1
+        return self._data[key]
+
+    def contains(self, key: ChunkKey) -> bool:
+        return key in self._data
+
+    def delete(self, key: ChunkKey) -> bool:
+        if key in self._data:
+            self.stats.bytes_stored -= len(self._data[key])
+            del self._data[key]
+            return True
+        return False
+
+    def keys(self) -> list[ChunkKey]:
+        return list(self._data.keys())
+
+    def pop_all(self) -> list[tuple[ChunkKey, bytes]]:
+        """Drain the store (used by rotation migration)."""
+        items = list(self._data.items())
+        self._data.clear()
+        self.stats.bytes_stored = 0
+        return items
+
+    def _enforce_capacity(self) -> None:
+        if self.capacity_bytes is None:
+            return
+        while self.stats.bytes_stored > self.capacity_bytes and self._data:
+            key, value = self._data.popitem(last=False)  # LRU out
+            self.stats.bytes_stored -= len(value)
+            self.stats.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(self, key)

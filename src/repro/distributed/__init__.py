@@ -1,0 +1,19 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    active_rules,
+    batch_spec,
+    cache_specs,
+    maybe_shard,
+    param_specs,
+    use_rules,
+)
+
+__all__ = [
+    "AxisRules",
+    "active_rules",
+    "batch_spec",
+    "cache_specs",
+    "maybe_shard",
+    "param_specs",
+    "use_rules",
+]

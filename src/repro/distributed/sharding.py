@@ -1,0 +1,241 @@
+"""Sharding rules: logical activation/parameter axes -> mesh axes.
+
+Mesh layout (DESIGN.md §5): ``(data, model)`` single-pod or
+``(pod, data, model)`` multi-pod.  Batch rides (pod, data); heads / ffn /
+experts / vocab ride model; for batch-1 long-context decode the KV-cache
+*sequence* dim rides data (the paper's chunk striping, chip-scale).
+
+Parameter specs are derived from leaf path names with divisibility
+fallbacks (a dim that does not divide its mesh axes is replicated).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    mesh: Mesh
+    data_axes: tuple[str, ...] = ("data",)      # ("pod", "data") multi-pod
+    model_axis: str = "model"
+    # beyond-paper levers (hillclimbing):
+    shard_kv_heads: bool = True                  # False -> replicate K/V proj
+    seq_shard_cache: bool = False                # long_500k context sharding
+    fsdp: bool = True                            # shard params over data too
+    attn_tp: bool = True                         # False: seq-parallel decode
+                                                 # (attention weights keep all
+                                                 # heads local; cache seq dim
+                                                 # is striped instead)
+    seq_parallel_acts: bool = False              # Megatron-SP: residual-
+                                                 # stream activations sharded
+                                                 # over (data, model)
+
+    @property
+    def data(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_local = threading.local()
+
+
+def active_rules() -> AxisRules | None:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules | None):
+    prev = active_rules()
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (called from model code; no-op without rules).
+# ---------------------------------------------------------------------------
+
+_LOGICAL_ACT = {
+    # (batch, seq, d_model)
+    "act_btd": lambda r: P(
+        r.data, r.model_axis if r.seq_parallel_acts else None, None),
+    # (batch, seq, hidden/heads*hd) - model-parallel feature dim
+    "act_btf": lambda r: P(r.data, None, r.model_axis),
+    # logits (batch, seq, vocab)
+    "logits": lambda r: P(r.data, None, r.model_axis),
+    # moe dispatch (groups, tokens, experts, capacity)
+    "moe_dispatch": lambda r: P(r.data, None, r.model_axis, None),
+    # per-expert activations (groups, experts, capacity, d)
+    "moe_expert": lambda r: P(r.data, r.model_axis, None, None),
+    # decode q/k/v right after projection [B, 1, H, hd]: replicate heads so
+    # the (tiny) query is gathered instead of the (huge) model-striped cache
+    "decode_qkv": lambda r: P(r.data, None, None, None),
+}
+
+
+def maybe_shard(x, logical: str):
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec_fn = _LOGICAL_ACT.get(logical)
+    if spec_fn is None:
+        return x
+    spec = spec_fn(rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+    except ValueError:
+        return x  # non-divisible shape: skip the constraint
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs.
+# ---------------------------------------------------------------------------
+
+def _pad_left(spec: tuple, ndim: int) -> P:
+    return P(*((None,) * (ndim - len(spec)) + spec))
+
+
+def _fits(shape, spec: P, rules: AxisRules) -> bool:
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            continue
+        if dim % rules.axis_size(axes) != 0:
+            return False
+    return True
+
+
+def _rule_for(path: tuple[str, ...], ndim: int, rules: AxisRules) -> tuple:
+    name = path[-1]
+    in_moe = "moe" in path and "shared" not in path
+    tp = rules.model_axis
+    atp = tp if rules.attn_tp else None       # attention tensor parallelism
+    dp = rules.data if rules.fsdp else None   # FSDP/ZeRO-3 second axis
+    if in_moe and name in ("wi_gate", "wi_up", "wo"):
+        return (tp, dp, None)              # (E, ., .) expert parallel + fsdp
+    if name == "tok":
+        return (tp, dp)                    # vocab-sharded embedding
+    if name == "unembed":
+        return (dp, tp)
+    if name in ("wq", "wq_b"):
+        return (dp, atp)
+    if name in ("wi", "wi_gate", "wi_up", "wz", "wx", "wdt", "wb", "wc"):
+        return (dp, tp)
+    if name in ("wk", "wv"):
+        return (dp, atp) if rules.shard_kv_heads else (dp, None)
+    if name == "wo":
+        return (atp, dp)
+    if name == "out_proj":
+        return (tp, dp)
+    if name in ("w_uk", "w_uv"):
+        return (atp, dp, None)             # heads
+    if name in ("wkv_a", "wq_a"):
+        return (dp, None)
+    if name in ("conv_x_w",):
+        return (None, tp)
+    if name in ("conv_x_b", "norm_scale"):
+        return (tp,)
+    return ()                              # replicate
+
+
+def param_specs(params, rules: AxisRules):
+    """PartitionSpec tree for a parameter pytree (stacked layer dims are
+    padded with None on the left; non-divisible dims fall back to None)."""
+
+    def spec_of(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        base = _rule_for(names, leaf.ndim, rules)
+        spec = _pad_left(base, leaf.ndim)
+        if not _fits(leaf.shape, spec, rules):
+            # drop axes that do not divide
+            fixed = []
+            for dim, axes in zip(leaf.shape, tuple(spec)):
+                if axes is not None and dim % rules.axis_size(axes) == 0:
+                    fixed.append(axes)
+                else:
+                    fixed.append(None)
+            spec = P(*fixed)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def param_shardings(params, rules: AxisRules):
+    specs = param_specs(params, rules)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs.
+# ---------------------------------------------------------------------------
+
+def batch_spec(rules: AxisRules, *, batch_shardable: bool = True) -> P:
+    return P(rules.data) if batch_shardable else P(None)
+
+
+def cache_specs(cache, rules: AxisRules, *, batch: int):
+    """Decode-cache specs: (layers, batch, seq, heads..., dim).
+
+    The cache *sequence* dim is striped across chips -- the paper's chunk
+    striping at ICI scale (DESIGN.md §2):
+
+    * batch >= data-size: batch over data, sequence over model.  (KV-head
+      counts rarely divide a 16-way model axis; striping the sequence gives
+      the same 16x memory split and decode attention reduces over the
+      sharded seq dim with a small psum -- flash-decoding style.)
+    * batch < data-size (long_500k): sequence striped over *every* axis.
+    """
+    dsize = rules.axis_size(rules.data_axes)
+    seq_shard = rules.seq_shard_cache or batch < dsize
+    tp = rules.model_axis
+
+    def spec_of(path, leaf):
+        names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        nd = leaf.ndim
+        if "ssm" in names:
+            if names[-1] == "state":      # (L, B, H, P, N)
+                spec = (None, None if seq_shard else rules.data, tp, None, None)
+            else:                          # conv (L, B, K-1, C)
+                spec = (None, None if seq_shard else rules.data, None, None)
+            return P(*spec[:nd])
+        # kv/mla/cross: (L, B, S, ...)
+        if seq_shard:
+            b_ax = None
+            s_ax = tuple(rules.data_axes) + (tp,)
+        else:
+            b_ax = rules.data
+            s_ax = tp
+        spec = [None, b_ax, s_ax] + [None] * (nd - 3)
+        return P(*spec)
+
+    def fixed(path, leaf):
+        spec = spec_of(path, leaf)
+        if not _fits(leaf.shape, spec, rules):
+            spec = P(*[
+                a if a is not None and dim % rules.axis_size(a) == 0 else None
+                for dim, a in zip(
+                    leaf.shape,
+                    tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec))),
+                )
+            ])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(fixed, cache)

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: chunked-prefill flash attention.
+
+Computes causal (optionally sliding-window) attention where the query block
+starts ``q_offset`` tokens into the key sequence -- exactly the shape of a
+prefill on top of a SkyMemory-restored prefix (fresh queries over
+prefix + fresh keys).  GQA is handled by mapping each query head to its KV
+head in the BlockSpec index maps (no materialized head repeat).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); the kv dimension is innermost,
+so the online-softmax running state (m, l, acc) lives in VMEM scratch and
+persists across kv iterations.  Block sizes default to 128 (MXU-aligned);
+the wrapper pads ragged shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, q_offset: int,
+            sliding_window: int | None, block_q: int, block_k: int,
+            kv_len: int, num_kv_blocks: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)           # [bq, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)           # [bk, d]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                            # [bq, bk]
+
+    iq = pl.program_id(2)
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + q_offset
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if sliding_window is not None:
+        mask &= k_pos > q_pos - sliding_window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # [bq, bk]
+    correction = jnp.exp(m_prev - m_new)                 # [bq, 1]
+    l_new = correction * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(
+    q, k, v, *,
+    causal: bool = True,
+    q_offset: int = 0,
+    sliding_window: int | None = None,
+    lengths=None,
+    softmax_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """q: [B,Sq,H,Dq]; k/v: [B,Skv,Hkv,D].  Returns [B,Sq,H,Dv].
+
+    ``lengths`` is not supported by this kernel (decode masking belongs to
+    paged_attention); the jnp reference handles that case.
+    """
+    if lengths is not None:
+        raise NotImplementedError("use paged_attention for length masking")
+    b, sq, h, dq = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else dq ** -0.5
+    rep = h // hkv
+
+    block_q = min(block_q, _round_up(sq))
+    block_k = min(block_k, _round_up(skv))
+    pq = (-sq) % block_q
+    pk = (-skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = qp.shape[1] // block_q
+    nk = kp.shape[1] // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, q_offset=q_offset,
+        sliding_window=sliding_window, block_q=block_q, block_k=block_k,
+        kv_len=skv, num_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dq),
+                         lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, block_k, 1, dq),
+                         lambda ib, ih, iq, ik, rep=rep: (ib, ik, ih // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, dv),
+                         lambda ib, ih, iq, ik, rep=rep: (ib, ik, ih // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dv),
+                               lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, qp.shape[1], h, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, dv), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq]
+
+
+def _round_up(n: int, mult: int = 128) -> int:
+    return max(mult, -(-n // mult) * mult) if n >= mult else _pow2(n)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

@@ -1,0 +1,110 @@
+"""jit'd kernel entry points with implementation dispatch.
+
+``impl``:
+  * ``"auto"``    -- Pallas on TPU backends, pure-jnp reference elsewhere
+                     (this CPU container always takes the jnp path unless
+                     interpret mode is forced);
+  * ``"jnp"``     -- the ref.py oracle;
+  * ``"pallas"``  -- the Pallas TPU kernel (compiled on TPU, interpret=True
+                     on CPU so correctness is testable in this container).
+
+Override globally with the ``REPRO_KERNEL_IMPL`` environment variable.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels import ref
+
+
+def _resolve(impl: str) -> str:
+    impl = os.environ.get("REPRO_KERNEL_IMPL", impl)
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    q_offset=0,
+    sliding_window: int | None = None,
+    lengths=None,
+    softmax_scale: float | None = None,
+    impl: str = "auto",
+):
+    """Prefill/chunked-prefill attention ([B,Sq,H,D] x [B,Skv,Hkv,D])."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        if (lengths is None and k.shape[1] >= ref.STREAMING_KV_THRESHOLD):
+            # memory-realistic path for long sequences: never materialize
+            # the full score matrix (mirrors the TPU flash kernel)
+            return ref.attention_streaming_ref(
+                q, k, v, causal=causal, q_offset=q_offset,
+                sliding_window=sliding_window, softmax_scale=softmax_scale,
+                block_k=ref.STREAMING_BLOCK_K,
+            )
+        return ref.attention_ref(
+            q, k, v, causal=causal, q_offset=q_offset,
+            sliding_window=sliding_window, lengths=lengths,
+            softmax_scale=softmax_scale,
+        )
+    from repro.kernels import chunked_prefill
+
+    return chunked_prefill.chunked_prefill_attention(
+        q, k, v, causal=causal, q_offset=q_offset,
+        sliding_window=sliding_window, lengths=lengths,
+        softmax_scale=softmax_scale, interpret=_interpret(),
+    )
+
+
+def paged_attention(
+    q, k_pages, v_pages, lengths, *,
+    softmax_scale: float | None = None,
+    impl: str = "auto",
+):
+    """Decode attention over a paged KV cache ([B,H,D] x [B,P,page,Hkv,D])."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.paged_attention_ref(
+            q, k_pages, v_pages, lengths, softmax_scale=softmax_scale
+        )
+    from repro.kernels import paged_attention as pa
+
+    return pa.paged_attention(
+        q, k_pages, v_pages, lengths,
+        softmax_scale=softmax_scale, interpret=_interpret(),
+    )
+
+
+def ssd_scan(
+    x, dt, a, b_mat, c_mat, *,
+    chunk_size: int = 64,
+    initial_state=None,
+    impl: str = "auto",
+):
+    """Mamba-2 SSD chunked scan ([B,L,H,P] -> y, final_state)."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.ssd_scan_ref(
+            x, dt, a, b_mat, c_mat,
+            chunk_size=chunk_size, initial_state=initial_state,
+        )
+    from repro.kernels import ssd_scan as sk
+
+    return sk.ssd_chunk_scan(
+        x, dt, a, b_mat, c_mat,
+        chunk_size=chunk_size, initial_state=initial_state,
+        interpret=_interpret(),
+    )
+
+
+ssd_decode_step = ref.ssd_decode_step_ref  # tiny op: jnp everywhere
+attention = partial(flash_attention)

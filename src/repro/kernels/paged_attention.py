@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-token decode attention over a paged KV cache.
+
+The cache is the block-paged tensor SkyMemory stripes: pages of
+``page_size`` tokens (the paper's 128-token blocks) per sequence.  One
+query per sequence attends over all valid pages with online softmax.
+
+Grid: (batch, q_heads, pages); pages innermost so the running (m, l, acc)
+scratch carries across page iterations.  The per-sequence valid length
+arrives as a [B, 1] int32 operand read from its own block.  GQA maps query
+head -> kv head in the index maps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, page: int, num_pages: int):
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)               # [d]
+    k = k_ref[0, 0, :, 0, :].astype(jnp.float32)         # [page, d]
+    v = v_ref[0, 0, :, 0, :].astype(jnp.float32)         # [page, d]
+    length = len_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        k, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0] * scale                                      # [page]
+    pos = ip * page + jax.lax.iota(jnp.int32, page)
+    s = jnp.where(pos < length, s, NEG_INF)
+    s = s[None, :]                                       # [1, page]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ip == num_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
+
+
+def paged_attention(
+    q, k_pages, v_pages, lengths, *,
+    softmax_scale: float | None = None,
+    interpret: bool = False,
+):
+    """q: [B,H,D]; k/v pages: [B,P,page,Hkv,D]; lengths: [B] -> out [B,H,D]."""
+    b, h, d = q.shape
+    _, np_, page, hkv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    rep = h // hkv
+    lengths2 = lengths.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=scale, page=page,
+                               num_pages=np_)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, np_),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ih, ip: (ib, 0)),
+            pl.BlockSpec((1, 1, d), lambda ib, ih, ip: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, page, 1, d),
+                         lambda ib, ih, ip, rep=rep: (ib, ip, 0, ih // rep, 0)),
+            pl.BlockSpec((1, 1, page, 1, dv),
+                         lambda ib, ih, ip, rep=rep: (ib, ip, 0, ih // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), lambda ib, ih, ip: (ib, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths2, q, k_pages, v_pages)

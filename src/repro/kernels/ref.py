@@ -1,0 +1,296 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU fallback path).
+
+These are the semantics of record: the Pallas kernels in this package must
+match them (assert_allclose in tests, interpret=True on CPU), and the model
+layer uses them whenever the TPU kernel path is unavailable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """[B, S, Hkv, D] -> [B, S, H, D] by repeating each KV head."""
+    b, s, hkv, d = k.shape
+    if hkv == num_heads:
+        return k
+    rep = num_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attention_ref(
+    q: jax.Array,              # [B, Sq, H, D]
+    k: jax.Array,              # [B, Skv, Hkv, D]
+    v: jax.Array,              # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    sliding_window: int | None = None,
+    lengths: jax.Array | None = None,   # [B] valid kv length per batch row
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Reference multi-head attention with GQA, causal offset and windowing.
+
+    ``q_offset``: absolute position of q[0] within the kv sequence -- this is
+    how prefill-with-cached-prefix attends over (prefix + fresh) keys.
+    ``sliding_window``: query at absolute position p sees kv positions in
+    (p - window, p].
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+
+    q_pos = jnp.arange(sq)[:, None] + q_offset          # [Sq, 1]
+    kv_pos = jnp.arange(skv)[None, :]                   # [1, Skv]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if sliding_window is not None:
+        mask &= kv_pos > q_pos - sliding_window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    if lengths is not None:
+        valid = kv_pos < lengths[:, None, None, None]   # [B,1,1,Skv]
+        logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_streaming_ref(
+    q: jax.Array,              # [B, Sq, H, D]
+    k: jax.Array,              # [B, Skv, Hkv, D]
+    v: jax.Array,              # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    sliding_window: int | None = None,
+    softmax_scale: float | None = None,
+    block_k: int = 2048,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Streams over KV blocks with a lax.scan, so the (Sq x Skv) score matrix
+    is never materialized -- the memory-realistic lowering for the 32k+
+    shapes (the naive ``attention_ref`` would claim O(S^2) temp).  Matches
+    ``attention_ref`` numerically.
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]            # may differ from d (MLA: qk 192, v 128)
+    skv = k.shape[1]
+    if skv % block_k:
+        pad = (-skv) % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = k.shape[1] // block_k
+    kh = _repeat_kv(k, h).reshape(b, nb, block_k, h, d)
+    vh = _repeat_kv(v, h).reshape(b, nb, block_k, h, dv)
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    q32 = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq)[:, None] + q_offset            # [Sq, 1]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, ib = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32,
+                       kb.astype(jnp.float32)) * scale
+        k_pos = (ib * block_k + jnp.arange(block_k))[None, :]
+        mask = k_pos < skv
+        if causal:
+            mask &= k_pos <= q_pos
+        if sliding_window is not None:
+            mask &= k_pos > q_pos - sliding_window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = corr * l + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kh, 1, 0), jnp.moveaxis(vh, 1, 0),
+         jnp.arange(nb)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+STREAMING_KV_THRESHOLD = 8192
+STREAMING_BLOCK_K = 2048
+
+
+import os as _os
+
+# Grouped-GQA decode: contract per KV-head group instead of materializing
+# the head-repeated cache (a §Perf memory-term optimization; env-switchable
+# so the baseline remains reproducible).
+GQA_GROUPED = _os.environ.get("REPRO_GQA_GROUPED", "0") == "1"
+
+
+def paged_attention_ref(
+    q: jax.Array,              # [B, H, D] single decode query per sequence
+    k_pages: jax.Array,        # [B, P, page, Hkv, D]
+    v_pages: jax.Array,        # [B, P, page, Hkv, D]
+    lengths: jax.Array,        # [B] number of valid tokens in the cache
+    *,
+    softmax_scale: float | None = None,
+    grouped: bool | None = None,
+) -> jax.Array:
+    """Decode attention over a block-paged KV cache (one new token).
+
+    Pages here are the *contiguous per-sequence* page list (the serving
+    layer's block table has already gathered pages into sequence order --
+    this mirrors how SkyMemory reassembles a block from its chunks).
+    """
+    b, p, page, hkv, d = k_pages.shape
+    grouped = GQA_GROUPED if grouped is None else grouped
+    k = k_pages.reshape(b, p * page, hkv, d)
+    v = v_pages.reshape(b, p * page, hkv, d)
+    if grouped:
+        h = q.shape[1]
+        rep = h // hkv
+        scale = softmax_scale if softmax_scale is not None else d ** -0.5
+        qg = q.reshape(b, hkv, rep, d)
+        s = jnp.einsum("bgrd,bsgd->bgrs", qg, k).astype(jnp.float32) * scale
+        valid = (jnp.arange(k.shape[1])[None, None, None, :]
+                 < lengths[:, None, None, None])
+        s = jnp.where(valid, s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bgrs,bsgd->bgrd", probs, v)
+        return out.reshape(b, h, d)
+    out = attention_ref(
+        q[:, None],
+        k,
+        v,
+        causal=False,
+        lengths=lengths,
+        softmax_scale=softmax_scale,
+    )
+    return out[:, 0]
+
+
+def ssd_scan_ref(
+    x: jax.Array,    # [B, L, H, P]  inputs per head
+    dt: jax.Array,   # [B, L, H]     softplus'd discretization step
+    a: jax.Array,    # [H]           negative decay rate (A = -exp(A_log))
+    b_mat: jax.Array,  # [B, L, G, N]  input projection (B in SSM terms)
+    c_mat: jax.Array,  # [B, L, G, N]  output projection (C in SSM terms)
+    *,
+    chunk_size: int = 64,
+    initial_state: jax.Array | None = None,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD (state-space duality) chunked scan, pure jnp.
+
+    Returns (y [B,L,H,P], final_state [B,H,P,N]).  Sequential over chunks
+    (lax.scan); quadratic only within a chunk.  G groups share B/C across
+    H//G heads.
+    """
+    bsz, seqlen, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert seqlen % chunk_size == 0, "pad sequence to a chunk multiple"
+    nc = seqlen // chunk_size
+    rep = h // g
+
+    # Broadcast groups to heads.
+    b_h = jnp.repeat(b_mat, rep, axis=2)   # [B, L, H, N]
+    c_h = jnp.repeat(c_mat, rep, axis=2)   # [B, L, H, N]
+
+    # Per-step log decay: dA = a * dt  (a < 0).
+    log_decay = (a[None, None, :] * dt).astype(jnp.float32)  # [B, L, H]
+    xdt = (x * dt[..., None]).astype(jnp.float32)            # [B, L, H, P]
+
+    def to_chunks(t):
+        return t.reshape((bsz, nc, chunk_size) + t.shape[2:])
+
+    xc = to_chunks(xdt)               # [B, C, Q, H, P]
+    bc = to_chunks(b_h.astype(jnp.float32))
+    cc = to_chunks(c_h.astype(jnp.float32))
+    ld = to_chunks(log_decay)         # [B, C, Q, H]
+
+    seg = jnp.cumsum(ld, axis=2)      # within-chunk cumulative log decay
+    total = seg[:, :, -1, :]          # [B, C, H] chunk total decay
+
+    # Intra-chunk (quadratic within the chunk):
+    #   y[q] += sum_{t<=q} C[q]·B[t] * exp(seg[q]-seg[t]) * x[t]
+    scores = jnp.einsum("bcqhn,bcthn->bchqt", cc, bc)        # [B,C,H,Q,Q]
+    # rel[q, t] = seg[q] - seg[t], axes [B,C,Q,T,H]:
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]       # [B,C,Q,T,H]
+    rel = jnp.moveaxis(rel, -1, 2)                            # [B,C,H,Q,T]
+    causal = jnp.tril(jnp.ones((chunk_size, chunk_size), dtype=bool))
+    decay = jnp.where(causal[None, None, None], jnp.exp(rel), 0.0)
+    y_diag = jnp.einsum("bchqt,bcthp->bcqhp", scores * decay, xc)
+
+    # Chunk states: S_c = sum_t B[t] * exp(total - seg[t]) * x[t]
+    state_decay = jnp.exp(total[:, :, None, :] - seg)         # [B,C,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", bc, state_decay, xc)
+
+    # Inter-chunk recurrence: S_out[c] = exp(total_c) * S_in[c] + states[c].
+    # Done with an associative scan (log-depth combine, no while loop -- so
+    # XLA cost analysis sees the true work and SPMD can parallelize it):
+    # elements (a_c, b_c) with a=exp(total), b=chunk state; combine
+    # (a1,b1)o(a2,b2) = (a1*a2, b1*a2 + b2) gives inclusive prefix states.
+    if initial_state is None:
+        init = jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+
+    decay_tot = jnp.exp(total)                                 # [B,C,H]
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay[..., None, None] + by
+
+    inc_decay, inc_states = jax.lax.associative_scan(
+        combine, (decay_tot, states), axis=1
+    )
+    # state entering chunk c = init * prod_{<c} a + inclusive_states[c-1]
+    excl_decay = jnp.concatenate(
+        [jnp.ones_like(inc_decay[:, :1]), inc_decay[:, :-1]], axis=1
+    )
+    excl_states = jnp.concatenate(
+        [jnp.zeros_like(inc_states[:, :1]), inc_states[:, :-1]], axis=1
+    )
+    prev_states = (
+        init[:, None] * excl_decay[..., None, None] + excl_states
+    )                                                          # [B,C,H,P,N]
+    final = init * inc_decay[:, -1][..., None, None] + inc_states[:, -1]
+
+    # Off-diagonal contribution: y[q] += C[q] · (exp(seg[q]) * S_prev)
+    y_off = jnp.einsum(
+        "bcqhn,bcqh,bchpn->bcqhp", cc, jnp.exp(seg), prev_states
+    )
+
+    y = (y_diag + y_off).reshape(bsz, seqlen, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step_ref(
+    x: jax.Array,      # [B, H, P] one token
+    dt: jax.Array,     # [B, H]
+    a: jax.Array,      # [H]
+    b_vec: jax.Array,  # [B, G, N]
+    c_vec: jax.Array,  # [B, G, N]
+    state: jax.Array,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence: state' = exp(a dt) state + dt x B^T."""
+    h, g = x.shape[1], b_vec.shape[1]
+    rep = h // g
+    b_h = jnp.repeat(b_vec, rep, axis=1)   # [B, H, N]
+    c_h = jnp.repeat(c_vec, rep, axis=1)
+    decay = jnp.exp(a[None] * dt)          # [B, H]
+    state32 = state.astype(jnp.float32)
+    upd = jnp.einsum("bhp,bhn->bhpn", (x * dt[..., None]), b_h)
+    new_state = state32 * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_h)
+    return y.astype(x.dtype), new_state

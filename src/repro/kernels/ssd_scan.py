@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (arXiv:2405.21060).
+
+TPU-native layout of the state-space-duality algorithm: the sequence is cut
+into chunks of Q tokens; within a chunk the token-token interaction is a
+pair of MXU matmuls (quadratic only in Q); across chunks a [P, N] state
+carries in VMEM scratch.
+
+Grid: (batch, heads, chunks) with chunks innermost -- the recurrence is
+sequential per (batch, head), which maps exactly onto the persistent-scratch
+pattern (state re-initialized at chunk 0 from the optional initial state).
+B/C projections are shared across head groups; the index maps route head ->
+group without materializing the repeat.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+            y_ref, final_ref, state_ref, *,
+            chunk: int, num_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)   # [P, N]
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    a = a_ref[0]                                      # scalar decay rate
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+
+    log_decay = a * dt                                # [Q]
+    seg = jnp.cumsum(log_decay)                       # [Q]
+    total = seg[-1]
+    xdt = x * dt[:, None]                             # [Q, P]
+
+    # Intra-chunk: scores[q,t] = (C_q . B_t) * exp(seg_q - seg_t), t <= q.
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # [Q, Q]
+    rel = seg[:, None] - seg[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ti <= qi, jnp.exp(rel), 0.0)
+    y = jax.lax.dot_general(
+        scores * decay, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # [Q, P]
+
+    # Off-diagonal: y[q] += exp(seg_q) * C_q . S_in
+    s_in = state_ref[...]                             # [P, N]
+    y += jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        cm, s_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # State update: S_out = exp(total) S_in + sum_t exp(total-seg_t) B_t x_t
+    w = jnp.exp(total - seg)                          # [Q]
+    upd = jax.lax.dot_general(
+        xdt * w[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # [P, N]
+    state_ref[...] = jnp.exp(total) * s_in + upd
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _final():
+        final_ref[0, 0] = state_ref[...]
+
+
+def ssd_chunk_scan(
+    x, dt, a, b_mat, c_mat, *,
+    chunk_size: int = 64,
+    initial_state=None,
+    interpret: bool = False,
+):
+    """x: [B,L,H,P]; dt: [B,L,H]; a: [H]; b/c: [B,L,G,N].
+
+    Returns (y [B,L,H,P], final_state [B,H,P,N]) -- same contract as
+    ``ref.ssd_scan_ref``.
+    """
+    bsz, seqlen, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert seqlen % chunk_size == 0, "pad sequence to a chunk multiple"
+    nc = seqlen // chunk_size
+    rep = h // g
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    kernel = functools.partial(_kernel, chunk=chunk_size, num_chunks=nc)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk_size, 1, p),
+                         lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk_size, 1),
+                         lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk_size, 1, n),
+                         lambda ib, ih, ic, rep=rep: (ib, ic, ih // rep, 0)),
+            pl.BlockSpec((1, chunk_size, 1, n),
+                         lambda ib, ih, ic, rep=rep: (ib, ic, ih // rep, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk_size, 1, p),
+                         lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, seqlen, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a.astype(jnp.float32), b_mat, c_mat,
+      initial_state.astype(jnp.float32))
+    return y, final

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+Proves the distribution config is coherent without hardware: jit with
+explicit in/out shardings over the production mesh, ``.lower().compile()``
+must succeed, and the compiled artifact yields the roofline terms
+(EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --arch yi-9b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all            # every combo, both meshes
+  python -m repro.launch.dryrun --all --resume   # skip combos already done
+
+Skips (DESIGN.md §4): seamless-m4t-large-v2 x long_500k (encoder-decoder
+with no windowed encoder variant).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.launch.roofline import build_roofline
+from repro.launch.specs import lower_plan, make_plan
+from repro.models.config import INPUT_SHAPES
+
+SKIPS: set[tuple[str, str]] = {
+    ("seamless-m4t-large-v2", "long_500k"),
+}
+DEFAULT_OUT = "benchmarks/results/dryrun"
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    remat: str | None = "full",
+    fsdp: bool | None = None,
+    seq_shard: bool | None = None,
+    shard_kv_heads: bool = True,
+    seq_parallel_acts: bool = False,
+    grad_accum: int = 1,
+    moe_group_size: int = 0,
+    capacity_factor: float = 0.0,
+    kvc_int8: bool = False,
+    attn_tp: bool | None = None,
+    bf16_moments: bool = False,
+    verbose: bool = True,
+) -> dict:
+    """Lower + compile one (arch x shape x mesh) combo.
+
+    Two-part measurement (see launch/probe.py): the full-depth *scanned*
+    program is the deployable artifact and provides memory_analysis; tiny
+    unrolled probe variants provide exact per-layer flops/bytes/collective
+    costs (scan bodies are cost-counted once), combined linearly.
+    """
+    from repro.launch.probe import extract_metrics, probe_set, solve_linear
+    from repro.launch.roofline import (
+        Roofline, model_flops, streaming_attn_correction,
+    )
+
+    cfg = get_config(arch)
+    if moe_group_size:
+        cfg = cfg.replace(moe_group_size=moe_group_size)
+    if capacity_factor:
+        cfg = cfg.replace(capacity_factor=capacity_factor)
+    if kvc_int8:
+        cfg = cfg.replace(kvc_dtype="int8")
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = 512 if multi_pod else 256
+    rules = make_rules(mesh, cfg, shape, fsdp=fsdp, seq_shard=seq_shard,
+                       shard_kv_heads=shard_kv_heads,
+                       seq_parallel_acts=seq_parallel_acts, attn_tp=attn_tp)
+    opt = None
+    if bf16_moments:
+        from repro.training.optimizer import AdamWConfig
+        opt = AdamWConfig(moment_dtype="bfloat16")
+    t0 = time.perf_counter()
+    with mesh:
+        # 1) full-depth scanned program (the deployable one): must compile.
+        plan = make_plan(cfg, shape, rules, remat=remat, unroll=False,
+                         grad_accum=grad_accum, opt=opt)
+        lowered = lower_plan(plan)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        t_full = time.perf_counter() - t0
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] {plan.name}")
+            print(f"  memory_analysis: {mem}")
+
+        # 2) per-layer cost probes (tiny unrolled variants).
+        pset = probe_set(cfg)
+        measured = []
+        for overrides, _counts in pset.variants:
+            pcfg = cfg.replace(**overrides)
+            pplan = make_plan(pcfg, shape, rules, remat=remat, unroll=True,
+                              grad_accum=grad_accum, opt=opt)
+            pcompiled = lower_plan(pplan).compile()
+            measured.append(extract_metrics(pcompiled))
+        solved = solve_linear(pset, measured)
+        t_probe = time.perf_counter() - t0 - t_full
+        if verbose:
+            print(f"  cost (probed): flops={solved['flops']:.3e} "
+                  f"bytes={solved['bytes']:.3e} "
+                  f"coll={solved['collective_bytes']:.3e}")
+
+    corr = streaming_attn_correction(plan.cfg, shape, remat) / n_chips
+    roof = Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, step=plan.name,
+        flops_per_device=solved["flops"] + corr,
+        bytes_per_device=solved["bytes"],
+        collective_bytes=solved["collective_bytes"],
+        collectives={k[5:]: v for k, v in solved.items()
+                     if k.startswith("coll:")},
+        peak_memory_bytes=float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        ),
+        argument_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+        model_flops=model_flops(plan.cfg, shape),
+    )
+    rec = roof.to_dict()
+    rec.update(
+        full_compile_s=round(t_full, 1),
+        probe_compile_s=round(t_probe, 1),
+        remat=remat,
+        fsdp=rules.fsdp,
+        seq_shard=rules.seq_shard_cache,
+        shard_kv_heads=rules.shard_kv_heads,
+        seq_parallel_acts=rules.seq_parallel_acts,
+        grad_accum=grad_accum,
+        moe_group_size=moe_group_size or cfg.moe_group_size,
+        kvc_int8=kvc_int8,
+        attn_tp=rules.attn_tp,
+        gqa_grouped=os.environ.get("REPRO_GQA_GROUPED", "0") == "1",
+        status="ok",
+    )
+    if verbose:
+        print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"dominant={roof.dominant} "
+              f"useful={roof.useful_flops_ratio:.2f}")
+        print(f"  peak {roof.peak_memory_bytes/2**30:.2f} GiB/device "
+              f"(full {t_full:.0f}s probes {t_probe:.0f}s)")
+    return rec
+
+
+def _result_path(out_dir, arch, shape, mesh_name):
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS)
+    p.add_argument("--shape", choices=list(INPUT_SHAPES))
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--resume", action="store_true",
+                   help="skip combos whose result JSON already exists")
+    p.add_argument("--remat", default="full",
+                   choices=["none", "dots", "dots_no_batch", "full"])
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--seq-shard", action="store_true", default=None)
+    p.add_argument("--no-shard-kv", action="store_true")
+    p.add_argument("--seq-parallel", action="store_true")
+    p.add_argument("--grad-accum", type=int, default=1)
+    p.add_argument("--moe-group-size", type=int, default=0)
+    p.add_argument("--capacity-factor", type=float, default=0.0)
+    p.add_argument("--kvc-int8", action="store_true")
+    p.add_argument("--attn-tp", action="store_true", default=None)
+    p.add_argument("--bf16-moments", action="store_true")
+    p.add_argument("--out", default=DEFAULT_OUT)
+    p.add_argument("--tag", default="", help="suffix for result files")
+    args = p.parse_args(argv)
+
+    remat = None if args.remat == "none" else args.remat
+    os.makedirs(args.out, exist_ok=True)
+    assert len(jax.devices()) >= 512, "dry-run needs 512 host devices"
+
+    combos: list[tuple[str, str, bool]] = []
+    if args.all:
+        arch_list = [args.arch] if args.arch else ARCH_IDS
+        if "skymemory-tinyllama" in arch_list and not args.arch:
+            arch_list = [a for a in arch_list if a != "skymemory-tinyllama"]
+        for arch in arch_list:
+            for shape in INPUT_SHAPES:
+                if (arch, shape) in SKIPS:
+                    continue
+                combos.append((arch, shape, False))
+                combos.append((arch, shape, True))
+    else:
+        if not (args.arch and args.shape):
+            p.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = 0
+    for arch, shape, mp in combos:
+        mesh_name = ("2x16x16" if mp else "16x16") + (
+            f"__{args.tag}" if args.tag else "")
+        path = _result_path(args.out, arch, shape, mesh_name)
+        if args.resume and os.path.exists(path):
+            continue
+        try:
+            rec = run_one(
+                arch, shape, multi_pod=mp, remat=remat,
+                fsdp=False if args.no_fsdp else None,
+                seq_shard=args.seq_shard,
+                shard_kv_heads=not args.no_shard_kv,
+                seq_parallel_acts=args.seq_parallel,
+                grad_accum=args.grad_accum,
+                moe_group_size=args.moe_group_size,
+                capacity_factor=args.capacity_factor,
+                kvc_int8=args.kvc_int8,
+                attn_tp=args.attn_tp,
+                bf16_moments=args.bf16_moments,
+            )
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": f"error: {type(e).__name__}: {e}"}
+            failures += 1
+        rec["tag"] = args.tag
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

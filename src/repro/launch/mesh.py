@@ -1,0 +1,63 @@
+"""Production meshes: 16x16 single-pod (256 chips) / 2x16x16 multi-pod.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state -- the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import, and everything else sees the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import AxisRules
+from repro.models.config import InputShape, ModelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(
+    mesh,
+    cfg: ModelConfig,
+    shape: InputShape,
+    *,
+    fsdp: bool | None = None,
+    seq_shard: bool | None = None,
+    shard_kv_heads: bool = True,
+    seq_parallel_acts: bool = False,
+    attn_tp: bool | None = None,
+) -> AxisRules:
+    """Per-(arch, shape) axis rules (DESIGN.md §5).
+
+    * train/prefill: batch over (pod, data), TP over model, FSDP params.
+    * decode: batch over (pod, data); batch-1 long-context shards the KV
+      cache *sequence* over data instead -- the SkyMemory chunk striping.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+    if seq_shard is None:
+        seq_shard = shape.is_decode and shape.global_batch < dsize
+    if fsdp is None:
+        fsdp = True
+    # Decode stripes the cache sequence dim over the model axis (the
+    # SkyMemory chunk striping), so the attention computation runs
+    # sequence-parallel: attention weights keep all heads local by default
+    # (override attn_tp=True to TP the projections and gather the tiny q
+    # instead -- §Perf pair 3 iteration 4).
+    if attn_tp is None:
+        attn_tp = not shape.is_decode
+    return AxisRules(
+        mesh=mesh,
+        data_axes=data_axes,
+        model_axis="model",
+        shard_kv_heads=shard_kv_heads,
+        seq_shard_cache=seq_shard,
+        fsdp=fsdp,
+        attn_tp=attn_tp,
+        seq_parallel_acts=seq_parallel_acts,
+    )

@@ -1,0 +1,216 @@
+"""ShapeDtypeStruct input specs + step builders for every (arch x shape).
+
+No device allocation anywhere: specs feed ``jit(...).lower()`` in the
+dry-run, and the same builders drive the real train/serve launchers when
+actual devices exist.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import shape_variant
+from repro.distributed.sharding import (
+    AxisRules,
+    cache_specs,
+    param_specs,
+    use_rules,
+)
+from repro.models.config import InputShape, ModelConfig
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class StepPlan:
+    """A lowered-able step: fn(*args), arg specs, and shardings."""
+
+    name: str
+    fn: Callable
+    args: tuple            # ShapeDtypeStructs (pytrees)
+    in_shardings: Any
+    out_shardings: Any
+    model: Model
+    cfg: ModelConfig
+    donate_argnums: tuple = ()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Model-input ShapeDtypeStructs for one assigned input shape."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train" or shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            half = s // 2
+            return {
+                "tokens": _sds((b, half), jnp.int32),
+                "targets": _sds((b, half), jnp.int32),
+                "frames": _sds((b, half, cfg.d_model), dt),
+            }
+        if cfg.arch_type == "vlm":
+            s_text = s - cfg.num_image_tokens
+            return {
+                "tokens": _sds((b, s_text), jnp.int32),
+                "targets": _sds((b, s_text), jnp.int32),
+                "image_embeds": _sds((b, cfg.num_image_tokens, cfg.d_model), dt),
+            }
+        return {
+            "tokens": _sds((b, s), jnp.int32),
+            "targets": _sds((b, s), jnp.int32),
+        }
+    # decode: ONE new token over a cache of seq_len
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def _params_shardings(model: Model, rules: AxisRules):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, rules)
+    return shapes, jax.tree.map(
+        lambda sp: NamedSharding(rules.mesh, sp), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def make_plan(
+    cfg: ModelConfig,
+    shape: InputShape,
+    rules: AxisRules,
+    *,
+    remat: str | None = "dots",
+    opt: AdamWConfig | None = None,
+    unroll: bool = True,
+    grad_accum: int = 1,
+) -> StepPlan:
+    """Build the (train|prefill|serve) step for an (arch x shape) combo.
+
+    ``unroll=True`` (dry-run default) unrolls layer scans so XLA cost
+    analysis counts every layer -- scan bodies are otherwise costed once.
+    ``grad_accum``: split the global batch into microbatches with gradient
+    accumulation (train only) -- the activation-memory lever.
+    """
+    cfg = shape_variant(cfg, shape)
+    model = Model(cfg, unroll=unroll)
+    mesh = rules.mesh
+    repl = NamedSharding(mesh, P())
+    batch_sh = NamedSharding(mesh, P(rules.data))
+    pshapes, psh = _params_shardings(model, rules)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = opt or AdamWConfig()
+        oshapes = jax.eval_shape(
+            lambda q: init_opt_state(q, opt.moment_dtype), pshapes)
+        osh = {
+            "m": psh, "v": psh,
+            "step": repl,
+        }
+
+        def train_step(params, opt_state, batch):
+            with use_rules(rules):
+                if grad_accum <= 1:
+                    def loss_fn(p):
+                        return model.train_loss(p, batch, remat=remat)
+
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params)
+                else:
+                    # microbatched gradient accumulation
+                    def reshape(x):
+                        return x.reshape(
+                            (grad_accum, x.shape[0] // grad_accum)
+                            + x.shape[1:])
+
+                    micro = {k: reshape(v) for k, v in batch.items()}
+
+                    def body(acc, mb):
+                        (loss, metrics), g = jax.value_and_grad(
+                            lambda p: model.train_loss(p, mb, remat=remat),
+                            has_aux=True,
+                        )(params)
+                        acc = jax.tree.map(
+                            lambda a, b: a + b.astype(a.dtype) / grad_accum,
+                            acc, g)
+                        return acc, metrics
+
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    grads, ms = jax.lax.scan(
+                        body, zeros, micro, unroll=unroll or 1)
+                    metrics = jax.tree.map(lambda m: m[-1], ms)
+                params, opt_state, om = adamw_update(
+                    opt, params, grads, opt_state)
+            return params, opt_state, {**metrics, **om}
+
+        bsh = {k: batch_sh for k in specs}
+        return StepPlan(
+            name="train_step", fn=train_step,
+            args=(pshapes, oshapes, specs),
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, None),
+            model=model, cfg=cfg,
+            donate_argnums=(0, 1),      # params + optimizer state
+        )
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            with use_rules(rules):
+                logits, _, state = model.forward(
+                    params, batch["tokens"],
+                    image_embeds=batch.get("image_embeds"),
+                    frames=batch.get("frames"),
+                    collect_state=True,
+                    sliding_window=cfg.sliding_window or None,
+                )
+            return logits[:, -1:], state
+
+        bsh = {k: batch_sh for k in specs if k != "targets"}
+        specs_p = {k: v for k, v in specs.items() if k != "targets"}
+        return StepPlan(
+            name="prefill_step", fn=prefill_step,
+            args=(pshapes, specs_p),
+            in_shardings=(psh, bsh),
+            out_shardings=None,
+            model=model, cfg=cfg,
+        )
+
+    # decode
+    b, s = shape.global_batch, shape.seq_len
+    src_len = (s // 2) if cfg.is_encoder_decoder else None
+    cache_shapes = model.init_cache(b, s, specs_only=True, src_len=src_len)
+    cspecs = cache_specs(cache_shapes, rules, batch=b)
+    csh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    tok_sh = batch_sh if b >= rules.axis_size(rules.data_axes) else repl
+
+    def serve_step(params, cache, tokens, pos):
+        with use_rules(rules):
+            logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        return logits, new_cache
+
+    return StepPlan(
+        name="serve_step", fn=serve_step,
+        args=(pshapes, cache_shapes, specs["tokens"],
+              _sds((), jnp.int32)),
+        in_shardings=(psh, csh, tok_sh, repl),
+        out_shardings=(None, csh),
+        model=model, cfg=cfg,
+        donate_argnums=(1,),            # cache updates in place
+    )
+
+
+def lower_plan(plan: StepPlan):
+    jitted = jax.jit(
+        plan.fn,
+        in_shardings=plan.in_shardings,
+        out_shardings=plan.out_shardings,
+        donate_argnums=plan.donate_argnums,
+    )
+    return jitted.lower(*plan.args)

@@ -1,0 +1,155 @@
+"""GQA attention: prefill (flash/chunked) + decode (paged KV cache).
+
+The decode path consumes the block-paged KV cache -- the tensor SkyMemory
+blocks, chunks and stripes.  Sliding-window decode uses the same cache as a
+ring buffer (the ``long_500k`` variant for full-attention architectures).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import maybe_shard
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.rope import apply_rope
+
+PAGE_SIZE = 128  # KV-cache page (= the paper's 128-token block)
+KVC_INT8_SCALE = 1.0 / 32.0  # symmetric int8 KVC quantization step
+
+
+def _quant(x):
+    return jnp.clip(jnp.round(x / KVC_INT8_SCALE), -127, 127).astype(jnp.int8)
+
+
+def _dequant(x, dtype):
+    return (x.astype(jnp.float32) * KVC_INT8_SCALE).astype(dtype)
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype=dt),
+        "wo": dense_init(ks[3], (h * hd, d), dtype=dt),
+    }
+
+
+def _project_qkv(params, x, kv_x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    skv = kv_x.shape[1]
+    k = (kv_x @ params["wk"]).reshape(b, skv, hkv, hd)
+    v = (kv_x @ params["wv"]).reshape(b, skv, hkv, hd)
+    return q, k, v
+
+
+def attention_prefill(
+    params,
+    x,
+    cfg: ModelConfig,
+    *,
+    q_offset=0,
+    sliding_window: int | None = None,
+    kv_x=None,
+    causal: bool = True,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+):
+    """Full-sequence attention.  ``kv_cache=(k_prefix, v_prefix)`` implements
+    chunked prefill on top of a SkyMemory-restored prefix: fresh K/V are
+    appended after the cached prefix and queries attend across both."""
+    b, s, _ = x.shape
+    cross = kv_x is not None
+    kv_src = kv_x if cross else x
+    q, k, v = _project_qkv(params, x, kv_src, cfg)
+    if not cross:
+        q_pos = jnp.arange(s) + q_offset
+        k_pos = jnp.arange(k.shape[1]) + q_offset
+        q = apply_rope(q, q_pos, cfg.rope_theta, cfg.rotary_pct)
+        k = apply_rope(k, k_pos, cfg.rope_theta, cfg.rotary_pct)
+    if kv_cache is not None:
+        k = jnp.concatenate([kv_cache[0].astype(k.dtype), k], axis=1)
+        v = jnp.concatenate([kv_cache[1].astype(v.dtype), v], axis=1)
+    out = ops.flash_attention(
+        q, k, v,
+        causal=causal and not cross,
+        q_offset=(kv_cache[0].shape[1] if kv_cache is not None else 0)
+        if not cross else 0,
+        sliding_window=sliding_window,
+    )
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"], (k, v)
+
+
+def attention_decode(
+    params,
+    x,                     # [B, 1, d_model]
+    cfg: ModelConfig,
+    *,
+    k_cache,               # [B, S_cache, Hkv, hd]
+    v_cache,
+    pos,                   # scalar int32: number of tokens already cached
+    sliding_window: int | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+):
+    """One-token decode over the paged cache; returns (out, k', v').
+
+    With ``sliding_window`` the cache is a ring buffer of ``window`` slots
+    (sub-quadratic memory for long_500k); RoPE is applied at the *absolute*
+    position before writing, so relative phases stay correct after wrap.
+    """
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    if cross_kv is not None:
+        q = (x @ params["wq"]).reshape(b, 1, h, hd)[:, 0]
+        k, v = cross_kv
+        lengths = jnp.full((b,), k.shape[1], jnp.int32)
+        out = _paged(q, k, v, lengths)
+        return out.reshape(b, 1, h * hd) @ params["wo"], k_cache, v_cache
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # per-sequence
+    q, k_new, v_new = _project_qkv(params, x, x, cfg)
+    positions = pos[:, None]                              # [B,1] abs position
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta, cfg.rotary_pct)
+    # with TP attention projections + a model-striped cache, gather the tiny
+    # q/k/v here rather than letting SPMD gather the cache
+    q = maybe_shard(q, "decode_qkv")
+    k_new = maybe_shard(k_new, "decode_qkv")
+    v_new = maybe_shard(v_new, "decode_qkv")
+
+    s_cache = k_cache.shape[1]
+    slot = pos % s_cache if sliding_window else pos
+    # Masked one-hot write: elementwise on the (possibly sequence-sharded)
+    # cache, so SPMD keeps every shard local -- a scatter/DUS on a sharded
+    # seq dim would force a full cache all-gather.
+    onehot = (jnp.arange(s_cache, dtype=jnp.int32)[None, :]
+              == slot[:, None])[..., None, None]          # [B,S,1,1]
+    int8_kvc = k_cache.dtype == jnp.int8
+    if int8_kvc:  # quantized KVC (paper's 8-bit memory trade-off)
+        k_new, v_new = _quant(k_new), _quant(v_new)
+    k_cache = jnp.where(onehot, k_new.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(onehot, v_new.astype(v_cache.dtype), v_cache)
+    n_valid = jnp.minimum(pos + 1, s_cache) if sliding_window else pos + 1
+    if int8_kvc:
+        k_read = _dequant(k_cache, x.dtype)
+        v_read = _dequant(v_cache, x.dtype)
+    else:
+        k_read, v_read = k_cache, v_cache
+    out = _paged(q[:, 0], k_read, v_read, n_valid.astype(jnp.int32))
+    return out.reshape(b, 1, h * hd) @ params["wo"], k_cache, v_cache
+
+
+def _paged(q, k_cache, v_cache, lengths):
+    """View the contiguous cache as pages and run the paged-decode kernel."""
+    b, s, hkv, hd = k_cache.shape
+    page = PAGE_SIZE if s % PAGE_SIZE == 0 else s
+    kp = k_cache.reshape(b, s // page, page, hkv, hd)
+    vp = v_cache.reshape(b, s // page, page, hkv, hd)
+    return ops.paged_attention(q, kp, vp, lengths)

@@ -1,0 +1,101 @@
+"""Decode-state containers (the tensors SkyMemory blocks and stripes).
+
+Caches are plain dicts of arrays so they pjit/shard cleanly.  Constructors
+have a ``specs_only`` mode returning ShapeDtypeStructs for the dry-run
+(no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _make(shape, dtype, specs_only: bool):
+    if specs_only:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.num_layers) if cfg.is_attn_layer(i))
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring-buffer length: the sliding window if configured, else seq_len."""
+    if cfg.sliding_window and cfg.sliding_window < seq_len:
+        return cfg.sliding_window
+    return seq_len
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    seq_len: int,
+    *,
+    specs_only: bool = False,
+    src_len: int | None = None,
+):
+    """Decode cache for one model family.
+
+    dense/moe/vlm -> paged K/V; MLA -> latent; ssm -> fixed state;
+    hybrid -> ssm state + K/V for the shared-attention invocations;
+    audio (enc-dec) -> decoder self K/V + frozen cross K/V.
+    """
+    dt = jnp.dtype(cfg.kvc_dtype or cfg.dtype)
+    s = cache_len(cfg, seq_len)
+    cache: dict = {}
+
+    if cfg.use_mla:
+        la = cfg.num_layers
+        cache["mla"] = {
+            "ckv": _make((la, batch, s, cfg.kv_lora_rank), dt, specs_only),
+            "kr": _make((la, batch, s, cfg.qk_rope_head_dim), dt, specs_only),
+        }
+    elif cfg.arch_type in ("ssm", "hybrid"):
+        lm = cfg.num_layers
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        cache["ssm"] = {
+            "conv": _make((lm, batch, cfg.ssm_conv - 1, conv_dim),
+                          jnp.dtype(cfg.dtype), specs_only),
+            "state": _make(
+                (lm, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32, specs_only,
+            ),
+        }
+        if cfg.arch_type == "hybrid":
+            na = n_attn_layers(cfg)
+            cache["kv"] = {
+                "k": _make((na, batch, s, cfg.num_kv_heads, cfg.head_dim), dt,
+                           specs_only),
+                "v": _make((na, batch, s, cfg.num_kv_heads, cfg.head_dim), dt,
+                           specs_only),
+            }
+    else:
+        la = cfg.num_layers
+        cache["kv"] = {
+            "k": _make((la, batch, s, cfg.num_kv_heads, cfg.head_dim), dt,
+                       specs_only),
+            "v": _make((la, batch, s, cfg.num_kv_heads, cfg.head_dim), dt,
+                       specs_only),
+        }
+
+    if cfg.is_encoder_decoder:
+        ss = src_len if src_len is not None else s
+        la = cfg.num_layers
+        cache["cross"] = {
+            "k": _make((la, batch, ss, cfg.num_kv_heads, cfg.head_dim), dt,
+                       specs_only),
+            "v": _make((la, batch, ss, cfg.num_kv_heads, cfg.head_dim), dt,
+                       specs_only),
+        }
+    return cache
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, seq_len: int) -> int:
+    specs = init_cache(cfg, batch, seq_len, specs_only=True)
+    return sum(
+        int(jnp.prod(jnp.array(leaf.shape))) * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(specs)
+    )

@@ -1,0 +1,126 @@
+"""Shared building blocks: initializers, norms, MLPs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis_size: int | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (kept in fp32; cast at use)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, shape=None):
+    d = shape if shape is not None else cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(params, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + cfg.norm_eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_norm_gated(x, z, scale, eps: float = 1e-5):
+    """Mamba-2 gated RMSNorm: norm(x * silu(z)) * scale."""
+    x32 = (x * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wi_gate": dense_init(ks[0], (d, f), dtype=dt),
+            "wi_up": dense_init(ks[1], (d, f), dtype=dt),
+            "wo": dense_init(ks[2], (f, d), dtype=dt),
+        }
+    return {
+        "wi": dense_init(ks[0], (d, f), dtype=dt),
+        "wo": dense_init(ks[1], (f, d), dtype=dt),
+    }
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    elif cfg.mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ params["wi"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding.
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    p = {"tok": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                           in_axis_size=cfg.d_model, dtype=dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dtype=dt)
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return x @ params["tok"].T
+    return x @ params["unembed"]
+
+
+def cross_entropy_loss(logits, targets, mask=None, z_loss_coef: float = 0.0):
+    """Mean token cross-entropy in fp32 (+ optional logit z-loss).
+
+    The gold logit is picked with a one-hot contraction rather than
+    take_along_axis: with a vocab-sharded logits tensor the contraction
+    reduces over the sharded axis (a scalar-per-token all-reduce) instead
+    of forcing an all-gather of the full logits.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    if z_loss_coef:
+        nll = nll + z_loss_coef * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

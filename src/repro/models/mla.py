@@ -1,0 +1,142 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+MLA compresses K/V into a per-token latent ``c_kv`` (kv_lora_rank) plus a
+shared RoPE key (qk_rope_head_dim).  The decode cache stores only
+``c_kv || k_rope`` -- ~14x smaller than GQA K/V -- which is exactly the
+payload SkyMemory blocks and chunks for this architecture (DESIGN.md §4).
+
+Prefill expands the latent to full K/V (flash attention); decode uses the
+*absorbed* form: W_UK folds into the query and W_UV into the output, so
+attention runs directly against the latent cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_norm, apply_norm
+from repro.models.rope import apply_rope
+
+
+def init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, qr), dtype=dt),
+        "q_norm": init_norm(cfg, qr),
+        "wq_b": dense_init(ks[1], (qr, h * (dn + dr)), dtype=dt),
+        "wkv_a": dense_init(ks[2], (d, kr + dr), dtype=dt),
+        "kv_norm": init_norm(cfg, kr),
+        # stored per-head for the absorbed decode path:
+        "w_uk": dense_init(ks[3], (h, kr, dn), in_axis_size=kr, dtype=dt),
+        "w_uv": dense_init(ks[4], (h, kr, dv), in_axis_size=kr, dtype=dt),
+        "wo": dense_init(ks[5], (h * dv, d), dtype=dt),
+    }
+
+
+def _queries(params, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = apply_norm(params["q_norm"], x @ params["wq_a"], cfg) @ params["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(params, x, cfg: ModelConfig, positions):
+    kr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = x @ params["wkv_a"]
+    c_kv = apply_norm(params["kv_norm"], kv[..., :kr], cfg)
+    k_rope = kv[..., kr:][:, :, None, :]               # [B,S,1,dr]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_prefill(params, x, cfg: ModelConfig, *, q_offset=0,
+                sliding_window: int | None = None, latent_prefix=None):
+    """Returns (out, (c_kv, k_rope)) -- the latent pair is the KVC payload.
+
+    ``latent_prefix=(ckv, kr)``: a SkyMemory-restored latent prefix; fresh
+    latents are appended and queries attend across both (chunked prefill).
+    The returned latents cover prefix + fresh.
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.arange(s) + q_offset
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_kv, k_rope = _latent(params, x, cfg, positions)
+    if latent_prefix is not None:
+        c_kv = jnp.concatenate(
+            [latent_prefix[0].astype(c_kv.dtype), c_kv], axis=1)
+        k_rope = jnp.concatenate(
+            [latent_prefix[1].astype(k_rope.dtype), k_rope], axis=1)
+    skv = c_kv.shape[1]
+
+    # Expand latent to full K/V for the flash path.
+    k_nope = jnp.einsum("bsr,hrd->bshd", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,hrd->bshd", c_kv, params["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, skv, h, dr))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = ops.flash_attention(
+        q, k, v, causal=True, q_offset=skv - s,
+        sliding_window=sliding_window,
+        softmax_scale=(dn + dr) ** -0.5,
+    )
+    out = out.reshape(b, s, h * dv)
+    return out @ params["wo"], (c_kv, k_rope)
+
+
+def mla_decode(
+    params,
+    x,                 # [B, 1, d_model]
+    cfg: ModelConfig,
+    *,
+    ckv_cache,         # [B, S_cache, kv_lora_rank]
+    krope_cache,       # [B, S_cache, qk_rope_head_dim]
+    pos,
+    sliding_window: int | None = None,
+):
+    """Absorbed-MLA decode against the latent cache (no K/V expansion)."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_new, kr_new = _latent(params, x, cfg, positions)
+
+    s_cache = ckv_cache.shape[1]
+    slot = pos % s_cache if sliding_window else pos
+    # masked one-hot write (shard-local on a sequence-sharded cache)
+    onehot = (jnp.arange(s_cache, dtype=jnp.int32)[None, :]
+              == slot[:, None])[..., None]                 # [B,S,1]
+    ckv_cache = jnp.where(onehot, c_new.astype(ckv_cache.dtype), ckv_cache)
+    krope_cache = jnp.where(onehot, kr_new.astype(krope_cache.dtype),
+                            krope_cache)
+    n_valid = jnp.minimum(pos + 1, s_cache) if sliding_window else pos + 1
+
+    # Absorb W_UK into the query: q_abs[h] = q_nope[h] @ W_UK[h]^T.
+    q_abs = jnp.einsum("bhd,hrd->bhr", q_nope[:, 0], params["w_uk"])
+    scores = jnp.einsum("bhr,bsr->bhs", q_abs, ckv_cache.astype(q_abs.dtype))
+    scores += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0],
+                         krope_cache.astype(q_rope.dtype))
+    scores = scores.astype(jnp.float32) * (dn + dr) ** -0.5
+    valid = jnp.arange(s_cache)[None, None, :] < n_valid[:, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache.astype(x.dtype))
+    out = jnp.einsum("bhr,hrd->bhd", ctx, params["w_uv"])
+    out = out.reshape(b, 1, h * cfg.v_head_dim)
+    return out @ params["wo"], ckv_cache, krope_cache

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts with capacity-based dispatch (shardable dense einsums).
+
+Top-k routing with per-group capacity: tokens are processed in fixed groups;
+each expert accepts at most C = ceil(k * group / E * capacity_factor) tokens
+per group and overflow tokens fall back to the residual path (standard
+"dropping" MoE, MaxText-style).  Dispatch/combine are one-hot einsums, so
+XLA shards them cleanly: experts ride the ``model`` mesh axis (expert
+parallelism), groups ride ``data``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import maybe_shard
+
+# "all": constrain dispatch + expert tensors; "io": expert tensors only
+# (skips resharding the big one-hot dispatch tensor); "none": no constraints.
+_MOE_SHARD_MODE = os.environ.get("REPRO_MOE_SHARD", "all")
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def moe_capacity(cfg: ModelConfig, group: int) -> int:
+    c = int(group * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(4, -(-c // 4) * 4)  # >=4, rounded up to a multiple of 4
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "wi_gate": dense_init(ks[1], (e, d, f), in_axis_size=d, dtype=dt),
+        "wi_up": dense_init(ks[2], (e, d, f), in_axis_size=d, dtype=dt),
+        "wo": dense_init(ks[3], (e, f, d), in_axis_size=f, dtype=dt),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.expert_d_ff * cfg.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi_gate": dense_init(kk[0], (d, fs), dtype=dt),
+            "wi_up": dense_init(kk[1], (d, fs), dtype=dt),
+            "wo": dense_init(kk[2], (fs, d), dtype=dt),
+        }
+    return p
+
+
+def moe_forward(params, x, cfg: ModelConfig):
+    """x: [B, S, D] -> (y, aux_loss).  Works for S=1 decode too."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    g = min(cfg.moe_group_size, t)
+    pad = (-t) % g
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    ng = tokens.shape[0] // g
+    xt = tokens.reshape(ng, g, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])          # [G,g,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                        # [G,g,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # token->expert weight matrix and membership mask
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)          # [G,g,k,E]
+    combine = jnp.einsum("gtke,gtk->gte", onehot, top_p)          # [G,g,E]
+    member = onehot.sum(2)                                        # [G,g,E] 0/1
+
+    # capacity assignment: position of each token within its expert's buffer
+    cap = moe_capacity(cfg, g)
+    position = jnp.cumsum(member, axis=1) - 1.0                   # [G,g,E]
+    keep = (position < cap) & (member > 0)
+    disp = jax.nn.one_hot(position.astype(jnp.int32), cap,
+                          dtype=x.dtype) * keep[..., None]        # [G,g,E,C]
+    if _MOE_SHARD_MODE == "all":
+        disp = maybe_shard(disp, "moe_dispatch")
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xt)            # [G,E,C,D]
+    if _MOE_SHARD_MODE != "none":
+        expert_in = maybe_shard(expert_in, "moe_expert")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["wi_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, params["wi_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"])    # [G,E,C,D]
+    if _MOE_SHARD_MODE != "none":
+        expert_out = maybe_shard(expert_out, "moe_expert")
+
+    y = jnp.einsum("gtec,gte,gecd->gtd", disp,
+                   combine.astype(x.dtype), expert_out)           # [G,g,D]
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:t]
+    y = y.reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        sp = params["shared"]
+        hs = jax.nn.silu(x @ sp["wi_gate"]) * (x @ sp["wi_up"])
+        y = y + hs @ sp["wo"]
+
+    # Switch-style load-balance aux loss + router z-loss.
+    frac_tokens = jnp.mean(member, axis=1)                        # [G,E]
+    frac_probs = jnp.mean(probs, axis=1)                          # [G,E]
+    balance = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = cfg.router_aux_coef * balance + 1e-3 * z
+    return y, aux

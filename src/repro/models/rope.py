@@ -1,0 +1,30 @@
+"""Rotary position embeddings with partial-rotary support (stablelm)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_pct: float = 1.0):
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, theta: float, rotary_pct: float = 1.0):
+    """x: [B, S, H, D]; positions: [S] or [B, S] absolute positions."""
+    d = x.shape[-1]
+    inv, rot_dim = rope_freqs(d, theta, rotary_pct)
+    if rot_dim == 0:
+        return x
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    angles = pos[..., None] * inv[None, None, :]        # [B, S, rot/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated, xp], axis=-1).astype(x.dtype)

@@ -1,0 +1,165 @@
+"""Mamba-2 block (SSD / state-space duality, arXiv:2405.21060).
+
+Prefill runs the chunked SSD scan (Pallas kernel on TPU, jnp oracle on CPU);
+decode is the O(1)-per-token state recurrence.  The decode state
+(conv_state, ssm_state) is a *fixed-size* snapshot -- for SSM architectures
+this snapshot is the "KV cache block" SkyMemory stores (DESIGN.md §4).
+
+Projections are kept as separate weights (wz/wx/wb/wc/wdt instead of one
+fused in_proj) so the tensor-parallel axis cuts clean head boundaries:
+wz/wx shard the inner dim over ``model``; the small B/C/dt projections stay
+replicated (they are shared across heads within a group anyway).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm_gated
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    return di, g, n, h, p
+
+
+def init_ssd(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, g, n, h, p = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    dt_min, dt_max = 1e-3, 0.1
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[8], (h,)) * (jnp.log(dt_max) - jnp.log(dt_min))
+        + jnp.log(dt_min)
+    )
+    return {
+        "wz": dense_init(ks[0], (d, di), dtype=dt),
+        "wx": dense_init(ks[1], (d, di), dtype=dt),
+        "wb": dense_init(ks[2], (d, g * n), dtype=dt),
+        "wc": dense_init(ks[3], (d, g * n), dtype=dt),
+        "wdt": dense_init(ks[4], (d, h), dtype=dt),
+        "conv_x_w": dense_init(ks[5], (cfg.ssm_conv, di),
+                               in_axis_size=cfg.ssm_conv, dtype=dt),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc_w": dense_init(ks[6], (cfg.ssm_conv, 2 * g * n),
+                                in_axis_size=cfg.ssm_conv, dtype=dt),
+        "conv_bc_b": jnp.zeros((2 * g * n,), dt),
+        "a_log": jnp.log(jax.random.uniform(ks[9], (h,), minval=1.0, maxval=16.0)),
+        "dt_bias": dt_init + jnp.log(-jnp.expm1(-dt_init)),  # inv softplus
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[7], (di, d), dtype=dt),
+    }
+
+
+def _causal_conv(u, w, b, seqlen):
+    """Depthwise causal conv, unrolled over the (small) kernel width."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(up[:, j : j + seqlen] * w[j] for j in range(k))
+    return out + b
+
+
+def ssd_prefill(params, x, cfg: ModelConfig, *, state=None):
+    """x: [B, L, D] -> (out, (conv_state, ssm_state)).
+
+    ``state``: optional {"conv": [B,K-1,di+2gn], "state": [B,H,P,N]} restored
+    from a SkyMemory snapshot -- resumes mid-sequence without rescanning the
+    cached prefix.
+    """
+    bsz, seqlen, _ = x.shape
+    di, g, n, h, p = _dims(cfg)
+    z = x @ params["wz"]
+    xin = x @ params["wx"]
+    bc = jnp.concatenate([x @ params["wb"], x @ params["wc"]], axis=-1)
+    dt = x @ params["wdt"]
+
+    conv_in_x, conv_in_bc = xin, bc
+    ssm_state0 = None
+    if state is not None:
+        tail = state["conv"]  # [B, K-1, di+2gn]
+        ssm_state0 = state["state"]
+        conv_in_x = jnp.concatenate([tail[..., :di].astype(xin.dtype), xin], 1)
+        conv_in_bc = jnp.concatenate([tail[..., di:].astype(bc.dtype), bc], 1)
+        cx = _causal_conv(conv_in_x, params["conv_x_w"], params["conv_x_b"],
+                          conv_in_x.shape[1])[:, tail.shape[1]:]
+        cbc = _causal_conv(conv_in_bc, params["conv_bc_w"], params["conv_bc_b"],
+                           conv_in_bc.shape[1])[:, tail.shape[1]:]
+    else:
+        cx = _causal_conv(xin, params["conv_x_w"], params["conv_x_b"], seqlen)
+        cbc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"], seqlen)
+    cx = jax.nn.silu(cx)
+    cbc = jax.nn.silu(cbc)
+
+    xh = cx.reshape(bsz, seqlen, h, p)
+    b_mat = cbc[..., : g * n].reshape(bsz, seqlen, g, n)
+    c_mat = cbc[..., g * n :].reshape(bsz, seqlen, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    chunk = min(cfg.ssm_chunk, seqlen)
+    pad = (-seqlen) % chunk
+    if pad:
+        # zero-pad to a chunk multiple; dt=0 on padded steps keeps the
+        # state recurrence exact (decay exp(0)=1, update 0).
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, ssm_state = ops.ssd_scan(
+        xh, dt, -jnp.exp(params["a_log"]), b_mat, c_mat,
+        chunk_size=chunk, initial_state=ssm_state0,
+    )
+    if pad:
+        y = y[:, :seqlen]
+        xh = xh[:, :seqlen]
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, seqlen, di)
+    y = rms_norm_gated(y, z, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+
+    # pre-conv tails for decode resumption (= the cacheable snapshot)
+    k1 = cfg.ssm_conv - 1
+    conv_state = jnp.concatenate([xin[:, -k1:], bc[:, -k1:]], axis=-1)
+    return out, {"conv": conv_state, "state": ssm_state}
+
+
+def ssd_decode(params, x, cfg: ModelConfig, *, conv_state, ssm_state):
+    """x: [B, 1, D]; O(1) recurrence. Returns (out, conv_state, ssm_state)."""
+    bsz = x.shape[0]
+    di, g, n, h, p = _dims(cfg)
+    xt = x[:, 0]
+    z = xt @ params["wz"]
+    xin = xt @ params["wx"]
+    bc = jnp.concatenate([xt @ params["wb"], xt @ params["wc"]], axis=-1)
+    dt = xt @ params["wdt"]
+
+    new_in = jnp.concatenate([xin, bc], axis=-1)                 # [B, C]
+    window = jnp.concatenate(
+        [conv_state.astype(new_in.dtype), new_in[:, None]], axis=1
+    )                                                            # [B, K, C]
+    wx = window[..., :di]
+    wbc = window[..., di:]
+    cx = jnp.einsum("bkc,kc->bc", wx, params["conv_x_w"]) + params["conv_x_b"]
+    cbc = jnp.einsum("bkc,kc->bc", wbc, params["conv_bc_w"]) + params["conv_bc_b"]
+    cx = jax.nn.silu(cx)
+    cbc = jax.nn.silu(cbc)
+    new_conv_state = window[:, 1:]
+
+    xh = cx.reshape(bsz, h, p)
+    bv = cbc[:, : g * n].reshape(bsz, g, n)
+    cv = cbc[:, g * n :].reshape(bsz, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+
+    y, new_ssm = ops.ssd_decode_step(
+        xh, dt, -jnp.exp(params["a_log"]), bv, cv, ssm_state
+    )
+    y = y + params["d_skip"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, di)
+    y = rms_norm_gated(y, z, params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    return out, new_conv_state, new_ssm

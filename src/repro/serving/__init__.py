@@ -1,0 +1,16 @@
+from repro.serving.engine import Engine, EngineStats
+from repro.serving.request import GenerationResult, Request
+from repro.serving.sampler import SamplingParams, sample
+from repro.serving.skycache import SkyKVCAdapter
+from repro.serving.tokenizer import ByteTokenizer
+
+__all__ = [
+    "Engine",
+    "EngineStats",
+    "GenerationResult",
+    "Request",
+    "SamplingParams",
+    "sample",
+    "SkyKVCAdapter",
+    "ByteTokenizer",
+]

@@ -1,0 +1,196 @@
+"""Serving engine: batched generation with a SkyMemory prefix cache.
+
+Per request: tokenize -> SkyMemory longest-prefix lookup (radix index +
+constellation fetch) -> restore the block state -> prefill only the
+uncached suffix -> batched decode.  New full blocks are written back to the
+constellation (Set KVC), so repeated prompts/contexts hit more blocks --
+the paper's §5 testbed loop, with the LEO cache simulated in-process.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protocol import ConstellationKVC, KVCManager
+from repro.models.model import Model
+from repro.serving.request import GenerationResult, Request
+from repro.serving.sampler import SamplingParams, sample
+from repro.serving.skycache import SkyKVCAdapter
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0
+    cached_tokens: int = 0
+    prefilled_tokens: int = 0
+    decoded_tokens: int = 0
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+
+
+@dataclass
+class _Seq:
+    request: Request
+    tokens: list[int]
+    cached: int
+    state: dict
+    last_logits: jnp.ndarray  # [V] logits at the final prompt position
+    out_ids: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        kvc: ConstellationKVC | None = None,
+        block_size: int = 128,
+        max_seq_len: int = 512,
+        max_batch: int = 8,
+        write_back: bool = True,
+        seed: int = 0,
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.tokenizer = ByteTokenizer(self.cfg.vocab_size)
+        self.max_seq_len = max_seq_len
+        self.max_batch = max_batch
+        self.write_back = write_back
+        self.block_size = block_size
+        self.stats = EngineStats()
+        self._key = jax.random.PRNGKey(seed)
+        self.adapter = SkyKVCAdapter(model, params)
+        self.manager: KVCManager | None = None
+        if kvc is not None:
+            self.manager = KVCManager(
+                self.tokenizer.encode, self.adapter.kvc_fn, kvc,
+                block_size=block_size,
+            )
+        self._decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------------
+    def generate(self, requests: list[Request]) -> list[GenerationResult]:
+        results: list[GenerationResult] = []
+        for lo in range(0, len(requests), self.max_batch):
+            results.extend(self._run_batch(requests[lo : lo + self.max_batch]))
+        return results
+
+    # ------------------------------------------------------------------
+    def _prefill_one(self, req: Request) -> _Seq:
+        t0 = time.perf_counter()
+        tokens = self.tokenizer.encode(req.prompt)[: self.max_seq_len - 64]
+        cached = 0
+        prefix_state = None
+        if self.manager is not None:
+            # token-level lookup: coverage matches the (truncated) sequence
+            # this engine will actually run
+            payload, cached = self.manager.get_cache_tokens(tokens)
+            if payload is not None:
+                prefix_state = self.adapter.payload_to_state(payload)
+        toks = jnp.asarray(tokens, jnp.int32)[None]
+        if cached >= len(tokens):
+            # whole prompt cached: replay the final token so the decode loop
+            # has a starting distribution
+            cached = len(tokens) - 1
+        if cached:
+            lg, _, state = self.model.forward(
+                self.params, toks[:, cached:], q_offset=cached,
+                prefix_state=prefix_state, collect_state=True,
+            )
+        else:
+            lg, _, state = self.model.forward(
+                self.params, toks, collect_state=True
+            )
+        self.stats.prefill_time_s += time.perf_counter() - t0
+        self.stats.cached_tokens += cached
+        self.stats.prefilled_tokens += len(tokens) - cached
+        if self.write_back and self.manager is not None:
+            self.manager.add_blocks_tokens(tokens)
+        return _Seq(request=req, tokens=tokens, cached=cached, state=state,
+                    last_logits=lg[0, -1])
+
+    def _stack_caches(self, seqs: list[_Seq]):
+        cache = self.model.init_cache(len(seqs), self.max_seq_len)
+        for i, s in enumerate(seqs):
+            n = len(s.tokens)
+            st = s.state
+            if "kv" in st and "kv" in cache:
+                cache["kv"]["k"] = cache["kv"]["k"].at[:, i, :n].set(
+                    st["kv"]["k"][:, 0, :n])
+                cache["kv"]["v"] = cache["kv"]["v"].at[:, i, :n].set(
+                    st["kv"]["v"][:, 0, :n])
+            if "mla" in st:
+                cache["mla"]["ckv"] = cache["mla"]["ckv"].at[:, i, :n].set(
+                    st["mla"]["ckv"][:, 0, :n])
+                cache["mla"]["kr"] = cache["mla"]["kr"].at[:, i, :n].set(
+                    st["mla"]["kr"][:, 0, :n])
+            if "ssm" in st:
+                cache["ssm"]["conv"] = cache["ssm"]["conv"].at[:, i].set(
+                    st["ssm"]["conv"][:, 0])
+                cache["ssm"]["state"] = cache["ssm"]["state"].at[:, i].set(
+                    st["ssm"]["state"][:, 0].astype(cache["ssm"]["state"].dtype))
+        return cache
+
+    def _run_batch(self, requests: list[Request]) -> list[GenerationResult]:
+        t_start = time.perf_counter()
+        seqs = [self._prefill_one(r) for r in requests]
+        cache = self._stack_caches(seqs)
+        b = len(seqs)
+        pos = jnp.asarray([len(s.tokens) for s in seqs], jnp.int32)
+
+        # first token from each sequence's prefill logits
+        logits = jnp.stack([s.last_logits for s in seqs])
+
+        max_new = max(s.request.sampling.max_new_tokens for s in seqs)
+        t_dec = time.perf_counter()
+        for _step in range(max_new):
+            self._key, k = jax.random.split(self._key)
+            nxt = _sample_per_seq(logits, k, seqs)
+            for i, s in enumerate(seqs):
+                if s.done:
+                    continue
+                tid = int(nxt[i])
+                s.out_ids.append(tid)
+                if (tid == self.tokenizer.eos_id
+                        or len(s.out_ids) >= s.request.sampling.max_new_tokens
+                        or len(s.tokens) + len(s.out_ids) >= self.max_seq_len):
+                    s.done = True
+            self.stats.decoded_tokens += sum(0 if s.done else 1 for s in seqs)
+            if all(s.done for s in seqs):
+                break
+            lg, cache = self._decode(self.params, cache, nxt[:, None], pos)
+            logits = lg[:, 0]
+            pos = pos + 1
+        self.stats.decode_time_s += time.perf_counter() - t_dec
+
+        out = []
+        wall = time.perf_counter() - t_start
+        for s in seqs:
+            self.stats.requests += 1
+            out.append(GenerationResult(
+                request_id=s.request.request_id,
+                prompt=s.request.prompt,
+                text=self.tokenizer.decode(s.out_ids),
+                token_ids=s.out_ids,
+                prompt_tokens=len(s.tokens),
+                cached_tokens=s.cached,
+                prefill_tokens=len(s.tokens) - s.cached,
+                wall_time_s=wall,
+            ))
+        return out
+
+
+def _sample_per_seq(logits, key, seqs) -> jnp.ndarray:
+    keys = jax.random.split(key, len(seqs))
+    out = []
+    for i, s in enumerate(seqs):
+        out.append(sample(logits[i : i + 1], keys[i], s.request.sampling)[0])
+    return jnp.stack(out)

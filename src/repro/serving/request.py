@@ -1,0 +1,28 @@
+"""Serving request/response types."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from repro.serving.sampler import SamplingParams
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: str
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    request_id: int = field(default_factory=lambda: next(_ids))
+
+
+@dataclass
+class GenerationResult:
+    request_id: int
+    prompt: str
+    text: str
+    token_ids: list[int]
+    prompt_tokens: int
+    cached_tokens: int          # tokens restored from SkyMemory (prefix hit)
+    prefill_tokens: int         # tokens actually prefilled
+    wall_time_s: float = 0.0

@@ -1,0 +1,113 @@
+"""Adapter between model decode state and SkyMemory KVC payloads.
+
+The protocol (core/) moves opaque bytes; this adapter defines what those
+bytes are per architecture family (DESIGN.md §4):
+
+* dense/vlm/moe : per-layer K/V covering the cached prefix (cumulative, as
+                  the paper's Get step 7 retrieves a single block whose
+                  payload reconstructs the full prefix KVC);
+* MLA           : compressed latent (c_kv, k_rope) -- ~14x smaller blocks;
+* ssm/hybrid    : fixed-size (conv_state, ssm_state) snapshot at the block
+                  boundary (+ shared-attn K/V for hybrids).
+
+``kvc_fn`` plugs into ``core.protocol.KVCManager``: it computes one block's
+payload by resuming from the previous block's payload -- never recomputing
+the already-cached prefix (the compute saving the paper measures).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunking import arrays_to_bytes, bytes_to_arrays
+from repro.models.model import Model
+
+
+class SkyKVCAdapter:
+    def __init__(self, model: Model, params):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+
+    # -- state <-> payload ------------------------------------------------
+    def state_to_payload(self, state: dict, n_tokens: int) -> bytes:
+        """Serialize the decode state for the first ``n_tokens`` positions
+        (state arrays carry a batch dim of 1, dropped in the payload)."""
+        cfg = self.cfg
+        arrs: list[np.ndarray] = []
+        if "ssm" in state:
+            arrs.append(np.asarray(state["ssm"]["conv"][:, 0]))
+            arrs.append(np.asarray(state["ssm"]["state"][:, 0]))
+        if "mla" in state:
+            arrs.append(np.asarray(state["mla"]["ckv"][:, 0, :n_tokens]))
+            arrs.append(np.asarray(state["mla"]["kr"][:, 0, :n_tokens]))
+        if "kv" in state:
+            arrs.append(np.asarray(state["kv"]["k"][:, 0, :n_tokens]))
+            arrs.append(np.asarray(state["kv"]["v"][:, 0, :n_tokens]))
+        return arrays_to_bytes(arrs)
+
+    def payload_to_state(self, payload: bytes) -> dict:
+        cfg = self.cfg
+        arrs = bytes_to_arrays(payload)
+        state: dict = {}
+        i = 0
+        if cfg.arch_type in ("ssm", "hybrid"):
+            state["ssm"] = {
+                "conv": jnp.asarray(arrs[i])[:, None],
+                "state": jnp.asarray(arrs[i + 1])[:, None],
+            }
+            i += 2
+        if cfg.use_mla:
+            state["mla"] = {
+                "ckv": jnp.asarray(arrs[i])[:, None],
+                "kr": jnp.asarray(arrs[i + 1])[:, None],
+            }
+            i += 2
+        if i < len(arrs):
+            state["kv"] = {
+                "k": jnp.asarray(arrs[i])[:, None],
+                "v": jnp.asarray(arrs[i + 1])[:, None],
+            }
+        return state
+
+    # -- the KVCManager hook ----------------------------------------------
+    def kvc_fn(self, tokens: Sequence[int], past: bytes | None,
+               past_len: int) -> bytes:
+        """Payload for the block ending at len(tokens), resuming from
+        ``past`` (the payload covering the first ``past_len`` tokens)."""
+        toks = jnp.asarray(list(tokens), jnp.int32)[None]
+        if past is None or past_len == 0:
+            _, _, state = self.model.forward(
+                self.params, toks, collect_state=True
+            )
+        else:
+            prefix = self.payload_to_state(past)
+            _, _, state = self.model.forward(
+                self.params, toks[:, past_len:],
+                q_offset=past_len, prefix_state=prefix, collect_state=True,
+            )
+            state = _concat_prefix(self.cfg, prefix, state, past_len)
+        return self.state_to_payload(state, len(tokens))
+
+
+def _concat_prefix(cfg, prefix: dict, state: dict, past_len: int) -> dict:
+    """Stitch prefix K/V back in front of the freshly-computed suffix state.
+
+    For dense families ``forward`` already returns K/V including the prefix
+    (the prefix K/V were concatenated inside attention); for SSM the state
+    is cumulative by construction; so this is only needed for hybrids' KV
+    when the attention path did not include the prefix -- handled uniformly
+    by checking lengths.
+    """
+    out = dict(state)
+    if "kv" in state and "kv" in prefix:
+        k = state["kv"]["k"]
+        if k.shape[2] < past_len:  # suffix-only: prepend prefix
+            out["kv"] = {
+                "k": jnp.concatenate([prefix["kv"]["k"], k], axis=2),
+                "v": jnp.concatenate([prefix["kv"]["v"], state["kv"]["v"]],
+                                     axis=2),
+            }
+    return out

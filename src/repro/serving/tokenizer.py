@@ -1,0 +1,34 @@
+"""Byte-level tokenizer (self-contained; no external vocab files).
+
+Token ids: 0=pad, 1=bos, 2=eos, 3..258 = raw bytes.  Vocabularies smaller
+than 259 wrap bytes modulo the available range (used only by reduced smoke
+configs); larger vocabularies simply leave the tail unused -- the cache
+protocol and engine only need a deterministic, prefix-stable mapping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PAD_ID, BOS_ID, EOS_ID = 0, 1, 2
+_OFFSET = 3
+
+
+@dataclass(frozen=True)
+class ByteTokenizer:
+    vocab_size: int
+    add_bos: bool = True
+
+    def encode(self, text: str) -> list[int]:
+        span = max(self.vocab_size - _OFFSET, 1)
+        ids = [_OFFSET + (b % span) for b in text.encode("utf-8")]
+        return ([BOS_ID] if self.add_bos else []) + ids
+
+    def decode(self, ids: list[int]) -> str:
+        bs = bytes(
+            (i - _OFFSET) % 256 for i in ids if i >= _OFFSET
+        )
+        return bs.decode("utf-8", errors="replace")
+
+    @property
+    def eos_id(self) -> int:
+        return EOS_ID

@@ -1,0 +1,27 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, SyntheticLM, TextFileLM, make_dataset
+from repro.training.loop import TrainConfig, make_train_step, train
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    lr_at,
+)
+
+__all__ = [
+    "load_checkpoint",
+    "save_checkpoint",
+    "DataConfig",
+    "SyntheticLM",
+    "TextFileLM",
+    "make_dataset",
+    "TrainConfig",
+    "make_train_step",
+    "train",
+    "AdamWConfig",
+    "adamw_update",
+    "global_norm",
+    "init_opt_state",
+    "lr_at",
+]

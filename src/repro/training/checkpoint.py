@@ -1,0 +1,55 @@
+"""Checkpointing: pytree <-> .npz with path-encoded keys (no deps)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, *, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, **(metadata or {})}, f)
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray]):
+    def fill(path, leaf):
+        key = "/".join(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        arr = flat[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        return jnp.asarray(arr, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(fill, template)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    flat = dict(np.load(os.path.join(path, "params.npz")))
+    params = _unflatten_into(params_template, flat)
+    opt_state = None
+    opt_file = os.path.join(path, "opt_state.npz")
+    if opt_template is not None and os.path.exists(opt_file):
+        opt_state = _unflatten_into(opt_template, dict(np.load(opt_file)))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt_state, meta

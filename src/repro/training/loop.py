@@ -1,0 +1,108 @@
+"""pjit training loop."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    AxisRules,
+    param_specs,
+    use_rules,
+)
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainConfig:
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    remat: str | None = None
+    log_every: int = 10
+    zero1: bool = False      # shard optimizer moments over data (beyond-paper)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    rules: AxisRules | None = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics),
+    optionally pjit'd over the rules' mesh."""
+
+    def step(params, opt_state, batch):
+        with use_rules(rules):
+            def loss_fn(p):
+                loss, metrics = model.train_loss(p, batch, remat=tcfg.remat)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params)
+            params, opt_state, opt_metrics = adamw_update(
+                tcfg.opt, params, grads, opt_state
+            )
+            metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    if rules is None:
+        return jax.jit(step)
+
+    mesh = rules.mesh
+    pspecs = param_specs(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0)), rules
+    )
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda s: isinstance(s, P))
+    # optimizer moments follow the params (or data-sharded under zero1)
+    def moment_spec(s):
+        if tcfg.zero1 and s == P():
+            return NamedSharding(mesh, P(rules.data))
+        return NamedSharding(mesh, s)
+    osh = {
+        "m": jax.tree.map(moment_spec, pspecs,
+                          is_leaf=lambda s: isinstance(s, P)),
+        "v": jax.tree.map(moment_spec, pspecs,
+                          is_leaf=lambda s: isinstance(s, P)),
+        "step": NamedSharding(mesh, P()),
+    }
+    bsh = NamedSharding(mesh, P(rules.data))
+    batch_shardings = {
+        "tokens": bsh, "targets": bsh,
+        "image_embeds": bsh, "frames": bsh,
+    }
+    return jax.jit(
+        step,
+        in_shardings=(psh, osh, None),
+        out_shardings=(psh, osh, None),
+    )
+
+
+def train(
+    model: Model,
+    dataset,
+    tcfg: TrainConfig,
+    *,
+    num_steps: int,
+    seed: int = 0,
+    rules: AxisRules | None = None,
+    log_fn: Callable[[int, dict], None] | None = None,
+):
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params)
+    step_fn = make_train_step(model, tcfg, rules)
+    it = dataset.batches()
+    history = []
+    t0 = time.perf_counter()
+    for step in range(num_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            if log_fn:
+                log_fn(step, m)
+    return params, opt_state, history

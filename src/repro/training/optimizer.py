@@ -1,0 +1,100 @@
+"""AdamW + schedules, self-contained (no optax dependency).
+
+Optimizer state is a pytree shaped like the params (m, v moments), so it
+shards with the same rules as the parameters; the launcher can additionally
+shard moments over ``data`` (ZeRO-1) as a beyond-paper memory lever.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" halves optimizer memory
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, moment_dtype: str = "float32") -> dict[str, Any]:
+    dt = jnp.dtype(moment_dtype)
+
+    def zeros(p):
+        return jax.tree.map(lambda a: jnp.zeros(a.shape, dt), p)
+
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ))
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on matrices (skip norms, biases, scalars)."""
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return name not in ("scale", "bias", "a_log", "dt_bias", "d_skip",
+                        "norm_scale")
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mdt = m.dtype
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if _decay_mask(path) and p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * update).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, state["m"], state["v"],
+    )
+    new_params = jax.tree.map(lambda t3: t3[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each assigned architecture: one forward + one train step on the reduced
+variant (2 layers, d_model<=512, <=4 experts), asserting output shapes and
+no NaNs; plus decode-vs-forward and prefix-resume consistency (the paths
+SkyMemory feeds).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs, smoke_config
+from repro.models.model import Model
+
+ARCHS = list_configs()
+B, S = 2, 32
+
+
+def _setup(name, dtype="float32"):
+    cfg = smoke_config(get_config(name)).replace(dtype=dtype)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = {}
+    if cfg.arch_type == "vlm":
+        kw["image_embeds"] = (
+            jax.random.normal(
+                jax.random.PRNGKey(5), (B, cfg.num_image_tokens, cfg.d_model)
+            ) * 0.1
+        )
+    if cfg.is_encoder_decoder:
+        kw["frames"] = jax.random.normal(
+            jax.random.PRNGKey(6), (B, S, cfg.d_model)
+        ) * 0.5
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    return cfg, model, params, toks, kw
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(name):
+    cfg, model, params, toks, kw = _setup(name, dtype="bfloat16")
+    logits, aux, _ = model.forward(params, toks, **kw)
+    n_img = cfg.num_image_tokens if cfg.arch_type == "vlm" else 0
+    assert logits.shape == (B, S + n_img, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_finite_grads(name):
+    cfg, model, params, toks, kw = _setup(name, dtype="float32")
+    batch = {"tokens": toks, "targets": toks, **kw}
+    loss, metrics = model.train_loss(params, batch)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_forward(name):
+    cfg, model, params, toks, kw = _setup(name)
+    logits, _, state = model.forward(params, toks, collect_state=True, **kw)
+    n_img = cfg.num_image_tokens if cfg.arch_type == "vlm" else 0
+    total = S + n_img
+    cache = model.init_cache(B, total + 8, src_len=S)
+    if "kv" in state:
+        cache["kv"]["k"] = cache["kv"]["k"].at[:, :, :total].set(state["kv"]["k"])
+        cache["kv"]["v"] = cache["kv"]["v"].at[:, :, :total].set(state["kv"]["v"])
+    if "mla" in state:
+        cache["mla"]["ckv"] = cache["mla"]["ckv"].at[:, :, :total].set(
+            state["mla"]["ckv"])
+        cache["mla"]["kr"] = cache["mla"]["kr"].at[:, :, :total].set(
+            state["mla"]["kr"])
+    if "ssm" in state:
+        cache["ssm"] = {
+            "conv": state["ssm"]["conv"],
+            "state": state["ssm"]["state"].astype(jnp.float32),
+        }
+    if "cross" in state:
+        cache["cross"] = state["cross"]
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab_size)
+    lg, _ = model.decode_step(params, cache, nxt, jnp.int32(total))
+    full = jnp.concatenate([toks, nxt], 1)
+    lg_full, _, _ = model.forward(params, full, **kw)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(lg_full[:, -1]), atol=2e-4, rtol=2e-3
+    )
+
+
+@pytest.mark.parametrize(
+    "name", [a for a in ARCHS if get_config(a).arch_type
+             in ("dense", "ssm", "hybrid", "moe")]
+)
+def test_prefix_resume_matches_full_forward(name):
+    """The SkyMemory path: restore the block state for the first S/2 tokens
+    and run a chunked prefill of the rest -> identical logits.
+
+    MoE capacity is raised so no token drops: capacity-based dropping
+    depends on the group composition (a 16-token suffix forms different
+    groups than the 32-token full pass), which would legitimately change
+    outputs -- that is a property of dropping MoE, not of the cache."""
+    cfg, model, params, toks, kw = _setup(name)
+    if cfg.num_experts:
+        cfg = cfg.replace(capacity_factor=float(cfg.num_experts))
+        model = Model(cfg)
+    half = S // 2
+    _, _, state = model.forward(params, toks[:, :half], collect_state=True)
+    logits_resumed, _, _ = model.forward(
+        params, toks[:, half:], q_offset=half, prefix_state=state
+    )
+    logits_full, _, _ = model.forward(params, toks)
+    np.testing.assert_allclose(
+        np.asarray(logits_resumed),
+        np.asarray(logits_full[:, half:]),
+        atol=2e-4, rtol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_two_train_steps_reduce_loss(name):
+    """A couple of SGD steps on a repeated batch should reduce the loss."""
+    cfg, model, params, toks, kw = _setup(name)
+    batch = {"tokens": toks, "targets": toks, **kw}
+
+    @jax.jit
+    def step(p):
+        loss, _ = model.train_loss(p, batch)
+        g = jax.grad(lambda q: model.train_loss(q, batch)[0])(p)
+        p = jax.tree.map(lambda a, b: a - 0.05 * b.astype(a.dtype), p, g)
+        return p, loss
+
+    params, l0 = step(params)
+    for _ in range(3):
+        params, l1 = step(params)
+    assert float(l1) < float(l0)
+
+
+def test_int8_kvc_decode_quality():
+    """Paper §3.3/§5: 8-bit quantized KVC trades accuracy for memory --
+    greedy argmax must survive the quantization on a smoke model."""
+    cfg = smoke_config(get_config("yi-9b")).replace(
+        dtype="float32", kvc_dtype="int8")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 24), 0,
+                              cfg.vocab_size)
+    lg_full, _, _ = model.forward(params, toks)
+    cache = model.init_cache(B, 32)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    for t in range(24):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+    rel = float(jnp.max(jnp.abs(lg[:, 0] - lg_full[:, -1]))) / float(
+        jnp.max(jnp.abs(lg_full[:, -1])))
+    assert rel < 0.1
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(lg[:, 0], -1)),
+        np.asarray(jnp.argmax(lg_full[:, -1], -1)))

@@ -1,0 +1,113 @@
+"""Torus model tests (paper §2, §3.2, Eqs 1-4)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.constellation import (
+    C_KM_S,
+    R_EARTH_KM,
+    ConstellationSpec,
+    LosWindow,
+    Sat,
+)
+
+SPEC = ConstellationSpec(num_planes=15, sats_per_plane=15, altitude_km=550.0)
+
+sats = st.builds(
+    Sat,
+    plane=st.integers(0, SPEC.num_planes - 1),
+    slot=st.integers(0, SPEC.sats_per_plane - 1),
+)
+
+
+def test_eq1_intra_plane_distance():
+    # Eq (1) closed form: (r_E + h) * sqrt(2 (1 - cos(2 pi / M))).
+    d = SPEC.intra_plane_distance_km()
+    expected = (R_EARTH_KM + 550.0) * math.sqrt(2 * (1 - math.cos(2 * math.pi / 15)))
+    assert d == pytest.approx(expected)
+    # equivalently 2 (r_E+h) sin(pi/M)
+    assert d == pytest.approx(2 * (R_EARTH_KM + 550.0) * math.sin(math.pi / 15))
+
+
+def test_distance_decreases_with_density_and_grows_with_altitude():
+    lo = ConstellationSpec(15, 50, 550.0).intra_plane_distance_km()
+    hi = ConstellationSpec(15, 15, 550.0).intra_plane_distance_km()
+    assert lo < hi
+    low_alt = ConstellationSpec(15, 15, 160.0).intra_plane_distance_km()
+    assert low_alt < hi
+
+
+@given(a=sats, b=sats)
+@settings(max_examples=200, deadline=None)
+def test_hops_symmetric_and_triangle(a, b):
+    assert SPEC.hops(a, b) == SPEC.hops(b, a)
+    assert SPEC.hops(a, a) == 0
+    c = Sat(0, 0)
+    assert SPEC.hops(a, b) <= SPEC.hops(a, c) + SPEC.hops(c, b)
+
+
+@given(a=sats, b=sats)
+@settings(max_examples=200, deadline=None)
+def test_torus_delta_minimal_and_consistent(a, b):
+    dp, ds = SPEC.torus_delta(a, b)
+    assert abs(dp) <= SPEC.num_planes // 2
+    assert abs(ds) <= SPEC.sats_per_plane // 2
+    assert SPEC.wrap(Sat(a.plane + dp, a.slot + ds)) == SPEC.wrap(b)
+
+
+@given(a=sats, b=sats)
+@settings(max_examples=100, deadline=None)
+def test_greedy_route_length_equals_hops(a, b):
+    path = SPEC.greedy_route(a, b)
+    assert path[0] == SPEC.wrap(a)
+    assert path[-1] == SPEC.wrap(b)
+    assert len(path) - 1 == SPEC.hops(a, b)
+    # each step is one ISL link
+    for u, v in zip(path, path[1:]):
+        assert SPEC.hops(u, v) == 1
+
+
+def test_slant_range_eq4():
+    # directly overhead: slant = altitude
+    assert SPEC.slant_range_km(0.0) == pytest.approx(550.0)
+    assert SPEC.slant_range_km(550.0) == pytest.approx(550.0 * math.sqrt(2))
+
+
+def test_isl_latency_is_distance_over_c():
+    a, b = Sat(0, 0), Sat(0, 1)
+    assert SPEC.isl_latency_s(a, b) == pytest.approx(
+        SPEC.intra_plane_distance_km() / C_KM_S
+    )
+
+
+def test_los_window_row_major_and_contains():
+    w = LosWindow(Sat(7, 7), 3, 3)
+    got = w.sats(SPEC)
+    assert len(got) == 9
+    assert got[0] == Sat(6, 6)      # top-left
+    assert got[4] == Sat(7, 7)      # center is the middle element
+    assert got[-1] == Sat(8, 8)
+    for s in got:
+        assert w.contains(SPEC, s)
+    assert not w.contains(SPEC, Sat(10, 7))
+
+
+def test_los_window_wraps_around_torus():
+    w = LosWindow(Sat(0, 0), 3, 3)
+    got = w.sats(SPEC)
+    assert got[0] == Sat(14, 14)
+    assert w.contains(SPEC, Sat(14, 14))
+
+
+def test_window_shift_moves_along_plane():
+    w = LosWindow(Sat(7, 7), 5, 5)
+    w2 = w.shifted(SPEC, d_slot=1)
+    assert w2.center == Sat(7, 8)
+    # one column of satellites exits, one enters, per plane
+    old = set(w.sats(SPEC))
+    new = set(w2.sats(SPEC))
+    assert len(old - new) == 5 and len(new - old) == 5
+    exited = old - new
+    assert all(s.slot == 5 for s in exited)  # the trailing row exits

@@ -1,0 +1,190 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels run in interpret=True mode on CPU (the kernel body executes in
+Python), which checks indexing, masking, and accumulation logic exactly as
+it would run on TPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.chunked_prefill import chunked_prefill_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_chunk_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,skv,h,hkv,d,off,win",
+    [
+        (2, 64, 64, 4, 2, 32, 0, None),        # GQA, square
+        (1, 128, 256, 8, 8, 64, 128, None),    # prefix offset (chunked)
+        (2, 32, 96, 4, 1, 16, 64, 48),         # MQA + sliding window
+        (1, 200, 200, 2, 2, 24, 0, None),      # ragged (padding path)
+        (1, 16, 144, 4, 4, 128, 128, 64),      # window + offset
+    ],
+)
+def test_chunked_prefill_matches_oracle(b, sq, skv, h, hkv, d, off, win, dtype):
+    q = _rand((b, sq, h, d), dtype)
+    k = _rand((b, skv, hkv, d), dtype)
+    v = _rand((b, skv, hkv, d), dtype)
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=off,
+                             sliding_window=win)
+    got = chunked_prefill_attention(q, k, v, causal=True, q_offset=off,
+                                    sliding_window=win, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_chunked_prefill_noncausal():
+    q = _rand((1, 32, 2, 16), jnp.float32)
+    k = _rand((1, 48, 2, 16), jnp.float32)
+    v = _rand((1, 48, 2, 16), jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=False)
+    got = chunked_prefill_attention(q, k, v, causal=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,p,page,h,hkv,d",
+    [
+        (2, 4, 32, 4, 2, 16),
+        (1, 8, 16, 8, 1, 64),
+        (3, 2, 128, 4, 4, 32),
+        (2, 16, 8, 2, 2, 128),
+    ],
+)
+def test_paged_attention_matches_oracle(b, p, page, h, hkv, d, dtype):
+    q = _rand((b, h, d), dtype)
+    k = _rand((b, p, page, hkv, d), dtype)
+    v = _rand((b, p, page, hkv, d), dtype)
+    lengths = jnp.asarray(RNG.integers(1, p * page + 1, size=(b,)), jnp.int32)
+    want = ref.paged_attention_ref(q, k, v, lengths)
+    got = paged_attention(q, k, v, lengths, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_paged_attention_length_edge_cases():
+    b, p, page, h, d = 2, 3, 16, 2, 8
+    q = _rand((b, h, d), jnp.float32)
+    k = _rand((b, p, page, h, d), jnp.float32)
+    v = _rand((b, p, page, h, d), jnp.float32)
+    for lengths in ([1, 48], [16, 17], [48, 48]):
+        lg = jnp.asarray(lengths, jnp.int32)
+        want = ref.paged_attention_ref(q, k, v, lg)
+        got = paged_attention(q, k, v, lg, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,l,h,p,g,n,q",
+    [
+        (2, 128, 4, 8, 2, 16, 32),
+        (1, 64, 8, 16, 1, 32, 64),
+        (2, 256, 2, 32, 2, 8, 128),
+        (1, 96, 4, 64, 4, 128, 32),   # full mamba2-like head/state dims
+    ],
+)
+def test_ssd_scan_matches_oracle(b, l, h, p, g, n, q, dtype):
+    x = _rand((b, l, h, p), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, l, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = _rand((b, l, g, n), dtype)
+    cm = _rand((b, l, g, n), dtype)
+    init = jnp.asarray(RNG.standard_normal((b, h, p, n)), jnp.float32)
+    yw, fw = ref.ssd_scan_ref(x, dt, a, bm, cm, chunk_size=q,
+                              initial_state=init)
+    yg, fg = ssd_chunk_scan(x, dt, a, bm, cm, chunk_size=q,
+                            initial_state=init, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(yg, np.float32), np.asarray(yw, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(np.asarray(fg), np.asarray(fw), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_scan_equals_sequential_recurrence():
+    """Chunked kernel == token-by-token decode recurrence (ground truth)."""
+    b, l, h, p, g, n = 1, 64, 2, 4, 1, 8
+    x = _rand((b, l, h, p), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, l, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = _rand((b, l, g, n), jnp.float32)
+    cm = _rand((b, l, g, n), jnp.float32)
+    y, fs = ssd_chunk_scan(x, dt, a, bm, cm, chunk_size=16, interpret=True)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(l):
+        yt, state = ref.ssd_decode_step_ref(
+            x[:, t], dt[:, t], a, bm[:, t], cm[:, t], state
+        )
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(state), atol=1e-4,
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatcher
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_jnp_vs_pallas(monkeypatch):
+    q = _rand((1, 32, 2, 16), jnp.float32)
+    k = _rand((1, 32, 2, 16), jnp.float32)
+    v = _rand((1, 32, 2, 16), jnp.float32)
+    a = ops.flash_attention(q, k, v, impl="jnp")
+    b = ops.flash_attention(q, k, v, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-4)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "jnp")
+    c = ops.flash_attention(q, k, v, impl="pallas")  # env overrides
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=0)
+
+
+def test_paged_attention_grouped_matches_repeat():
+    """Grouped-GQA decode (no head-repeat materialization) == baseline."""
+    b, p, page, h, hkv, d = 2, 4, 32, 8, 2, 16
+    q = _rand((b, h, d), jnp.float32)
+    k = _rand((b, p, page, hkv, d), jnp.float32)
+    v = _rand((b, p, page, hkv, d), jnp.float32)
+    lengths = jnp.asarray([50, 120], jnp.int32)
+    base = ref.paged_attention_ref(q, k, v, lengths, grouped=False)
+    grp = ref.paged_attention_ref(q, k, v, lengths, grouped=True)
+    np.testing.assert_allclose(np.asarray(grp), np.asarray(base),
+                               atol=2e-5, rtol=2e-4)

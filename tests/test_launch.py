@@ -1,0 +1,225 @@
+"""Launch-layer unit tests that do not need 512 host devices.
+
+(The full 40-combo x 2-mesh lowering is exercised by
+``python -m repro.launch.dryrun --all``; results live in
+benchmarks/results/dryrun/.)
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.probe import ProbeSet, probe_set, solve_linear
+from repro.launch.roofline import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    Roofline,
+    model_flops,
+    parse_collectives,
+    streaming_attn_correction,
+)
+from repro.launch.specs import input_specs
+from repro.models.config import INPUT_SHAPES
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %ag = bf16[8,1024,128]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={1}
+  %ar = f32[256,1024]{1,0} all-reduce(%y), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%z), replica_groups=[8,2]<=[16], dimensions={0}
+  %cp = bf16[2,2]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %a2a = s32[16,16]{1,0} all-to-all(%v), replica_groups=[4,4]<=[16], dimensions={0}
+"""
+
+
+def test_parse_collectives_types_and_magnitudes():
+    out = parse_collectives(HLO_SAMPLE)
+    assert set(out) == {"all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"}
+    ag_result = 8 * 1024 * 128 * 2
+    assert out["all-gather"] == pytest.approx(ag_result * 15 / 16)
+    ar_result = 256 * 1024 * 4
+    assert out["all-reduce"] == pytest.approx(2 * ar_result * 3 / 4)
+    rs_result = 64 * 64 * 4
+    assert out["reduce-scatter"] == pytest.approx(rs_result * 1)  # n=2
+    assert out["collective-permute"] == pytest.approx(2 * 2 * 2)
+    assert out["all-to-all"] == pytest.approx(16 * 16 * 4 * 3 / 4)
+
+
+def test_parse_collectives_empty():
+    assert parse_collectives("%x = f32[2] add(%a, %b)") == {}
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(
+        arch="a", shape="train_4k", mesh="16x16", step="train_step",
+        flops_per_device=PEAK_FLOPS,            # 1 s of compute
+        bytes_per_device=HBM_BW / 2,            # 0.5 s of memory
+        collective_bytes=LINK_BW / 4,           # 0.25 s of collectives
+        model_flops=0.5 * PEAK_FLOPS * 256,
+    )
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.dominant == "compute"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_conventions():
+    cfg = get_config("yi-9b")
+    n = cfg.active_param_count()
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert pf == pytest.approx(2 * n * 32 * 32768)
+    assert dc == pytest.approx(2 * n * 128)
+
+
+def test_streaming_correction_only_for_long_prefill():
+    cfg = get_config("yi-9b")
+    assert streaming_attn_correction(cfg, INPUT_SHAPES["train_4k"],
+                                     "full") == 0.0
+    assert streaming_attn_correction(cfg, INPUT_SHAPES["decode_32k"],
+                                     "full") == 0.0
+    c = streaming_attn_correction(cfg, INPUT_SHAPES["prefill_32k"], "full")
+    # 15/16 of the analytic attention flops
+    expect = 4 * 32 * 32 * 128 * 32768**2 * 48 * 15 / 16
+    assert c == pytest.approx(expect, rel=1e-6)
+    ssm = get_config("mamba2-1.3b")
+    assert streaming_attn_correction(ssm, INPUT_SHAPES["prefill_32k"],
+                                     "full") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Linear probing
+# ---------------------------------------------------------------------------
+
+def test_probe_sets_cover_all_archs():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        ps = probe_set(cfg)
+        assert len(ps.variants) >= len(ps.var_names) + 1 or (
+            len(ps.var_names) == 1 and len(ps.variants) == 2
+        )
+        # full counts match the architecture
+        if cfg.is_encoder_decoder:
+            assert ps.full_counts == {"enc": 24, "dec": 24}
+        elif cfg.arch_type == "hybrid":
+            assert ps.full_counts == {"mamba": 38, "attn": 6}
+        elif cfg.use_mla:
+            assert ps.full_counts == {"dense": 3, "moe": 58}
+        else:
+            assert ps.full_counts == {"block": cfg.num_layers}
+
+
+def test_solve_linear_recovers_exact_model():
+    ps = ProbeSet(
+        ("a", "b"),
+        {"a": 10, "b": 5},
+        (
+            ({}, {"a": 1, "b": 1}),
+            ({}, {"a": 2, "b": 1}),
+            ({}, {"a": 1, "b": 2}),
+        ),
+    )
+    out, xa, xb = 7.0, 3.0, 11.0
+
+    def metric(counts):
+        return out + xa * counts["a"] + xb * counts["b"]
+
+    measured = [{"flops": metric(c)} for _, c in ps.variants]
+    solved = solve_linear(ps, measured)
+    assert solved["flops"] == pytest.approx(out + 10 * xa + 5 * xb)
+
+
+def test_solve_linear_homogeneous():
+    ps = ProbeSet(("block",), {"block": 48},
+                  (({}, {"block": 1}), ({}, {"block": 2})))
+    measured = [{"flops": 100 + 7}, {"flops": 100 + 14}]
+    solved = solve_linear(ps, measured)
+    assert solved["flops"] == pytest.approx(100 + 48 * 7)
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_shapes(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    if shape.is_decode:
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+        return
+    b = shape.global_batch
+    if cfg.is_encoder_decoder:
+        assert specs["tokens"].shape == (b, shape.seq_len // 2)
+        assert specs["frames"].shape == (b, shape.seq_len // 2, cfg.d_model)
+    elif cfg.arch_type == "vlm":
+        s_text = shape.seq_len - cfg.num_image_tokens
+        assert specs["tokens"].shape == (b, s_text)
+        assert specs["image_embeds"].shape == (
+            b, cfg.num_image_tokens, cfg.d_model)
+    else:
+        assert specs["tokens"].shape == (b, shape.seq_len)
+    # total positions = the assigned seq_len
+    total = specs["tokens"].shape[1] + (
+        specs["image_embeds"].shape[1] if "image_embeds" in specs else 0)
+    if not cfg.is_encoder_decoder:
+        assert total == shape.seq_len
+
+
+def test_make_rules_on_tiny_mesh():
+    from repro.launch.mesh import make_rules
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("yi-9b")
+    tr = make_rules(mesh, cfg, INPUT_SHAPES["train_4k"])
+    assert tr.attn_tp and tr.fsdp and not tr.seq_shard_cache
+    dc = make_rules(mesh, cfg, INPUT_SHAPES["decode_32k"])
+    assert not dc.attn_tp
+    lg = make_rules(mesh, cfg, INPUT_SHAPES["long_500k"])
+    assert not lg.attn_tp
+
+
+def test_grad_accum_equivalent_params():
+    """Microbatched gradient accumulation == single-batch step."""
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.launch.mesh import make_rules
+    from repro.launch.specs import make_plan
+    from repro.models.config import InputShape
+    from repro.training.optimizer import init_opt_state
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    shape = InputShape("t", 32, 4, "train")
+    rules = make_rules(mesh, cfg, shape)
+    with mesh:
+        p1 = make_plan(cfg, shape, rules, remat=None, unroll=False,
+                       grad_accum=1)
+        p4 = make_plan(cfg, shape, rules, remat=None, unroll=False,
+                       grad_accum=4)
+        params = p1.model.init(jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size)}
+        batch["targets"] = batch["tokens"]
+        r1 = jax.jit(p1.fn)(params, opt, batch)
+        r4 = jax.jit(p4.fn)(params, opt, batch)
+    for a, b in zip(jax.tree.leaves(r1[0]), jax.tree.leaves(r4[0])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-6, rtol=1e-4)

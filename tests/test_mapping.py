@@ -1,0 +1,107 @@
+"""Placement strategies vs the paper's published grids (Figs 13-15)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.constellation import ConstellationSpec, LosWindow, Sat
+from repro.core.mapping import (
+    Strategy,
+    bounding_box_side,
+    hop_rings,
+    layout_grid,
+    place_servers,
+)
+
+SPEC = ConstellationSpec(num_planes=20, sats_per_plane=20, altitude_km=550.0)
+
+
+def test_rotation_aware_fig13():
+    assert layout_grid(Strategy.ROTATION, 3) == [
+        [1, 2, 3],
+        [4, 5, 6],
+        [7, 8, 9],
+    ]
+    g5 = layout_grid(Strategy.ROTATION, 5)
+    assert g5[0] == [1, 2, 3, 4, 5]
+    assert g5[4] == [21, 22, 23, 24, 25]
+
+
+def test_rotation_hop_aware_fig15_3x3():
+    # Published 3x3 grid of the rotation+hop mapping.
+    assert layout_grid(Strategy.ROTATION_HOP, 3) == [
+        [7, 2, 6],
+        [5, 1, 3],
+        [9, 4, 8],
+    ]
+
+
+def test_rotation_hop_aware_fig15_5x5():
+    # Published 5x5 grid of the rotation+hop mapping (paper Fig 15).
+    assert layout_grid(Strategy.ROTATION_HOP, 5) == [
+        [23, 15, 6, 14, 22],
+        [17, 8, 2, 7, 16],
+        [13, 5, 1, 3, 9],
+        [21, 12, 4, 10, 18],
+        [25, 20, 11, 19, 24],
+    ]
+
+
+def test_hop_aware_fig14_structure():
+    # Unbounded BFS: ring radii are non-decreasing and form a diamond.
+    rings = hop_rings(25)
+    assert rings[0] == 0
+    assert rings == sorted(rings)
+    # ring r has exactly 4r members (diamond) until truncation
+    assert rings[1:5] == [1, 1, 1, 1]
+    assert rings[5:13] == [2] * 8
+    # first ring order: up, right, down, left around the center
+    g = layout_grid(Strategy.HOP, 5)
+    assert g[2][2] == 1
+    assert g[1][2] == 2 and g[2][3] == 3 and g[3][2] == 4 and g[2][1] == 5
+
+
+def test_bounding_box_side():
+    assert bounding_box_side(81) == 9
+    assert bounding_box_side(80) == 9
+    assert bounding_box_side(9) == 3
+    assert bounding_box_side(10) == 4
+
+
+@given(n=st.integers(1, 81))
+@settings(max_examples=40, deadline=None)
+def test_placements_are_distinct_sats(n):
+    window = LosWindow(Sat(10, 10), 9, 9)
+    for strat in Strategy:
+        sats = place_servers(strat, SPEC, window, n)
+        assert len(sats) == n
+        assert len(set(sats)) == n  # no two servers share a satellite
+
+
+@given(n=st.integers(1, 49))
+@settings(max_examples=30, deadline=None)
+def test_hop_rings_closer_than_rotation(n):
+    """The ring placements never put a server farther (in hops from the
+    center) than the worst row-major placement does."""
+    window = LosWindow(Sat(10, 10), 7, 7)
+    center = window.center
+
+    def worst(strat):
+        return max(
+            SPEC.hops(center, s) for s in place_servers(strat, SPEC, window, n)
+        )
+
+    assert worst(Strategy.HOP) <= worst(Strategy.ROTATION)
+    assert worst(Strategy.ROTATION_HOP) <= worst(Strategy.ROTATION)
+
+
+def test_rotation_requires_window_capacity():
+    window = LosWindow(Sat(10, 10), 3, 3)
+    with pytest.raises(ValueError):
+        place_servers(Strategy.ROTATION, SPEC, window, 10)
+
+
+def test_hop_center_is_server_one():
+    window = LosWindow(Sat(10, 10), 9, 9)
+    for strat in (Strategy.HOP, Strategy.ROTATION_HOP):
+        sats = place_servers(strat, SPEC, window, 25)
+        assert sats[0] == window.center  # chunk 1 on the closest satellite

@@ -1,0 +1,377 @@
+"""Hashing, chunking, store, radix, and the Set/Get protocol (paper §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.chunking import (
+    arrays_to_bytes,
+    bytes_to_arrays,
+    bytes_to_dequantized,
+    join_chunks,
+    num_chunks,
+    quantized_to_bytes,
+    split_chunks,
+)
+from repro.core.constellation import ConstellationSpec, LosWindow, Sat
+from repro.core.eviction import gossip_cost, run_periodic_sweep
+from repro.core.hashing import NULL_HASH, chain_hashes, hash_block, split_token_blocks
+from repro.core.mapping import Strategy
+from repro.core.protocol import ConstellationKVC, IslTransport, KVCManager
+from repro.core.radix import BlockMeta, RadixBlockIndex
+from repro.core.store import SatelliteStore
+
+
+# ---------------------------------------------------------------------------
+# hashing
+# ---------------------------------------------------------------------------
+
+@given(tokens=st.lists(st.integers(0, 2**31 - 1), max_size=600),
+       block=st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_chain_hash_prefix_property(tokens, block):
+    """hash_i covers blocks 1..i: equal prefixes give equal hash prefixes."""
+    h = chain_hashes(tokens, block)
+    assert len(h) == len(tokens) // block
+    # a prompt extending this one shares the full hash prefix
+    h2 = chain_hashes(tokens + [1, 2, 3], block)
+    assert h2[: len(h)] == h
+    # mutating any token changes every subsequent hash
+    if tokens and len(h) >= 1:
+        t2 = list(tokens)
+        t2[0] = t2[0] ^ 1
+        h3 = chain_hashes(t2, block)
+        assert all(a != b for a, b in zip(h, h3))
+
+
+def test_hash_block_depends_on_prev():
+    a = hash_block(NULL_HASH, [1, 2, 3])
+    b = hash_block(a, [1, 2, 3])
+    assert a != b
+    assert len(a) == 32
+
+
+def test_split_token_blocks_full_only():
+    assert split_token_blocks([1, 2, 3, 4, 5], 2) == [(1, 2), (3, 4)]
+    assert split_token_blocks([1, 2, 3, 4, 5], 2, full_only=False)[-1] == (5,)
+
+
+# ---------------------------------------------------------------------------
+# chunking / serialization
+# ---------------------------------------------------------------------------
+
+@given(data=st.binary(max_size=4096), chunk=st.integers(1, 512))
+@settings(max_examples=80, deadline=None)
+def test_chunk_roundtrip(data, chunk):
+    chunks = split_chunks(data, chunk)
+    assert join_chunks(chunks) == data
+    assert len(chunks) == num_chunks(len(data), chunk)
+    assert all(len(c) <= chunk for c in chunks)
+    if data:
+        assert all(len(c) == chunk for c in chunks[:-1])
+
+
+def test_array_serialization_roundtrip():
+    arrays = [
+        np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+        np.array([[1, 2]], dtype=np.int8),
+        (np.arange(8) / 3).astype(np.float16),
+    ]
+    back = bytes_to_arrays(arrays_to_bytes(arrays))
+    assert len(back) == len(arrays)
+    for a, b in zip(arrays, back):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_int8_quantized_roundtrip_close():
+    rng = np.random.default_rng(0)
+    arrays = [rng.normal(size=(4, 16, 8)).astype(np.float32)]
+    back = bytes_to_dequantized(quantized_to_bytes(arrays))
+    err = np.max(np.abs(back[0] - arrays[0]))
+    scale = np.max(np.abs(arrays[0]))
+    assert err <= scale / 127.0 * 1.01  # one quantization step
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+def test_store_lru_eviction_order():
+    evicted = []
+    s = SatelliteStore(capacity_bytes=10, on_evict=lambda st_, k: evicted.append(k))
+    s.set((b"a", 0), b"xxxx")
+    s.set((b"b", 0), b"yyyy")
+    assert s.get((b"a", 0)) == b"xxxx"  # touch a -> b becomes LRU
+    s.set((b"c", 0), b"zzzz")           # 12 bytes > 10 -> evict b
+    assert evicted == [(b"b", 0)]
+    assert s.get((b"b", 0)) is None
+    assert s.get((b"a", 0)) == b"xxxx"
+
+
+# ---------------------------------------------------------------------------
+# radix index
+# ---------------------------------------------------------------------------
+
+def _meta(i):
+    return BlockMeta(n_chunks=i + 1, set_time=float(i))
+
+
+def test_radix_longest_prefix_and_removal():
+    idx = RadixBlockIndex()
+    h = chain_hashes(list(range(512)), 64)  # 8 blocks
+    idx.insert(h, [_meta(i) for i in range(8)])
+    n, meta = idx.longest_cached_prefix(h)
+    assert n == 8 and meta.n_chunks == 8
+    # diverging suffix matches only the shared prefix
+    h2 = chain_hashes(list(range(256)) + [999] * 256, 64)
+    n2, m2 = idx.longest_cached_prefix(h2)
+    assert n2 == 4 and m2.n_chunks == 4
+    assert idx.remove(h[:6]) is True
+    n3, m3 = idx.longest_cached_prefix(h[:6])
+    assert n3 == 5
+    assert len(idx) == 7
+
+
+@given(
+    base=st.lists(st.integers(0, 100), min_size=0, max_size=8),
+    probe=st.lists(st.integers(0, 100), min_size=0, max_size=8),
+)
+@settings(max_examples=100, deadline=None)
+def test_radix_prefix_matches_naive(base, probe):
+    """Radix longest-prefix equals the naive common-prefix computation."""
+    bh = chain_hashes([t for t in base for _ in range(4)], 4)
+    ph = chain_hashes([t for t in probe for _ in range(4)], 4)
+    idx = RadixBlockIndex()
+    idx.insert(bh, [_meta(i) for i in range(len(bh))])
+    n, _ = idx.longest_cached_prefix(ph)
+    naive = 0
+    for a, b in zip(bh, ph):
+        if a != b:
+            break
+        naive += 1
+    assert n == naive
+
+
+# ---------------------------------------------------------------------------
+# constellation KVC protocol
+# ---------------------------------------------------------------------------
+
+SPEC = ConstellationSpec(num_planes=15, sats_per_plane=15, altitude_km=550.0)
+
+
+def make_kvc(strategy=Strategy.ROTATION_HOP, **kw):
+    window = LosWindow(Sat(7, 7), 9, 9)
+    return ConstellationKVC(
+        SPEC, window, strategy, num_servers=10, chunk_bytes=64, **kw
+    )
+
+
+def test_set_get_roundtrip_and_striping():
+    kvc = make_kvc()
+    payload = bytes(range(256)) * 3  # 768 bytes -> 12 chunks over 10 servers
+    meta = kvc.set_block(b"h1" * 16, payload)
+    assert meta.n_chunks == 12
+    # chunks striped chunk_id mod 10: server 0 holds chunks 0 and 10
+    s0 = kvc.store_for(kvc.server_sat(0))
+    assert s0.contains((b"h1" * 16, 0)) and s0.contains((b"h1" * 16, 10))
+    assert kvc.get_block(b"h1" * 16) == payload
+    assert kvc.stats.block_hits == 1
+
+
+def test_missing_chunk_fails_block_and_lazy_evicts():
+    kvc = make_kvc()
+    h = b"h2" * 16
+    kvc.set_block(h, b"z" * 640)
+    # kill one chunk on its satellite
+    kvc.store_for(kvc.server_sat(3)).delete((h, 3))
+    assert kvc.get_block(h) is None
+    assert kvc.stats.block_misses == 1
+    # lazy eviction purged the remainder
+    assert all(
+        not kvc.store_for(kvc.server_sat(i % 10)).contains((h, i))
+        for i in range(10)
+    )
+
+
+def test_lookup_longest_binary_search():
+    kvc = make_kvc()
+    hashes = chain_hashes(list(range(640)), 64)  # 10 blocks
+    for h in hashes[:6]:
+        kvc.set_block(h, b"p" * 100)
+    assert kvc.lookup_longest(hashes) == 6
+    assert kvc.lookup_longest(hashes[:3]) == 3
+    assert kvc.lookup_longest([b"nope" * 8]) == 0
+
+
+def test_rotation_migration_preserves_blocks():
+    kvc = make_kvc()
+    h = b"h3" * 16
+    payload = b"q" * 1000
+    kvc.set_block(h, payload)
+    before = list(kvc.server_map)
+    moves = kvc.rotate(steps=3)
+    assert kvc.get_block(h) == payload
+    # every migrated server stayed in its orbital plane (paper §3.4)
+    for mv in moves:
+        assert mv.src.plane == mv.dst.plane
+    # servers that left LOS were remapped
+    assert kvc.server_map != before or not moves
+    for sat in kvc.server_map:
+        assert kvc.window.contains(SPEC, sat)
+
+
+def test_rotation_many_steps_stays_consistent():
+    """Blocks survive an arbitrary number of rotation steps; every server
+    remains inside LOS and within its original orbital plane."""
+    kvc = make_kvc()
+    h = b"h4" * 16
+    planes0 = [s.plane for s in kvc.server_map]
+    kvc.set_block(h, b"r" * 500)
+    kvc.rotate(steps=2 * SPEC.sats_per_plane + 3)
+    assert kvc.get_block(h) == b"r" * 500
+    assert [s.plane for s in kvc.server_map] == planes0
+    for sat in kvc.server_map:
+        assert kvc.window.contains(SPEC, sat)
+
+
+def test_hop_strategy_never_migrates():
+    kvc = make_kvc(strategy=Strategy.HOP)
+    h = b"h5" * 16
+    kvc.set_block(h, b"s" * 300)
+    before = list(kvc.server_map)
+    moves = kvc.rotate(steps=4)
+    assert moves == [] and kvc.server_map == before
+    assert kvc.get_block(h) == b"s" * 300
+
+
+def test_capacity_eviction_invalidates_whole_block():
+    kvc = make_kvc(per_sat_capacity_bytes=128)
+    h1, h2, h3 = b"a" * 32, b"b" * 32, b"c" * 32
+    kvc.set_block(h1, b"1" * 640)
+    kvc.set_block(h2, b"2" * 640)
+    kvc.set_block(h3, b"3" * 640)  # pressure: each sat holds 64B/block
+    # at most 2 blocks fit; the oldest must be fully gone
+    assert kvc.get_block(h1) is None
+    assert kvc.get_block(h3) == b"3" * 640
+
+
+def test_gossip_cost_and_sweep():
+    kvc = make_kvc()
+    h = b"g" * 32
+    kvc.set_block(h, b"x" * 640)
+    cost = gossip_cost(kvc, h)
+    assert cost.messages == 9  # 10 servers minus origin
+    assert cost.max_hops >= 1
+    kvc.store_for(kvc.server_sat(5)).delete((h, 5))
+    assert run_periodic_sweep(kvc) == 1
+    assert kvc.get_block(h) is None
+
+
+def test_transport_accounting():
+    t = IslTransport(SPEC, ground_hosted=True, chunk_processing_time_s=0.001)
+    kvc = make_kvc(transport=t)
+    kvc.set_block(b"t" * 32, b"y" * 640)
+    assert t.stats.messages == 10
+    assert t.stats.bytes_moved == 640
+    assert t.stats.op_latencies_s[-1] > 550.0 / 299792.458  # at least uplink
+
+
+# ---------------------------------------------------------------------------
+# KVCManager end-to-end (paper §3.3 interface)
+# ---------------------------------------------------------------------------
+
+def _tokenize(prompt: str) -> list[int]:
+    return [ord(c) for c in prompt]
+
+
+def _fake_kvc_fn(tokens, past, past_len):
+    # deterministic "KV cache": cumulative sum bytes of the tokens
+    arr = np.cumsum(np.asarray(tokens, dtype=np.int64))
+    return arrays_to_bytes([arr])
+
+
+def make_manager(block_size=16, use_radix=True):
+    kvc = make_kvc()
+    return KVCManager(
+        _tokenize, _fake_kvc_fn, kvc, block_size=block_size, use_radix=use_radix
+    )
+
+
+@pytest.mark.parametrize("use_radix", [True, False])
+def test_manager_add_then_get(use_radix):
+    mgr = make_manager(use_radix=use_radix)
+    prompt = "The quick brown fox jumps over the lazy dog, twice over."
+    added = mgr.add_blocks(prompt)
+    assert added == len(prompt) // 16
+    payload, n_tokens = mgr.get_cache(prompt)
+    assert n_tokens == (len(prompt) // 16) * 16
+    expected = _fake_kvc_fn(_tokenize(prompt)[:n_tokens], None, 0)
+    assert payload == expected
+
+
+def test_manager_prefix_reuse_only_computes_suffix():
+    mgr = make_manager()
+    base = "shared prefix of meaningful length!!"  # 36 chars -> 2 blocks
+    added1 = mgr.add_blocks(base)
+    assert added1 == 2
+    added2 = mgr.add_blocks(base + " and a different continuation here")
+    assert added2 > 0
+    # the shared 2 blocks were not recomputed
+    assert added2 == (len(base + " and a different continuation here") // 16) - 2
+
+
+def test_manager_miss_returns_empty():
+    mgr = make_manager()
+    payload, n = mgr.get_cache("never seen before prompt")
+    assert payload is None and n == 0
+
+
+def test_manager_survives_eviction_under_it():
+    mgr = make_manager()
+    prompt = "a" * 64  # 4 blocks
+    mgr.add_blocks(prompt)
+    # purge the final block behind the manager's back
+    from repro.core.hashing import chain_hashes as ch
+
+    hashes = ch(_tokenize(prompt), 16)
+    mgr.cache.purge_block(hashes[-1])
+    payload, n = mgr.get_cache(prompt)
+    assert n == 48  # falls back to the longest still-complete prefix
+    assert payload is not None
+
+
+def test_prefetch_for_rotation_prepositions_chunks():
+    """Paper §3.7: predicted future LOS windows are known exactly, so
+    chunks can be made available on those satellites ahead of time."""
+    kvc = make_kvc()
+    h = b"pf" * 16
+    kvc.set_block(h, b"z" * 640)
+    copied = kvc.prefetch_for_rotation(h, steps=5)
+    assert copied > 0
+    # simulate the future placement and verify chunks are already there
+    import copy as _copy
+
+    from repro.core import migration as mig
+    future_window = kvc.window
+    future_map = list(kvc.server_map)
+    for _ in range(5):
+        nw = future_window.shifted(SPEC, d_slot=1)
+        for mv in mig.plan_migration(SPEC, future_window, nw, future_map):
+            future_map[mv.server_id - 1] = mv.dst
+        future_window = nw
+    present = sum(
+        1 for cid in range(kvc.directory[h])
+        if kvc.store_for(future_map[cid % kvc.num_servers]).contains((h, cid))
+    )
+    assert present == kvc.directory[h]
+    # rotation still works and the block remains retrievable
+    kvc.rotate(steps=5)
+    assert kvc.get_block(h) == b"z" * 640
+
+
+def test_prefetch_noop_for_onboard_hop_strategy():
+    kvc = make_kvc(strategy=Strategy.HOP)
+    h = b"pg" * 16
+    kvc.set_block(h, b"q" * 100)
+    assert kvc.prefetch_for_rotation(h, steps=3) == 0

@@ -1,0 +1,94 @@
+"""Latency simulator vs the paper's §4 claims (Figs 1, 2, 16)."""
+import dataclasses
+
+import pytest
+
+from repro.core.mapping import Strategy
+from repro.core.simulator import (
+    MEMORY_HIERARCHY_S,
+    SimConfig,
+    intra_plane_latency_s,
+    isl_latency_grid,
+    memory_tier_for_latency,
+    required_sats_per_plane_for,
+    sweep,
+    worst_case_latency,
+)
+
+CFG = SimConfig()
+
+
+def test_fig16_rotation_hop_is_lowest_across_altitudes():
+    """Paper: 'the hop- and rotation-aware approach results in lower latency
+    than the hop-aware and the rotation-aware approaches across different
+    altitudes'."""
+    for h in (160.0, 550.0, 1000.0, 2000.0):
+        for s in (9, 25, 81):
+            cfg = dataclasses.replace(CFG, altitude_km=h, num_servers=s)
+            rh = worst_case_latency(Strategy.ROTATION_HOP, cfg).worst_latency_s
+            rot = worst_case_latency(Strategy.ROTATION, cfg).worst_latency_s
+            hop = worst_case_latency(Strategy.HOP, cfg).worst_latency_s
+            assert rh <= rot, (h, s)
+            assert rh <= hop, (h, s)
+
+
+def test_fig16_more_servers_about_90pct_reduction():
+    """Paper: 'An 8x increase in servers results in about 90% reduction in
+    latency' (9 -> 81 servers)."""
+    lo = worst_case_latency(
+        Strategy.ROTATION_HOP, dataclasses.replace(CFG, num_servers=9)
+    ).worst_latency_s
+    hi = worst_case_latency(
+        Strategy.ROTATION_HOP, dataclasses.replace(CFG, num_servers=81)
+    ).worst_latency_s
+    reduction = 1.0 - hi / lo
+    assert 0.80 <= reduction <= 0.95
+
+
+def test_latency_grows_with_altitude():
+    prev = 0.0
+    for h in (160.0, 550.0, 1000.0, 2000.0):
+        cfg = dataclasses.replace(CFG, altitude_km=h)
+        cur = worst_case_latency(Strategy.ROTATION_HOP, cfg).worst_latency_s
+        assert cur > prev
+        prev = cur
+
+
+def test_processing_term_scales_inversely_with_servers():
+    r9 = worst_case_latency(Strategy.HOP, dataclasses.replace(CFG, num_servers=9))
+    r81 = worst_case_latency(Strategy.HOP, dataclasses.replace(CFG, num_servers=81))
+    assert r9.worst_processing_s == pytest.approx(
+        9 * r81.worst_processing_s, rel=0.05
+    )
+
+
+def test_figs1_2_intra_plane_latency_shape():
+    # latency decreases with M, increases with h (paper Figs 1-2)
+    assert intra_plane_latency_s(50, 550) < intra_plane_latency_s(15, 550)
+    assert intra_plane_latency_s(15, 2000) > intra_plane_latency_s(15, 160)
+    grid = isl_latency_grid()
+    assert len(grid) == 7 * 5
+    assert all(lat > 0 for _, _, lat in grid)
+
+
+def test_50plus_sats_reaches_ssd_hdd_band():
+    """Paper §2: 'roughly a latency between SSD and HDD with about 50+
+    satellites in a plane' (<2 ms is their extrapolation)."""
+    hdd_lo = MEMORY_HIERARCHY_S["HDD"][0]  # 2 ms
+    m = required_sats_per_plane_for(2e-3, altitude_km=550.0)
+    assert 40 <= m <= 110  # the paper's 'about 50+' extrapolation
+    assert intra_plane_latency_s(m, 550.0) <= hdd_lo
+
+
+def test_memory_tier_classifier():
+    assert memory_tier_for_latency(12e-9) == "CPU"
+    assert memory_tier_for_latency(3e-3) in ("HDD", "LEO (theoretical Laser)")
+    assert "between" in memory_tier_for_latency(1e-3) or memory_tier_for_latency(1e-3)
+
+
+def test_sweep_covers_fig16_grid():
+    rows = sweep()
+    assert len(rows) == 3 * 4 * 4
+    strategies = {r.strategy for r in rows}
+    assert strategies == {"rotation", "hop", "rotation_hop"}
+    assert all(r.worst_latency_s > 0 for r in rows)
