@@ -7,12 +7,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * table3_kvc_speedup   -- generation speedup from the KVC      (Table 3)
   * tpu_strategy_costs   -- chip-scale placement costs (beyond-paper)
   * protocol_micro       -- set/get/lookup microbenchmarks
+  * serving_throughput   -- paged continuous-batching engine tokens/s vs
+                            the pre-paged (seed) decode loop; also writes
+                            BENCH_serving.json for trend tracking
 
-Run: PYTHONPATH=src python -m benchmarks.run [--full]
+Run: PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -160,6 +164,223 @@ def table3_kvc_speedup(quick: bool = True):
     )]
 
 
+def _seed_sample(logits, key, sp):
+    """Verbatim replica of the seed engine's per-request sampler (argmax
+    short-circuit for greedy) so the baseline is not penalized by the new
+    vectorized sampler's machinery."""
+    import jax
+    import jax.numpy as jnp
+
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k:
+        kth = jax.lax.top_k(logits, sp.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if sp.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(csum < sp.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def _seed_style_tokens_per_s(model, params, requests, batch, max_seq_len,
+                             decode=None):
+    """The pre-paged-runtime serving loop, kept here as the historical
+    baseline: static batches of ``batch`` requests, one-at-a-time dense
+    prefill, per-layer ``.at[].set`` restacking into a dense batch cache,
+    and a per-sequence Python sampling loop with one ``int(...)`` host
+    sync per sequence per token.  A batch runs until its *slowest* member
+    finishes (finished slots idle) -- the utilization gap continuous
+    batching closes.
+
+    ``decode`` must be the caller's long-lived ``jax.jit(model.
+    decode_step)``: the seed engine jitted once in __init__, and a fresh
+    jit wrapper per call would charge retrace/compile to the timed
+    window (jit of a bound method does not share the trace cache).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.tokenizer import ByteTokenizer
+
+    cfg = model.cfg
+    tok = ByteTokenizer(cfg.vocab_size)
+    if decode is None:
+        decode = jax.jit(model.decode_step)
+    key = jax.random.PRNGKey(0)
+    produced = 0
+
+    t_start = time.perf_counter()
+    for lo in range(0, len(requests), batch):
+        chunk = requests[lo : lo + batch]
+        seq_tokens, states, last_logits = [], [], []
+        for r in chunk:
+            ids = tok.encode(r.prompt)[: max_seq_len - 64]
+            lg, _, st = model.forward(
+                params, jnp.asarray(ids, jnp.int32)[None], collect_state=True)
+            seq_tokens.append(ids)
+            states.append(st)
+            last_logits.append(lg[0, -1])
+        b = len(chunk)
+        cache = model.init_cache(b, max_seq_len)
+        for i, st in enumerate(states):
+            n = len(seq_tokens[i])
+            cache["kv"]["k"] = cache["kv"]["k"].at[:, i, :n].set(
+                st["kv"]["k"][:, 0, :n])
+            cache["kv"]["v"] = cache["kv"]["v"].at[:, i, :n].set(
+                st["kv"]["v"][:, 0, :n])
+        pos = jnp.asarray([len(t) for t in seq_tokens], jnp.int32)
+        logits = jnp.stack(last_logits)
+        done = [False] * b
+        out_len = [0] * b
+        max_new = max(r.sampling.max_new_tokens for r in chunk)
+        for _ in range(max_new):
+            key, k = jax.random.split(key)
+            keys = jax.random.split(k, b)
+            nxt = jnp.stack(
+                [_seed_sample(logits[i : i + 1], keys[i],
+                              chunk[i].sampling)[0] for i in range(b)])
+            for i in range(b):
+                if done[i]:
+                    continue
+                tid = int(nxt[i])     # per-sequence host sync (seed behavior)
+                out_len[i] += 1
+                produced += 1
+                if (tid == tok.eos_id
+                        or out_len[i] >= chunk[i].sampling.max_new_tokens):
+                    done[i] = True
+            if all(done):
+                break
+            lg, cache = decode(params, cache, nxt[:, None], pos)
+            logits = lg[:, 0]
+            pos = pos + 1
+    wall = time.perf_counter() - t_start
+    return produced / wall, wall
+
+
+def serving_throughput(quick: bool = True, smoke: bool = False,
+                       json_path: str | None = "BENCH_serving.json"):
+    """Paged continuous-batching engine tokens/s at batch 1/4/8, with and
+    without SkyMemory prefix hits, vs the seed-style decode loop."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import (
+        ConstellationKVC, ConstellationSpec, LosWindow, Sat, Strategy,
+    )
+    from repro.models.model import Model
+    from repro.serving import Engine, EngineStats, Request, SamplingParams
+
+    cfg = get_config("skymemory-tinyllama")
+    if smoke:
+        cfg = cfg.replace(num_layers=2, d_model=256, num_heads=4,
+                          num_kv_heads=2, head_dim=64, d_ff=512,
+                          vocab_size=512, dtype="float32")
+    elif quick:
+        cfg = cfg.replace(num_layers=4, d_model=512, num_heads=8,
+                          num_kv_heads=4, head_dim=64, d_ff=1408,
+                          dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # decode-heavy, heterogeneous stream: generation lengths spread 8..128
+    # (chat-style outputs), ~230-token prompts -- the regime a serving
+    # engine lives in
+    gen_lens = (2, 4, 8, 16) if smoke else (8, 16, 32, 128)
+    max_seq_len = 512
+    block = 128
+    base = ("SkyMemory expands cache memory to LEO constellations, one "
+            "hop from any point on earth; this context repeats in RAG "
+            "workloads and fills a few cache blocks. ")
+
+    def reqs(b):
+        """A serving stream: 2x the slot count with a spread of generation
+        lengths (real request streams are heterogeneous -- that is the
+        regime continuous batching exists for).  Static batching idles
+        finished slots until the slowest member of each chunk completes;
+        continuous batching backfills them from the queue."""
+        return [
+            Request(prompt=f"{base} request {i}",
+                    sampling=SamplingParams(
+                        max_new_tokens=gen_lens[i % len(gen_lens)]))
+            for i in range(2 * b)
+        ]
+
+    rows, record = [], {"config": cfg.name, "smoke": smoke,
+                        "max_new_tokens": list(gen_lens),
+                        "requests_per_run": "2x batch", "batches": {}}
+    for b in (1, 4, 8):
+        # best-of-3 timed runs throughout: host interference (shared CPU)
+        # only ever slows a run down, so the best run is the real rate
+        eng = Engine(model, params, kvc=None, max_seq_len=max_seq_len,
+                     max_batch=b)
+        eng.generate(reqs(b))                      # warm compiles
+        best = None                                # (tps, wall, dec, stats)
+        for _ in range(3):
+            eng.stats = EngineStats()
+            t0 = time.perf_counter()
+            out = eng.generate(reqs(b))
+            run_wall = time.perf_counter() - t0
+            toks = sum(len(r.token_ids) for r in out)
+            run = (toks / run_wall, run_wall,
+                   (eng.stats.decoded_tokens - eng.stats.requests)
+                   / max(eng.stats.decode_time_s, 1e-9), eng.stats)
+            if best is None or run[0] > best[0]:
+                best = run                         # all fields from the
+        tps, wall, dec_tps, stats = best           # same (best) run
+
+        # warm SkyMemory prefix: same prompts again hit full blocks
+        kvc = ConstellationKVC(
+            ConstellationSpec(5, 19, 550.0), LosWindow(Sat(2, 9), 5, 5),
+            Strategy.ROTATION_HOP, num_servers=10, chunk_bytes=6 * 1024,
+        )
+        eng_c = Engine(model, params, kvc=kvc, block_size=block,
+                       max_seq_len=max_seq_len, max_batch=b)
+        eng_c.generate(reqs(b))                    # cold: populate + compile
+        eng_c.write_back = False
+        tps_hit, cached = 0.0, 0
+        for _ in range(2):
+            t0 = time.perf_counter()
+            out_c = eng_c.generate(reqs(b))
+            wall_c = time.perf_counter() - t0
+            toks_c = sum(len(r.token_ids) for r in out_c)
+            tps_hit = max(tps_hit, toks_c / wall_c)
+            cached = sum(r.cached_tokens for r in out_c)
+
+        seed_decode = jax.jit(model.decode_step)     # seed jitted once
+        _seed_style_tokens_per_s(model, params, reqs(b), b, max_seq_len,
+                                 decode=seed_decode)  # warm seed compiles
+        seed_tps = max(
+            _seed_style_tokens_per_s(model, params, reqs(b), b,
+                                     max_seq_len, decode=seed_decode)[0]
+            for _ in range(3))
+        speedup = tps / seed_tps
+        rows.append((
+            f"serving_throughput[batch={b}]", wall * 1e6,
+            f"tok/s={tps:.1f} decode_tok/s={dec_tps:.1f} "
+            f"tok/s_prefix_hit={tps_hit:.1f} cached={cached} "
+            f"seed_tok/s={seed_tps:.1f} speedup_vs_seed={speedup:.2f}x",
+        ))
+        record["batches"][str(b)] = {
+            "tokens_per_s": tps,
+            "decode_tokens_per_s": dec_tps,
+            "tokens_per_s_prefix_hit": tps_hit,
+            "cached_tokens_prefix_hit": cached,
+            "seed_engine_tokens_per_s": seed_tps,
+            "speedup_vs_seed": speedup,
+            "decode_steps": stats.decode_steps,
+            "mid_decode_admissions": stats.mid_decode_admissions,
+        }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        rows.append(("serving_throughput[json]", 0.0, json_path))
+    return rows
+
+
 def tpu_strategy_costs():
     from repro.core.tpu_cache import TorusGrid, strategy_cost_table
 
@@ -217,14 +438,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", dest="quick", action="store_false",
                     default=True, help="full-size TinyLlama for Table 3")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny model for the serving benchmark, "
+                         "skip the slow Table-3 end-to-end run")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     for bench in BENCHES:
         for name, us, derived in bench():
             print(f"{name},{us:.1f},{derived}")
-    for name, us, derived in table3_kvc_speedup(quick=args.quick):
+    for name, us, derived in serving_throughput(
+            quick=args.quick, smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}")
+    if not args.smoke:
+        for name, us, derived in table3_kvc_speedup(quick=args.quick):
+            print(f"{name},{us:.1f},{derived}")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,8 @@ import dataclasses
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 from repro.core.constellation import C_KM_S, ConstellationSpec, LosWindow, Sat
 from repro.core.mapping import Strategy, bounding_box_side, place_servers
 from repro.core.chunking import num_chunks as _num_chunks
@@ -125,19 +127,31 @@ def worst_case_latency(strategy: Strategy, cfg: SimConfig) -> SimResult:
     else:  # HOP: no migration -> drift over a full within-plane period
         phases = list(range(cfg.sats_per_plane))
 
+    # Vectorized phase sweep (the O(phases x servers) hot loop).  Elementwise
+    # float64 ops in the exact order of the original scalar code, and
+    # argmax's first-max tie-breaking matches the strict `>` scan, so the
+    # selected (tot, prop, proc) triples are bit-identical.
+    dp = np.abs(np.array([o[0] for o in offsets], dtype=np.int64))
+    ds = np.array([o[1] for o in offsets], dtype=np.int64)
+    proc = np.array(chunks, dtype=np.int64) * cfg.chunk_processing_time_s
+    phase_arr = np.array(phases, dtype=np.int64)
+    path_km = dp[None, :] * dn + np.abs(ds[None, :] - phase_arr[:, None]) * dm
+    prop_all = uplink_s + path_km / C_KM_S                  # [phases, servers]
+    tot_all = prop_all + proc[None, :]
+    best = np.argmax(tot_all, axis=1)                       # [phases]
+    rows = np.arange(len(phases))
+    per_phase_tot = tot_all[rows, best]
+    per_phase_prop = prop_all[rows, best]
+    per_phase_proc = proc[best]
+
     worst_total = worst_prop = worst_proc = 0.0
     acc = 0.0
-    for phase in phases:
-        per_phase_best = (0.0, 0.0, 0.0)
-        for (dp, ds), c in zip(offsets, chunks):
-            path_km = abs(dp) * dn + abs(ds - phase) * dm
-            prop = uplink_s + path_km / C_KM_S
-            tot = prop + c * cfg.chunk_processing_time_s
-            if tot > per_phase_best[0]:
-                per_phase_best = (tot, prop, c * cfg.chunk_processing_time_s)
-        acc += per_phase_best[0]
-        if per_phase_best[0] > worst_total:
-            worst_total, worst_prop, worst_proc = per_phase_best
+    for i in range(len(phases)):
+        acc += float(per_phase_tot[i])   # sequential sum: seed float order
+        if per_phase_tot[i] > worst_total:
+            worst_total = float(per_phase_tot[i])
+            worst_prop = float(per_phase_prop[i])
+            worst_proc = float(per_phase_proc[i])
     mean_total = acc / len(phases)
     return SimResult(
         strategy.value, cfg.num_servers, cfg.altitude_km,

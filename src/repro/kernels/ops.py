@@ -68,19 +68,30 @@ def flash_attention(
 def paged_attention(
     q, k_pages, v_pages, lengths, *,
     softmax_scale: float | None = None,
+    block_tables=None,
+    grouped: bool | None = None,
     impl: str = "auto",
 ):
-    """Decode attention over a paged KV cache ([B,H,D] x [B,P,page,Hkv,D])."""
+    """Decode attention over a paged KV cache ([B,H,D] x [B,P,page,Hkv,D]).
+
+    ``block_tables`` [B,P] switches to the shared-pool layout: k/v are
+    [N,page,Hkv,D] and pages are resolved per sequence through the table
+    (the serving engine's device-resident layout).  ``grouped`` forces the
+    jnp oracle's grouped-GQA contraction (no head-repeat materialization);
+    the Pallas kernel is always grouped by construction.
+    """
     impl = _resolve(impl)
     if impl == "jnp":
         return ref.paged_attention_ref(
-            q, k_pages, v_pages, lengths, softmax_scale=softmax_scale
+            q, k_pages, v_pages, lengths, softmax_scale=softmax_scale,
+            block_tables=block_tables, grouped=grouped,
         )
     from repro.kernels import paged_attention as pa
 
     return pa.paged_attention(
         q, k_pages, v_pages, lengths,
-        softmax_scale=softmax_scale, interpret=_interpret(),
+        softmax_scale=softmax_scale, block_tables=block_tables,
+        interpret=_interpret(),
     )
 
 

@@ -46,7 +46,9 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    # masked scores contribute exactly 0 even when the whole page is masked
+    # (m_new == NEG_INF would otherwise make exp(s - m_new) == 1)
+    p = jnp.where(s <= NEG_INF * 0.5, 0.0, jnp.exp(s - m_new))
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
@@ -61,12 +63,118 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0, :] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
 
 
+def _kernel_bt(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+               acc_ref, *, scale: float, page: int, num_pages: int):
+    """Block-table variant: k/v arrive from a shared page pool; the page id
+    for (sequence, page-slot) was resolved in the index map from the
+    scalar-prefetched block table.  Only the length read differs here."""
+    ib = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)               # [d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [page, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # [page, d]
+    length = len_ref[ib]
+
+    s = jax.lax.dot_general(
+        k, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0] * scale                                      # [page]
+    pos = ip * page + jax.lax.iota(jnp.int32, page)
+    s = jnp.where(pos < length, s, NEG_INF)
+    s = s[None, :]                                       # [1, page]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # masked scores contribute exactly 0 even when the whole page is masked
+    # (m_new == NEG_INF would otherwise make exp(s - m_new) == 1)
+    p = jnp.where(s <= NEG_INF * 0.5, 0.0, jnp.exp(s - m_new))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ip == num_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
+
+
+def _paged_attention_bt(q, k_pool, v_pool, lengths, block_tables, *,
+                        softmax_scale, interpret):
+    """Pool layout: k/v [N, page, Hkv, D]; block_tables [B, P] page ids.
+
+    The block table and lengths ride scalar prefetch (SMEM), so the k/v
+    index maps can dereference ``bt[ib, ip]`` -- pages stream straight from
+    the pool with no per-sequence gather/copy on the host or in HBM.
+    """
+    b, h, d = q.shape
+    _, page, hkv, _ = k_pool.shape
+    np_ = block_tables.shape[1]
+    dv = v_pool.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    rep = h // hkv
+
+    kernel = functools.partial(_kernel_bt, scale=scale, page=page,
+                               num_pages=np_)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, np_),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda ib, ih, ip, lens, bt: (ib, ih, 0)),
+            pl.BlockSpec(
+                (1, page, 1, d),
+                lambda ib, ih, ip, lens, bt, rep=rep:
+                    (bt[ib, ip], 0, ih // rep, 0),
+            ),
+            pl.BlockSpec(
+                (1, page, 1, dv),
+                lambda ib, ih, ip, lens, bt, rep=rep:
+                    (bt[ib, ip], 0, ih // rep, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv),
+                               lambda ib, ih, ip, lens, bt: (ib, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q, k_pool, v_pool)
+
+
 def paged_attention(
     q, k_pages, v_pages, lengths, *,
     softmax_scale: float | None = None,
+    block_tables=None,
     interpret: bool = False,
 ):
-    """q: [B,H,D]; k/v pages: [B,P,page,Hkv,D]; lengths: [B] -> out [B,H,D]."""
+    """q: [B,H,D]; k/v pages: [B,P,page,Hkv,D]; lengths: [B] -> out [B,H,D].
+
+    With ``block_tables`` [B,P], k/v are instead a shared page pool
+    [N,page,Hkv,D] and each sequence's pages are resolved through its
+    block-table row (scalar prefetch)."""
+    if block_tables is not None:
+        return _paged_attention_bt(
+            q, k_pages, v_pages, lengths, block_tables,
+            softmax_scale=softmax_scale, interpret=interpret,
+        )
     b, h, d = q.shape
     _, np_, page, hkv, _ = k_pages.shape
     dv = v_pages.shape[-1]

@@ -139,23 +139,40 @@ GQA_GROUPED = _os.environ.get("REPRO_GQA_GROUPED", "0") == "1"
 
 def paged_attention_ref(
     q: jax.Array,              # [B, H, D] single decode query per sequence
-    k_pages: jax.Array,        # [B, P, page, Hkv, D]
-    v_pages: jax.Array,        # [B, P, page, Hkv, D]
+    k_pages: jax.Array,        # [B, P, page, Hkv, D] or pool [N, page, Hkv, D]
+    v_pages: jax.Array,        # same layout as k_pages
     lengths: jax.Array,        # [B] number of valid tokens in the cache
     *,
     softmax_scale: float | None = None,
     grouped: bool | None = None,
+    block_tables: jax.Array | None = None,   # [B, P] page ids into the pool
 ) -> jax.Array:
     """Decode attention over a block-paged KV cache (one new token).
 
-    Pages here are the *contiguous per-sequence* page list (the serving
-    layer's block table has already gathered pages into sequence order --
-    this mirrors how SkyMemory reassembles a block from its chunks).
+    Two layouts:
+    * ``block_tables=None`` -- pages are the *contiguous per-sequence* page
+      list ``[B, P, page, Hkv, D]`` (the serving layer already gathered
+      pages into sequence order, mirroring how SkyMemory reassembles a
+      block from its chunks);
+    * ``block_tables=[B, P]`` -- k/v are a shared page *pool*
+      ``[N, page, Hkv, D]`` and each sequence's pages are looked up through
+      its block-table row (the serving engine's layout: pages are
+      allocated/freed dynamically and never copied into sequence order).
+
+    A row with ``lengths == 0`` has no valid key and returns zeros (matching
+    the Pallas kernel, whose online-softmax accumulator stays empty).
     """
+    if block_tables is not None:
+        k_pages = jnp.take(k_pages, block_tables, axis=0)
+        v_pages = jnp.take(v_pages, block_tables, axis=0)
+        if grouped is None:
+            # serving hot path: never materialize the head-repeated cache
+            grouped = True
     b, p, page, hkv, d = k_pages.shape
     grouped = GQA_GROUPED if grouped is None else grouped
     k = k_pages.reshape(b, p * page, hkv, d)
     v = v_pages.reshape(b, p * page, hkv, d)
+    any_valid = (lengths > 0)[:, None, None]
     if grouped:
         h = q.shape[1]
         rep = h // hkv
@@ -167,7 +184,8 @@ def paged_attention_ref(
         s = jnp.where(valid, s, NEG_INF)
         probs = jax.nn.softmax(s, axis=-1).astype(v.dtype)
         out = jnp.einsum("bgrs,bsgd->bgrd", probs, v)
-        return out.reshape(b, h, d)
+        out = out.reshape(b, h, v.shape[-1])
+        return jnp.where(any_valid, out, jnp.zeros_like(out))
     out = attention_ref(
         q[:, None],
         k,
@@ -175,8 +193,8 @@ def paged_attention_ref(
         causal=False,
         lengths=lengths,
         softmax_scale=softmax_scale,
-    )
-    return out[:, 0]
+    )[:, 0]
+    return jnp.where(any_valid, out, jnp.zeros_like(out))
 
 
 def ssd_scan_ref(

@@ -11,20 +11,15 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import maybe_shard
 from repro.kernels import ops
+from repro.models.cache import KVC_INT8_SCALE, dequant_kvc, quant_kvc
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init
 from repro.models.rope import apply_rope
 
 PAGE_SIZE = 128  # KV-cache page (= the paper's 128-token block)
-KVC_INT8_SCALE = 1.0 / 32.0  # symmetric int8 KVC quantization step
 
-
-def _quant(x):
-    return jnp.clip(jnp.round(x / KVC_INT8_SCALE), -127, 127).astype(jnp.int8)
-
-
-def _dequant(x, dtype):
-    return (x.astype(jnp.float32) * KVC_INT8_SCALE).astype(dtype)
+_quant = quant_kvc
+_dequant = dequant_kvc
 
 
 def init_attention(key, cfg: ModelConfig):
@@ -144,6 +139,76 @@ def attention_decode(
         k_read, v_read = k_cache, v_cache
     out = _paged(q[:, 0], k_read, v_read, n_valid.astype(jnp.int32))
     return out.reshape(b, 1, h * hd) @ params["wo"], k_cache, v_cache
+
+
+def attention_decode_paged(
+    params,
+    x,                     # [B, 1, d_model]
+    cfg: ModelConfig,
+    *,
+    k_pool,                # [N_pages, page, Hkv, hd] shared page pool
+    v_pool,
+    block_tables,          # [B, P] page ids per slot; None in contiguous mode
+    lengths,               # [B] int32: tokens already cached per sequence
+    contiguous: bool = False,
+):
+    """One-token decode against the shared page pool (continuous batching).
+
+    Per-sequence positions are heterogeneous (slots admit mid-decode), so
+    RoPE, the page write, and the attention mask are all driven by
+    ``lengths``.  The new K/V is scattered into the page holding position
+    ``lengths[b]`` -- pages are exclusive to a slot, so the scatter rows
+    never collide (idle slots write into their own region / the scratch
+    page, which the next admission overwrites).
+
+    ``contiguous`` (slot-region pools): slot ``b`` owns pages
+    ``[b*P, (b+1)*P)``, so the page id is arithmetic and attention reads
+    the pool as ``[B, P, page, Hkv, hd]`` by reshape -- zero gather and no
+    table on device.  Otherwise pages resolve through ``block_tables``
+    (the scalar-prefetch kernel path).
+    """
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim
+    page = k_pool.shape[1]
+    pos = jnp.asarray(lengths, jnp.int32)                  # [B]
+
+    q, k_new, v_new = _project_qkv(params, x, x, cfg)
+    positions = pos[:, None]                               # [B,1] abs position
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = maybe_shard(q, "decode_qkv")
+    k_new = maybe_shard(k_new, "decode_qkv")
+    v_new = maybe_shard(v_new, "decode_qkv")
+
+    if contiguous:
+        p_max = k_pool.shape[0] // b
+        page_ids = jnp.arange(b, dtype=jnp.int32) * p_max + pos // page
+    else:
+        page_ids = jnp.take_along_axis(
+            block_tables, (pos // page)[:, None], axis=1)[:, 0]  # [B]
+    slots = pos % page
+    int8_kvc = k_pool.dtype == jnp.int8
+    if int8_kvc:
+        k_new, v_new = _quant(k_new), _quant(v_new)
+    k_pool = k_pool.at[page_ids, slots].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[page_ids, slots].set(v_new[:, 0].astype(v_pool.dtype))
+    if int8_kvc:
+        k_read = _dequant(k_pool, x.dtype)
+        v_read = _dequant(v_pool, x.dtype)
+    else:
+        k_read, v_read = k_pool, v_pool
+    if contiguous:
+        hkv = k_read.shape[2]
+        shape = (b, k_read.shape[0] // b, page, hkv, k_read.shape[3])
+        out = ops.paged_attention(
+            q[:, 0], k_read.reshape(shape), v_read.reshape(shape), pos + 1,
+            grouped=True,
+        )
+    else:
+        out = ops.paged_attention(
+            q[:, 0], k_read, v_read, pos + 1, block_tables=block_tables
+        )
+    return out.reshape(b, 1, h * hd) @ params["wo"], k_pool, v_pool
 
 
 def _paged(q, k_cache, v_cache, lengths):

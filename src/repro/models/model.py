@@ -22,7 +22,12 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import maybe_shard
 from repro.models import cache as cache_lib
-from repro.models.attention import attention_decode, attention_prefill, init_attention
+from repro.models.attention import (
+    attention_decode,
+    attention_decode_paged,
+    attention_prefill,
+    init_attention,
+)
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     apply_mlp,
@@ -472,6 +477,67 @@ class Model:
         return cache_lib.init_cache(
             self.cfg, batch, seq_len, specs_only=specs_only, src_len=src_len
         )
+
+    @property
+    def supports_paged_decode(self) -> bool:
+        return cache_lib.supports_paged_decode(self.cfg)
+
+    def init_paged_cache(self, *, num_slots: int, page_size: int,
+                         max_seq_len: int, num_pages: int | None = None):
+        return cache_lib.PagedKVCache(
+            self.cfg, num_slots=num_slots, page_size=page_size,
+            max_seq_len=max_seq_len, num_pages=num_pages,
+        )
+
+    def decode_step_paged(self, params, k_pool, v_pool, tokens,
+                          block_tables, lengths, *, contiguous=False):
+        """One continuous-batching serve step over the shared page pool.
+
+        ``tokens`` [B,1] at per-sequence absolute positions ``lengths`` [B]
+        (heterogeneous: slots admit mid-decode); ``k_pool``/``v_pool`` are
+        ``[L, N_pages, page, Hkv, hd]``; ``block_tables`` [B, P] maps each
+        slot's logical pages to pool pages (``None`` with
+        ``contiguous=True``, where slot regions make page ids arithmetic).
+        Returns (logits [B,1,V], k_pool', v_pool').  Dense-attention
+        families only (``supports_paged_decode``).
+        """
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+
+        # The stacked pools ride the scan CARRY and each layer writes back
+        # through dynamic_update_index_in_dim, so XLA aliases the update in
+        # place -- a ys-stacked scan would materialize a full copy of the
+        # cache every token (the dominant memory traffic of a decode step).
+        def body(carry, l):
+            x, kp, vp = carry
+            p = jax.tree.map(lambda a: a[l], params["blocks"])
+            h = apply_norm(p["norm1"], x, cfg)
+            a, kl, vl = attention_decode_paged(
+                p["attn"], h, cfg, k_pool=kp[l], v_pool=vp[l],
+                block_tables=block_tables, lengths=lengths,
+                contiguous=contiguous,
+            )
+            x = x + a
+            h2 = apply_norm(p["norm2"], x, cfg)
+            if cfg.num_experts > 0:
+                y, _ = moe_forward(p["moe"], h2, cfg)
+            else:
+                y = apply_mlp(p["mlp"], h2, cfg)
+            kp = jax.lax.dynamic_update_index_in_dim(kp, kl, l, 0)
+            vp = jax.lax.dynamic_update_index_in_dim(vp, vl, l, 0)
+            return (x + y, kp, vp), None
+
+        carry = (x, k_pool, v_pool)
+        if self.unroll:
+            for l in range(cfg.num_layers):
+                carry, _ = body(carry, l)
+        else:
+            carry, _ = jax.lax.scan(
+                body, carry, jnp.arange(cfg.num_layers))
+        x, ks, vs = carry
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)
+        return logits, ks, vs
 
     def decode_step(self, params, cache, tokens, pos):
         """One serve step: ``tokens`` [B,1] at absolute position ``pos``

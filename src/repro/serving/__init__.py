@@ -1,16 +1,77 @@
+"""Serving layer: the paged, continuously-batched SkyMemory runtime.
+
+Engine architecture
+===================
+
+**Paged layout.**  Dense-attention families decode against a
+``repro.models.cache.PagedKVCache``: one device-resident pool of K/V pages
+per layer (``[L, N_pages, page, Hkv, hd]``) whose page size equals the
+SkyMemory block size (the paper's 128-token KVC blocks).  Each batch slot
+owns a page list through an int32 block table; pages come from a shared
+free list and are recycled when a sequence finishes.  Because pages and
+constellation blocks coincide, a prefix fetched from the LEO cache is
+reshaped ``[L, n_blocks, page, Hkv, hd]`` and scattered straight into pool
+pages -- there is no dense per-sequence restacking between prefill and
+decode.  Full-size pools (the default) use fixed per-slot page regions,
+so decode attention reads the pool as ``[B, P, page, Hkv, hd]`` by
+reshape with zero gather; oversubscribed pools (explicit ``num_pages``)
+resolve pages through the Pallas paged-attention kernel's block-table
+variant (scalar-prefetched tables; pure-jnp grouped-GQA oracle on CPU).
+The jitted step donates the pools, so backends with buffer donation
+update the cache in place.
+
+**Scheduler states.**  A request moves QUEUED -> RUNNING -> FINISHED
+(``repro.serving.request.SeqState``).  Admission fills freed slots from
+the queue *mid-decode* (continuous batching): prefill runs for the new
+request (bucketed to power-of-two lengths to bound recompiles, or only
+the uncached suffix on a SkyMemory hit), its pages are written, and the
+next fused step simply includes the slot.  Admission reserves the
+worst-case page span (prompt + max_new_tokens, capped at max_seq_len),
+so a running sequence never exhausts the pool mid-decode and block
+tables only change at admission/release; unused pages return to the
+free list at early EOS.  Finish reasons: ``eos``, ``max_new_tokens``,
+``max_seq_len``.
+
+**Sync points.**  The decode loop launches ONE jitted program per step
+(embed -> layers -> paged attention -> vectorized per-slot sampler) and
+performs ONE host sync per step: reading the sampled token ids, which the
+host scheduler needs for EOS detection, page allocation, and admission.
+Prefill and first-token sampling sync once per *admission* (amortized
+over the whole generation).  Sampling parameters (temperature / top-k /
+top-p) are stacked into [B] arrays and re-uploaded only when slot
+membership changes.
+
+Non-paged families (MLA latent, SSM state, hybrid, encoder-decoder) keep
+a dense batched cache but share the vectorized sampler and the
+one-sync-per-step loop; paging their decode state is future work.
+"""
 from repro.serving.engine import Engine, EngineStats
-from repro.serving.request import GenerationResult, Request
-from repro.serving.sampler import SamplingParams, sample
+from repro.serving.request import (
+    FinishReason,
+    GenerationResult,
+    Request,
+    SeqState,
+)
+from repro.serving.sampler import (
+    SamplingParams,
+    sample,
+    sample_batch,
+    stack_sampling,
+)
 from repro.serving.skycache import SkyKVCAdapter
 from repro.serving.tokenizer import ByteTokenizer
 
 __all__ = [
     "Engine",
     "EngineStats",
+    "FinishReason",
     "GenerationResult",
     "Request",
     "SamplingParams",
+    "SeqState",
     "sample",
+    "sample_batch",
+    "stack_sampling",
     "SkyKVCAdapter",
     "ByteTokenizer",
 ]

@@ -1,14 +1,28 @@
-"""Serving engine: batched generation with a SkyMemory prefix cache.
+"""Serving engine: a paged, continuously-batched, device-resident runtime.
 
 Per request: tokenize -> SkyMemory longest-prefix lookup (radix index +
-constellation fetch) -> restore the block state -> prefill only the
-uncached suffix -> batched decode.  New full blocks are written back to the
-constellation (Set KVC), so repeated prompts/contexts hit more blocks --
-the paper's §5 testbed loop, with the LEO cache simulated in-process.
+constellation fetch) -> drop fetched 128-token blocks straight into KV
+pages -> prefill only the uncached suffix -> continuous-batching decode.
+New full blocks are written back to the constellation (Set KVC), so
+repeated prompts/contexts hit more blocks -- the paper's §5 testbed loop,
+with the LEO cache simulated in-process.
+
+Architecture (see ``repro.serving`` package docstring for the full map):
+
+* dense-attention families run the **paged runtime**: a ``PagedKVCache``
+  pool (page size = the SkyMemory block size) lives on device across
+  requests; each decode step is ONE jitted program (embed -> layers ->
+  block-table paged attention -> vectorized sampler) over every slot, and
+  the only host sync per step is reading the sampled token ids for EOS /
+  scheduling.  Freed slots readmit queued requests mid-decode.
+* MLA / SSM / hybrid / encoder-decoder families keep the dense per-batch
+  cache (their decode state is not plain per-token K/V) but share the
+  vectorized sampler and the one-sync-per-step decode loop.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -17,8 +31,13 @@ import numpy as np
 
 from repro.core.protocol import ConstellationKVC, KVCManager
 from repro.models.model import Model
-from repro.serving.request import GenerationResult, Request
-from repro.serving.sampler import SamplingParams, sample
+from repro.serving.request import (
+    FinishReason,
+    GenerationResult,
+    Request,
+    SeqState,
+)
+from repro.serving.sampler import SamplingParams, sample_batch, stack_sampling
 from repro.serving.skycache import SkyKVCAdapter
 from repro.serving.tokenizer import ByteTokenizer
 
@@ -31,17 +50,25 @@ class EngineStats:
     decoded_tokens: int = 0
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
+    decode_steps: int = 0             # jitted step programs launched
+    mid_decode_admissions: int = 0    # requests admitted into a live batch
 
 
 @dataclass
 class _Seq:
     request: Request
     tokens: list[int]
-    cached: int
-    state: dict
-    last_logits: jnp.ndarray  # [V] logits at the final prompt position
+    state: SeqState = SeqState.QUEUED
+    cached: int = 0
     out_ids: list[int] = field(default_factory=list)
     done: bool = False
+    finish_reason: str = FinishReason.MAX_NEW_TOKENS.value
+    enqueue_t: float = 0.0
+    ttft_s: float = 0.0
+    wall_s: float = 0.0
+    # legacy (non-paged) path only:
+    dense_state: dict | None = None
+    last_logits: jnp.ndarray | None = None
 
 
 class Engine:
@@ -56,6 +83,7 @@ class Engine:
         max_batch: int = 8,
         write_back: bool = True,
         seed: int = 0,
+        num_pages: int | None = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -74,31 +102,379 @@ class Engine:
                 self.tokenizer.encode, self.adapter.kvc_fn, kvc,
                 block_size=block_size,
             )
-        self._decode = jax.jit(model.decode_step)
+        self.paged = model.supports_paged_decode
+        if self.paged:
+            # page size == SkyMemory block size: fetched blocks are pages
+            self.page_size = block_size
+            self.cache = model.init_paged_cache(
+                num_slots=max_batch, page_size=block_size,
+                max_seq_len=max_seq_len, num_pages=num_pages,
+            )
+            # pools are donated: on backends with donation support the
+            # one-token write updates the cache in place instead of
+            # copying the whole pool every step (CPU falls back to copy)
+            self._step = jax.jit(self._paged_step,
+                                 static_argnames=("mode",),
+                                 donate_argnums=(1, 2))
+            self._prefill = jax.jit(
+                lambda p, t: self.model.forward(p, t, collect_state=True)
+            )
+        else:
+            self._decode = jax.jit(model.decode_step)
+            self._sample = jax.jit(sample_batch)
 
     # ------------------------------------------------------------------
     def generate(self, requests: list[Request]) -> list[GenerationResult]:
+        if not requests:
+            return []
+        if self.paged:
+            return self._generate_paged(requests)
         results: list[GenerationResult] = []
         for lo in range(0, len(requests), self.max_batch):
             results.extend(self._run_batch(requests[lo : lo + self.max_batch]))
         return results
 
-    # ------------------------------------------------------------------
+    # ==================================================================
+    # Paged runtime (dense-attention families)
+    # ==================================================================
+    def _paged_step(self, params, k_pool, v_pool, block_tables, lengths,
+                    tokens, key, temps, top_ks, top_ps, *, mode):
+        """One fused decode step: model + sampler, one device program.
+
+        ``mode`` is decided host-side from the *active slots'* sampling
+        params (it only changes on admission/finish, so at most a few
+        compilations): ``greedy`` is a pure argmax, ``temp`` skips the
+        top-k/top-p sort machinery, ``full`` runs the general sampler.
+        """
+        logits, k_pool, v_pool = self.model.decode_step_paged(
+            params, k_pool, v_pool, tokens[:, None], block_tables, lengths,
+            contiguous=self.cache.contiguous,
+        )
+        lg = logits[:, 0]
+        if mode == "greedy":
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        elif mode == "temp":
+            lg32 = lg.astype(jnp.float32)
+            greedy = jnp.argmax(lg32, axis=-1).astype(jnp.int32)
+            is_greedy = temps <= 0.0
+            scaled = lg32 / jnp.where(is_greedy, 1.0, temps)[:, None]
+            sampled = jax.random.categorical(key, scaled, -1).astype(jnp.int32)
+            nxt = jnp.where(is_greedy, greedy, sampled)
+        else:
+            nxt = sample_batch(lg, key, temps, top_ks, top_ps)
+        return nxt, k_pool, v_pool
+
+    @staticmethod
+    def _sampler_mode(samp: list[SamplingParams]) -> str:
+        if any(p.top_k > 0 or p.top_p < 1.0 for p in samp
+               if p.temperature > 0.0):
+            return "full"
+        if any(p.temperature > 0.0 for p in samp):
+            return "temp"
+        return "greedy"
+
+    def _generate_paged(
+        self, requests: list[Request]
+    ) -> list[GenerationResult]:
+        t_start = time.perf_counter()
+        seqs = [self._make_seq(r) for r in requests]
+        pending: deque[_Seq] = deque(seqs)
+        active: dict[int, _Seq] = {}
+        free_slots = list(range(self.max_batch - 1, -1, -1))
+        b = self.max_batch
+
+        lengths_h = np.zeros(b, np.int32)
+        tokens_h = np.zeros(b, np.int32)
+        samp = [SamplingParams() for _ in range(b)]
+        samp_dirty = bt_dirty = True
+
+        while pending or active:
+            # -- admission: fill freed slots from the queue ------------
+            admitted: list[tuple[_Seq, int]] = []
+            while (pending and free_slots
+                   and self.cache.can_admit(
+                       self._reserve_tokens(pending[0]))):
+                s = pending.popleft()
+                slot = free_slots.pop()
+                # reserve pages NOW so can_admit for the rest of the wave
+                # sees the shrunken free list (free-list pools)
+                self.cache.ensure_capacity(slot, self._reserve_tokens(s))
+                if active:
+                    self.stats.mid_decode_admissions += 1
+                admitted.append((s, slot))
+            if admitted:
+                self._admit_wave(admitted, lengths_h, tokens_h, samp)
+                samp_dirty = bt_dirty = True
+                for s, slot in admitted:
+                    if s.done:        # finished on its very first token
+                        self._release(s, slot, lengths_h, tokens_h, samp)
+                        free_slots.append(slot)
+                    else:
+                        active[slot] = s
+            if not active:
+                if pending:
+                    raise RuntimeError(
+                        "cannot admit request: KV page pool too small for a "
+                        f"{self._reserve_tokens(pending[0])}-token worst-case"
+                        " footprint (prompt + max_new_tokens)")
+                break
+
+            if samp_dirty:
+                temps_d, tks_d, tps_d = stack_sampling(samp)
+                mode = self._sampler_mode(samp)
+                samp_dirty = False
+            if bt_dirty:
+                # contiguous slot regions need no table on device; free-list
+                # pools upload the table only when admission/release (the
+                # full worst-case span is reserved up front) changed it
+                bt_d = (None if self.cache.contiguous
+                        else jnp.asarray(self.cache.block_tables))
+                bt_dirty = False
+            len_d = jnp.asarray(lengths_h)
+            tok_d = jnp.asarray(tokens_h)
+
+            # -- one fused device step; ONE host sync (the token read) --
+            self._key, k = jax.random.split(self._key)
+            t0 = time.perf_counter()
+            nxt, k_pool, v_pool = self._step(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                bt_d, len_d, tok_d, k, temps_d, tks_d, tps_d, mode=mode,
+            )
+            self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
+            nxt_h = np.asarray(nxt)           # the step's single host sync
+            self.stats.decode_time_s += time.perf_counter() - t0
+            self.stats.decode_steps += 1
+
+            # -- host-side scheduling on the synced token ids ----------
+            for slot, s in list(active.items()):
+                tid = int(nxt_h[slot])
+                s.out_ids.append(tid)
+                self.stats.decoded_tokens += 1
+                lengths_h[slot] += 1
+                if self._finished(s, tid):
+                    active.pop(slot)
+                    self._release(s, slot, lengths_h, tokens_h, samp)
+                    free_slots.append(slot)
+                    samp_dirty = bt_dirty = True
+                else:
+                    tokens_h[slot] = tid
+
+        wall = time.perf_counter() - t_start
+        out = []
+        for s in seqs:
+            s.wall_s = wall
+            out.append(self._result(s))
+        return out
+
+    def _make_seq(self, req: Request) -> _Seq:
+        tokens = self.tokenizer.encode(req.prompt)[: self.max_seq_len - 64]
+        return _Seq(request=req, tokens=tokens, enqueue_t=time.perf_counter())
+
+    def _reserve_tokens(self, s: _Seq) -> int:
+        """Worst-case token footprint: pages for this many tokens are
+        reserved at admission so decode can never exhaust the pool."""
+        return min(len(s.tokens) + s.request.sampling.max_new_tokens,
+                   self.max_seq_len)
+
+    def _bucket(self, n: int) -> int:
+        """Prefill length bucket (next power of two, floor 32, capped at
+        max_seq_len): bounds the number of distinct prefill compilations
+        to O(log max_seq_len) without padding past the sequence cap."""
+        b = 32
+        while b < n:
+            b *= 2
+        return min(b, max(n, self.max_seq_len))
+
+    def _admit_wave(self, admitted: list[tuple[_Seq, int]],
+                    lengths_h, tokens_h, samp) -> None:
+        """Prefill a wave of admissions: SkyMemory hits restore blocks
+        straight into pages and prefill only their suffix (per sequence);
+        misses prefill as ONE batched, bucketed forward.  First tokens for
+        the whole wave are sampled in one call with one host sync."""
+        t0 = time.perf_counter()
+        last_logits: list = []
+        fresh: list[tuple[_Seq, int]] = []
+        for s, slot in admitted:
+            # (pages were already reserved in the admission loop)
+            n = len(s.tokens)
+            payload = cached = None
+            if self.manager is not None:
+                payload, cached = self.manager.get_cache_tokens(s.tokens)
+                if payload is not None and cached >= n:
+                    # whole prompt cached: replay the final block so the
+                    # decode loop has a starting distribution (keeps page
+                    # alignment)
+                    cached = max(0, cached - self.page_size)
+            if payload is not None and cached:
+                last_logits.append(
+                    self._prefill_with_prefix(s, slot, payload, cached))
+            elif self.cfg.num_experts > 0:
+                # MoE: capacity-based expert routing is group-composition
+                # dependent, so bucket padding would alter real tokens'
+                # routing -- prefill exactly, one sequence at a time
+                s.cached = 0
+                last_logits.append(self._prefill_exact(s, slot))
+            else:
+                s.cached = 0
+                fresh.append((s, slot))
+                last_logits.append(None)
+            if self.write_back and self.manager is not None:
+                # Set KVC now, before the NEXT wave member's lookup, so
+                # duplicate contexts within one admission wave still hit
+                # (the paper's repeated-context workload)
+                self.manager.add_blocks_tokens(s.tokens)
+
+        if fresh:
+            # one batched forward per length bucket; causal masking makes
+            # the zero padding past each row's length invisible
+            by_bucket: dict[int, list[int]] = {}
+            for i, (s, _) in enumerate(fresh):
+                by_bucket.setdefault(self._bucket(len(s.tokens)), []).append(i)
+            fresh_logits: dict[int, jnp.ndarray] = {}
+            for bucket, idxs in by_bucket.items():
+                rows = 1
+                while rows < len(idxs):      # pad batch dim to a power of
+                    rows *= 2                # two: O(log^2) compilations
+                toks = np.zeros((rows, bucket), np.int32)
+                for row, i in enumerate(idxs):
+                    toks[row, : len(fresh[i][0].tokens)] = fresh[i][0].tokens
+                lg, _, state = self._prefill(self.params, jnp.asarray(toks))
+                for row, i in enumerate(idxs):
+                    s, slot = fresh[i]
+                    n = len(s.tokens)
+                    self.cache.write_token_span(
+                        slot, 0,
+                        state["kv"]["k"][:, row, :n],
+                        state["kv"]["v"][:, row, :n],
+                    )
+                    fresh_logits[i] = lg[row, n - 1]
+            fi = 0
+            for j, lgt in enumerate(last_logits):
+                if lgt is None:
+                    last_logits[j] = fresh_logits[fi]
+                    fi += 1
+
+        for s, slot in admitted:
+            self.stats.cached_tokens += s.cached
+            self.stats.prefilled_tokens += len(s.tokens) - s.cached
+            s.state = SeqState.RUNNING
+        self.stats.prefill_time_s += time.perf_counter() - t0
+
+        # first tokens for the wave from the prefill logits: one sample
+        # call, one host sync (at admission, not in the decode loop)
+        self._key, k = jax.random.split(self._key)
+        t_arr, tk_arr, tp_arr = stack_sampling(
+            [s.request.sampling for s, _ in admitted])
+        tids = np.asarray(sample_batch(
+            jnp.stack(last_logits), k, t_arr, tk_arr, tp_arr))
+        now = time.perf_counter()
+        for (s, slot), tid in zip(admitted, tids):
+            tid = int(tid)
+            s.out_ids.append(tid)
+            s.ttft_s = now - s.enqueue_t
+            self.stats.decoded_tokens += 1
+            if not self._finished(s, tid):
+                lengths_h[slot] = len(s.tokens)
+                tokens_h[slot] = tid
+                samp[slot] = s.request.sampling
+
+    def _prefill_exact(self, s: _Seq, slot: int):
+        """Unpadded, per-sequence prefill (MoE families, where padding
+        would perturb capacity-based routing of real tokens)."""
+        n = len(s.tokens)
+        toks = jnp.asarray(s.tokens, jnp.int32)[None]
+        lg, _, state = self.model.forward(
+            self.params, toks, collect_state=True)
+        self.cache.write_token_span(
+            slot, 0,
+            state["kv"]["k"][:, 0, :n],
+            state["kv"]["v"][:, 0, :n],
+        )
+        return lg[0, n - 1]
+
+    def _prefill_with_prefix(self, s: _Seq, slot: int, payload: bytes,
+                             cached: int):
+        """SkyMemory hit: fetched blocks drop straight into pool pages (no
+        dense restacking) and only the uncached suffix runs through the
+        model, attending over the restored prefix."""
+        n = len(s.tokens)
+        # 1. constellation blocks -> pages
+        k_blocks, v_blocks = self.adapter.payload_to_pages(
+            payload, cached, self.page_size)
+        self.cache.write_pages(slot, 0, k_blocks, v_blocks)
+        # 2. suffix prefill attends over the restored prefix -- built from
+        # the page tensors already decoded above (one deserialization)
+        la, _, _, hkv, hd = k_blocks.shape
+        prefix_state = {
+            "kv": {
+                "k": k_blocks.reshape(la, cached, hkv, hd)[:, None],
+                "v": v_blocks.reshape(la, cached, hkv, hd)[:, None],
+            }
+        }
+        toks = jnp.asarray(s.tokens, jnp.int32)[None]
+        lg, _, state = self.model.forward(
+            self.params, toks[:, cached:], q_offset=cached,
+            prefix_state=prefix_state, collect_state=True,
+        )
+        # forward returns prefix+suffix K/V; only the suffix is new
+        self.cache.write_token_span(
+            slot, cached,
+            state["kv"]["k"][:, 0, cached:n],
+            state["kv"]["v"][:, 0, cached:n],
+        )
+        s.cached = cached
+        return lg[0, -1]
+
+    def _finished(self, s: _Seq, tid: int) -> bool:
+        if tid == self.tokenizer.eos_id:
+            s.done, s.finish_reason = True, FinishReason.EOS.value
+        elif len(s.out_ids) >= s.request.sampling.max_new_tokens:
+            s.done = True
+            s.finish_reason = FinishReason.MAX_NEW_TOKENS.value
+        elif len(s.tokens) + len(s.out_ids) >= self.max_seq_len:
+            s.done = True
+            s.finish_reason = FinishReason.MAX_SEQ_LEN.value
+        return s.done
+
+    def _release(self, s: _Seq, slot: int, lengths_h, tokens_h, samp):
+        s.state = SeqState.FINISHED
+        self.cache.free_slot(slot)
+        lengths_h[slot] = 0
+        tokens_h[slot] = 0
+        samp[slot] = SamplingParams()
+        self.stats.requests += 1
+
+    def _result(self, s: _Seq) -> GenerationResult:
+        return GenerationResult(
+            request_id=s.request.request_id,
+            prompt=s.request.prompt,
+            text=self.tokenizer.decode(s.out_ids),
+            token_ids=s.out_ids,
+            prompt_tokens=len(s.tokens),
+            cached_tokens=s.cached,
+            prefill_tokens=len(s.tokens) - s.cached,
+            wall_time_s=s.wall_s,
+            ttft_s=s.ttft_s,
+            finish_reason=s.finish_reason,
+        )
+
+    # ==================================================================
+    # Dense runtime (MLA / SSM / hybrid / enc-dec families)
+    # ==================================================================
     def _prefill_one(self, req: Request) -> _Seq:
         t0 = time.perf_counter()
-        tokens = self.tokenizer.encode(req.prompt)[: self.max_seq_len - 64]
+        s = self._make_seq(req)
+        tokens = s.tokens
         cached = 0
         prefix_state = None
         if self.manager is not None:
-            # token-level lookup: coverage matches the (truncated) sequence
-            # this engine will actually run
             payload, cached = self.manager.get_cache_tokens(tokens)
             if payload is not None:
                 prefix_state = self.adapter.payload_to_state(payload)
         toks = jnp.asarray(tokens, jnp.int32)[None]
         if cached >= len(tokens):
-            # whole prompt cached: replay the final token so the decode loop
-            # has a starting distribution
+            # whole prompt cached: replay the final token so the decode
+            # loop has a starting distribution
             cached = len(tokens) - 1
         if cached:
             lg, _, state = self.model.forward(
@@ -114,14 +490,21 @@ class Engine:
         self.stats.prefilled_tokens += len(tokens) - cached
         if self.write_back and self.manager is not None:
             self.manager.add_blocks_tokens(tokens)
-        return _Seq(request=req, tokens=tokens, cached=cached, state=state,
-                    last_logits=lg[0, -1])
+        s.cached = cached
+        s.dense_state = state
+        s.last_logits = lg[0, -1]
+        s.state = SeqState.RUNNING
+        return s
 
-    def _stack_caches(self, seqs: list[_Seq]):
+    def _stack_dense_caches(self, seqs: list[_Seq]):
+        """Dense prefill->decode handoff for the NON-paged families only
+        (MLA latents, SSM state, hybrid, enc-dec): per-sequence states are
+        restacked into one batched cache.  Paged families never come here
+        -- their blocks were written into pool pages at admission."""
         cache = self.model.init_cache(len(seqs), self.max_seq_len)
         for i, s in enumerate(seqs):
             n = len(s.tokens)
-            st = s.state
+            st = s.dense_state
             if "kv" in st and "kv" in cache:
                 cache["kv"]["k"] = cache["kv"]["k"].at[:, i, :n].set(
                     st["kv"]["k"][:, 0, :n])
@@ -142,31 +525,36 @@ class Engine:
     def _run_batch(self, requests: list[Request]) -> list[GenerationResult]:
         t_start = time.perf_counter()
         seqs = [self._prefill_one(r) for r in requests]
-        cache = self._stack_caches(seqs)
-        b = len(seqs)
+        cache = self._stack_dense_caches(seqs)
         pos = jnp.asarray([len(s.tokens) for s in seqs], jnp.int32)
 
-        # first token from each sequence's prefill logits
+        # first token of each sequence from its prefill logits
         logits = jnp.stack([s.last_logits for s in seqs])
+        temps_d, tks_d, tps_d = stack_sampling(
+            [s.request.sampling for s in seqs])
 
         max_new = max(s.request.sampling.max_new_tokens for s in seqs)
         t_dec = time.perf_counter()
+        first = True
         for _step in range(max_new):
             self._key, k = jax.random.split(self._key)
-            nxt = _sample_per_seq(logits, k, seqs)
+            nxt = self._sample(logits, k, temps_d, tks_d, tps_d)
+            nxt_h = np.asarray(nxt)           # the step's single host sync
             for i, s in enumerate(seqs):
                 if s.done:
                     continue
-                tid = int(nxt[i])
+                tid = int(nxt_h[i])
                 s.out_ids.append(tid)
-                if (tid == self.tokenizer.eos_id
-                        or len(s.out_ids) >= s.request.sampling.max_new_tokens
-                        or len(s.tokens) + len(s.out_ids) >= self.max_seq_len):
-                    s.done = True
-            self.stats.decoded_tokens += sum(0 if s.done else 1 for s in seqs)
+                if first:
+                    s.ttft_s = time.perf_counter() - s.enqueue_t
+                self._finished(s, tid)
+            first = False
+            self.stats.decoded_tokens += sum(
+                0 if s.done else 1 for s in seqs)
             if all(s.done for s in seqs):
                 break
             lg, cache = self._decode(self.params, cache, nxt[:, None], pos)
+            self.stats.decode_steps += 1
             logits = lg[:, 0]
             pos = pos + 1
         self.stats.decode_time_s += time.perf_counter() - t_dec
@@ -175,22 +563,7 @@ class Engine:
         wall = time.perf_counter() - t_start
         for s in seqs:
             self.stats.requests += 1
-            out.append(GenerationResult(
-                request_id=s.request.request_id,
-                prompt=s.request.prompt,
-                text=self.tokenizer.decode(s.out_ids),
-                token_ids=s.out_ids,
-                prompt_tokens=len(s.tokens),
-                cached_tokens=s.cached,
-                prefill_tokens=len(s.tokens) - s.cached,
-                wall_time_s=wall,
-            ))
+            s.state = SeqState.FINISHED
+            s.wall_s = wall
+            out.append(self._result(s))
         return out
-
-
-def _sample_per_seq(logits, key, seqs) -> jnp.ndarray:
-    keys = jax.random.split(key, len(seqs))
-    out = []
-    for i, s in enumerate(seqs):
-        out.append(sample(logits[i : i + 1], keys[i], s.request.sampling)[0])
-    return jnp.stack(out)

@@ -1,12 +1,27 @@
-"""Serving request/response types."""
+"""Serving request/response types and scheduler states."""
 from __future__ import annotations
 
+import enum
 import itertools
 from dataclasses import dataclass, field
 
 from repro.serving.sampler import SamplingParams
 
 _ids = itertools.count()
+
+
+class SeqState(enum.Enum):
+    """Lifecycle of a request inside the continuous-batching scheduler."""
+
+    QUEUED = "queued"        # waiting for a free slot + pages
+    RUNNING = "running"      # owns a slot; decoded every step
+    FINISHED = "finished"    # slot and pages released
+
+
+class FinishReason(enum.Enum):
+    EOS = "eos"
+    MAX_NEW_TOKENS = "max_new_tokens"
+    MAX_SEQ_LEN = "max_seq_len"
 
 
 @dataclass
@@ -26,3 +41,5 @@ class GenerationResult:
     cached_tokens: int          # tokens restored from SkyMemory (prefix hit)
     prefill_tokens: int         # tokens actually prefilled
     wall_time_s: float = 0.0
+    ttft_s: float = 0.0         # queue-entry -> first token latency
+    finish_reason: str = FinishReason.MAX_NEW_TOKENS.value

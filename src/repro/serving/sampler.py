@@ -1,4 +1,20 @@
-"""Token sampling: greedy / temperature / top-k / top-p."""
+"""Token sampling: greedy / temperature / top-k / top-p.
+
+Two entry points:
+
+* ``sample_batch`` -- fully vectorized over heterogeneous per-sequence
+  parameters (temperature/top-k/top-p stacked into [B] arrays).  This is
+  the serving hot path: the engine jits it *fused with the decode step*,
+  so one device program per token produces the next token ids for every
+  slot -- no per-sequence Python loop, no per-sequence host sync.
+* ``sample``       -- the original per-request API (uniform params),
+  now a thin wrapper over ``sample_batch``.
+
+Disabled filters are encoded as identities rather than branches so one
+compiled program covers any parameter mix: ``top_k == 0`` selects the
+V-th largest as the threshold (keeps everything) and ``top_p >= 1`` sets
+the cumulative-probability cutoff past 1 (never reached).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -15,19 +31,72 @@ class SamplingParams:
     max_new_tokens: int = 32
 
 
+def stack_sampling(params: list[SamplingParams], pad_to: int | None = None):
+    """Stack per-sequence params into the [B] arrays ``sample_batch`` takes.
+
+    Padding rows (inactive slots) are greedy: argmax is the cheapest path
+    and their output is masked by the scheduler anyway.
+    """
+    n = pad_to if pad_to is not None else len(params)
+    temps = [0.0] * n
+    top_ks = [0] * n
+    top_ps = [1.0] * n
+    for i, p in enumerate(params):
+        temps[i], top_ks[i], top_ps[i] = p.temperature, p.top_k, p.top_p
+    return (
+        jnp.asarray(temps, jnp.float32),
+        jnp.asarray(top_ks, jnp.int32),
+        jnp.asarray(top_ps, jnp.float32),
+    )
+
+
+def sample_batch(
+    logits: jax.Array,          # [B, V]
+    key,
+    temperature: jax.Array,     # [B] float32; <= 0 -> greedy
+    top_k: jax.Array,           # [B] int32;   0 -> disabled
+    top_p: jax.Array,           # [B] float32; >= 1 -> disabled
+) -> jax.Array:
+    """Vectorized sampling with per-row parameters -> token ids [B]."""
+    v = logits.shape[-1]
+    lg32 = logits.astype(jnp.float32)
+    greedy_ids = jnp.argmax(lg32, axis=-1).astype(jnp.int32)
+
+    is_greedy = temperature <= 0.0
+    temp = jnp.where(is_greedy, 1.0, temperature)[:, None]
+    lg = lg32 / temp
+
+    # top-k: threshold at the k-th largest (k=0 -> V-th largest = min).
+    k_eff = jnp.where(top_k <= 0, v, jnp.clip(top_k, 1, v))     # [B]
+    sorted_desc = jnp.sort(lg, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
+    lg = jnp.where(lg < kth, -jnp.inf, lg)
+
+    # top-p on the (already top-k-masked) logits, matching the sequential
+    # semantics: keep the smallest prefix of the sorted distribution whose
+    # cumulative probability reaches p.  Top-k masking only removes a
+    # descending-sorted *suffix*, so the masked sort is the original sort
+    # with positions >= k set to -inf -- no second O(V log V) sort.
+    sorted_masked = jnp.where(
+        jnp.arange(v)[None, :] < k_eff[:, None], sorted_desc, -jnp.inf)
+    probs = jax.nn.softmax(sorted_masked, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    p_eff = jnp.where(top_p >= 1.0, 2.0, top_p)[:, None]        # 2 -> never
+    cutoff_idx = jnp.sum(csum < p_eff, axis=-1, keepdims=True)
+    cutoff_idx = jnp.minimum(cutoff_idx, v - 1)
+    cutoff = jnp.take_along_axis(sorted_masked, cutoff_idx, axis=-1)
+    lg = jnp.where(lg < cutoff, -jnp.inf, lg)
+
+    sampled = jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    return jnp.where(is_greedy, greedy_ids, sampled)
+
+
 def sample(logits: jax.Array, key, params: SamplingParams) -> jax.Array:
-    """logits: [B, V] -> token ids [B]."""
-    if params.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / params.temperature
-    if params.top_k:
-        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    if params.top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        csum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(csum < params.top_p, axis=-1, keepdims=True)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    """logits: [B, V] -> token ids [B] (uniform params across the batch)."""
+    b = logits.shape[0]
+    return sample_batch(
+        logits, key,
+        jnp.full((b,), params.temperature, jnp.float32),
+        jnp.full((b,), params.top_k, jnp.int32),
+        jnp.full((b,), params.top_p, jnp.float32),
+    )

@@ -72,6 +72,31 @@ class SkyKVCAdapter:
             }
         return state
 
+    def payload_to_pages(self, payload: bytes, n_tokens: int,
+                         page_size: int):
+        """Dense-family payload -> page-shaped K/V blocks, ready to drop
+        straight into a ``PagedKVCache`` pool (no dense restacking).
+
+        Returns ``(k_blocks, v_blocks)`` of shape
+        ``[layers, n_tokens/page, page, Hkv, hd]``.  ``n_tokens`` must be
+        page-aligned -- SkyMemory prefixes always are, because the engine's
+        page size equals the constellation block size.
+        """
+        cfg = self.cfg
+        if cfg.use_mla or cfg.arch_type in ("ssm", "hybrid"):
+            raise ValueError(f"{cfg.name}: payload is not plain paged K/V")
+        if n_tokens % page_size:
+            raise ValueError("cached prefix must be page-aligned")
+        arrs = bytes_to_arrays(payload)
+        k, v = arrs[0], arrs[1]                      # [L, n_cov, Hkv, hd]
+        la, _, hkv, hd = k.shape
+        nb = n_tokens // page_size
+        shape = (la, nb, page_size, hkv, hd)
+        return (
+            jnp.asarray(k[:, :n_tokens]).reshape(shape),
+            jnp.asarray(v[:, :n_tokens]).reshape(shape),
+        )
+
     # -- the KVCManager hook ----------------------------------------------
     def kvc_fn(self, tokens: Sequence[int], past: bytes | None,
                past_len: int) -> bytes:

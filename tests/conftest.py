@@ -1,0 +1,65 @@
+"""Test-session bootstrap.
+
+Property-based tests use ``hypothesis`` (declared in pyproject's ``test``
+extra).  When it is missing -- e.g. a minimal container with only jax +
+pytest -- install a stub into ``sys.modules`` so the four property-test
+modules still *collect*: ``@given`` tests skip with a clear reason and every
+plain test in those modules runs normally.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    class _Strategy:
+        """Placeholder for strategy objects (never drawn from)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: _Strategy()
+
+        def __call__(self, *a, **k):
+            return _Strategy()
+
+    def _strategy_factory(*a, **k):
+        return _Strategy()
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            def wrapper(*a, **k):
+                pytest.skip("hypothesis not installed (pip install '.[test]')")
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def _settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def _assume(_cond=True):
+        return True
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = _given
+    hyp.settings = _settings
+    hyp.assume = _assume
+    hyp.example = _settings
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, filter_too_much=None, data_too_large=None
+    )
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.__getattr__ = lambda name: _strategy_factory
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

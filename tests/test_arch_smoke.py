@@ -60,6 +60,14 @@ def test_train_step_finite_grads(name):
 @pytest.mark.parametrize("name", ARCHS)
 def test_decode_matches_forward(name):
     cfg, model, params, toks, kw = _setup(name)
+    if cfg.num_experts:
+        # as in test_prefix_resume_matches_full_forward: raise capacity so
+        # no token drops -- a 1-token decode group routes differently from
+        # the 33-token forward group, which legitimately changes outputs
+        # under capacity-based dropping (a property of dropping MoE, not
+        # of the decode cache)
+        cfg = cfg.replace(capacity_factor=float(cfg.num_experts))
+        model = Model(cfg)
     logits, _, state = model.forward(params, toks, collect_state=True, **kw)
     n_img = cfg.num_image_tokens if cfg.arch_type == "vlm" else 0
     total = S + n_img

@@ -94,16 +94,91 @@ def test_paged_attention_matches_oracle(b, p, page, h, hkv, d, dtype):
 
 
 def test_paged_attention_length_edge_cases():
+    """Ragged lengths: empty (0), single token, partial final page, page
+    boundary, boundary+1, completely full."""
     b, p, page, h, d = 2, 3, 16, 2, 8
     q = _rand((b, h, d), jnp.float32)
     k = _rand((b, p, page, h, d), jnp.float32)
     v = _rand((b, p, page, h, d), jnp.float32)
-    for lengths in ([1, 48], [16, 17], [48, 48]):
+    for lengths in ([0, 48], [1, 41], [16, 17], [0, 0], [15, 33], [48, 48]):
         lg = jnp.asarray(lengths, jnp.int32)
         want = ref.paged_attention_ref(q, k, v, lg)
         got = paged_attention(q, k, v, lg, interpret=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   atol=2e-5, rtol=2e-4)
+                                   atol=2e-5, rtol=2e-4, err_msg=str(lengths))
+
+
+def test_paged_attention_zero_length_returns_zeros():
+    """A slot with no cached tokens (freshly admitted / idle) must produce
+    exactly zero, not a uniform average over garbage pages."""
+    b, p, page, h, d = 1, 2, 8, 2, 4
+    q = _rand((b, h, d), jnp.float32)
+    k = _rand((b, p, page, h, d), jnp.float32)
+    v = _rand((b, p, page, h, d), jnp.float32)
+    lg = jnp.asarray([0], jnp.int32)
+    assert np.abs(np.asarray(
+        paged_attention(q, k, v, lg, interpret=True))).max() == 0.0
+    assert np.abs(np.asarray(ref.paged_attention_ref(q, k, v, lg))).max() == 0.0
+
+
+def test_paged_attention_gqa_head_mapping():
+    """Query head h must read KV head h // (H/Hkv).  Values are constant
+    per KV head, so any mapping mistake shifts the output by >= 1."""
+    b, p, page, h, hkv, d = 1, 2, 8, 8, 4, 4
+    q = _rand((b, h, d), jnp.float32)
+    k = _rand((b, p, page, hkv, d), jnp.float32)
+    v = jnp.broadcast_to(
+        jnp.arange(hkv, dtype=jnp.float32)[None, None, None, :, None],
+        (b, p, page, hkv, d),
+    )
+    lengths = jnp.asarray([11], jnp.int32)
+    out = np.asarray(paged_attention(q, k, v, lengths, interpret=True))
+    rep = h // hkv
+    for ih in range(h):
+        np.testing.assert_allclose(out[0, ih], ih // rep, atol=1e-5)
+    np.testing.assert_allclose(
+        out, np.asarray(ref.paged_attention_ref(q, k, v, lengths)),
+        atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_block_tables(dtype):
+    """Shared-pool layout: kernel with scalar-prefetched block tables ==
+    oracle == gathering pages into contiguous order first."""
+    b, h, hkv, d, page, p_max, n_pages = 3, 4, 2, 16, 8, 4, 16
+    q = _rand((b, h, d), dtype)
+    kp = _rand((n_pages, page, hkv, d), dtype)
+    vp = _rand((n_pages, page, hkv, d), dtype)
+    bt = jnp.asarray(
+        RNG.permutation(n_pages)[: b * p_max].reshape(b, p_max), jnp.int32)
+    lengths = jnp.asarray([0, 13, 32], jnp.int32)
+    want = ref.paged_attention_ref(q, kp, vp, lengths, block_tables=bt)
+    got = paged_attention(q, kp, vp, lengths, block_tables=bt,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    # contiguous gather of the same tables gives the same attention
+    contig = paged_attention(q, kp[bt], vp[bt], lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(contig, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_block_tables_share_prefix_pages():
+    """Two sequences may alias the same physical pages (a shared SkyMemory
+    prefix): results must equal private copies of those pages."""
+    b, h, hkv, d, page = 2, 2, 2, 8, 4
+    q = _rand((b, h, d), jnp.float32)
+    pool = _rand((6, page, hkv, d), jnp.float32)
+    bt_shared = jnp.asarray([[1, 2], [1, 3]], jnp.int32)   # page 1 shared
+    bt_private = jnp.asarray([[4, 2], [5, 3]], jnp.int32)
+    pool_priv = pool.at[4].set(pool[1]).at[5].set(pool[1])
+    lengths = jnp.asarray([7, 5], jnp.int32)
+    a = paged_attention(q, pool, pool, lengths, block_tables=bt_shared,
+                        interpret=True)
+    c = paged_attention(q, pool_priv, pool_priv, lengths,
+                        block_tables=bt_private, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                               atol=2e-5, rtol=2e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +250,21 @@ def test_ops_dispatch_jnp_vs_pallas(monkeypatch):
     monkeypatch.setenv("REPRO_KERNEL_IMPL", "jnp")
     c = ops.flash_attention(q, k, v, impl="pallas")  # env overrides
     np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=0)
+
+
+def test_ops_paged_dispatch_block_tables():
+    """ops.paged_attention routes block tables to both implementations."""
+    b, h, hkv, d, page, p_max, n_pages = 2, 4, 2, 8, 4, 3, 8
+    q = _rand((b, h, d), jnp.float32)
+    kp = _rand((n_pages, page, hkv, d), jnp.float32)
+    vp = _rand((n_pages, page, hkv, d), jnp.float32)
+    bt = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    lengths = jnp.asarray([5, 12], jnp.int32)
+    a = ops.paged_attention(q, kp, vp, lengths, block_tables=bt, impl="jnp")
+    b_ = ops.paged_attention(q, kp, vp, lengths, block_tables=bt,
+                             impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               atol=2e-5, rtol=2e-4)
 
 
 def test_paged_attention_grouped_matches_repeat():

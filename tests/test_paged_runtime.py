@@ -1,0 +1,327 @@
+"""Paged decode runtime: page allocator, vectorized sampler, continuous
+batching, and equivalence with the pre-paged dense decode loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import ConstellationKVC, ConstellationSpec, LosWindow, Sat, Strategy
+from repro.models.cache import PagedKVCache, supports_paged_decode
+from repro.models.model import Model
+from repro.serving import (
+    Engine,
+    Request,
+    SamplingParams,
+    sample,
+    sample_batch,
+    stack_sampling,
+)
+
+PROMPT = "SkyMemory stripes KV cache chunks across LEO satellites. " * 3
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache allocator
+# ---------------------------------------------------------------------------
+
+def _cache(cfg, slots=2, page=16, max_seq=64, contiguous=False):
+    # explicit num_pages -> the general free-list allocator; default
+    # (num_pages=None) -> contiguous slot regions
+    pages = None if contiguous else 1 + slots * (max_seq // page)
+    return PagedKVCache(cfg, num_slots=slots, page_size=page,
+                        max_seq_len=max_seq, num_pages=pages)
+
+
+def test_contiguous_regions_default(dense_setup):
+    """Default pool: fixed slot regions, no scratch page, stable tables."""
+    cfg, _, _ = dense_setup
+    c = _cache(cfg, contiguous=True)
+    assert c.contiguous and c.num_pages == 2 * 4
+    assert list(c.block_tables[0]) == [0, 1, 2, 3]
+    assert list(c.block_tables[1]) == [4, 5, 6, 7]
+    assert c.free_pages == 8
+    assert c.ensure_capacity(0, 64) is False      # table never changes
+    assert c.free_pages == 4 and c.can_admit(64)
+    c.ensure_capacity(1, 16)
+    assert not c.can_admit(16)                     # no free slot left
+    c.free_slot(0)
+    assert c.free_pages == 4 and c.can_admit(64)
+    with pytest.raises(RuntimeError):
+        c.ensure_capacity(0, 65)                   # > pages_per_seq
+
+
+def test_allocator_scratch_page_reserved(dense_setup):
+    cfg, _, _ = dense_setup
+    c = _cache(cfg)
+    assert not c.contiguous
+    c.ensure_capacity(0, 64)
+    c.ensure_capacity(1, 64)
+    assert 0 not in c.block_tables[np.nonzero(c.block_tables)]  # real pages
+    used = {pid for row in c.block_tables for pid in row if pid}
+    assert 0 not in used and len(used) == 8
+
+
+def test_allocator_free_and_reuse(dense_setup):
+    cfg, _, _ = dense_setup
+    c = _cache(cfg)
+    c.ensure_capacity(0, 33)                    # 3 pages of 16
+    pages = list(c.block_tables[0, :3])
+    assert c.free_pages == c.num_pages - 1 - 3
+    c.free_slot(0)
+    assert c.free_pages == c.num_pages - 1
+    assert (c.block_tables[0] == 0).all()       # repointed at scratch
+    c.ensure_capacity(1, 48)
+    assert set(c.block_tables[1, :3]) == set(pages)  # pages recycled
+
+
+def test_allocator_limits(dense_setup):
+    cfg, _, _ = dense_setup
+    c = _cache(cfg)
+    with pytest.raises(RuntimeError):
+        c.ensure_capacity(0, 65)                # > pages_per_seq
+    assert c.can_admit(63) and not c.can_admit(200)
+
+
+def test_write_pages_roundtrip(dense_setup):
+    cfg, _, _ = dense_setup
+    c = _cache(cfg)
+    c.ensure_capacity(0, 32)
+    la, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    k = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (la, 2, 16, hkv, hd)), jnp.float32)
+    c.write_pages(0, 0, k, k + 1)
+    ids = c.block_tables[0, :2]
+    np.testing.assert_allclose(np.asarray(c.k_pool[:, ids]), np.asarray(k))
+    np.testing.assert_allclose(np.asarray(c.v_pool[:, ids]),
+                               np.asarray(k + 1))
+
+
+def test_supports_paged_decode_families():
+    assert supports_paged_decode(get_config("internlm2-1.8b"))
+    assert supports_paged_decode(get_config("skymemory-tinyllama"))
+    assert not supports_paged_decode(get_config("mamba2-1.3b"))
+    assert not supports_paged_decode(get_config("zamba2-1.2b"))
+    assert not supports_paged_decode(get_config("deepseek-v3-671b"))
+    assert not supports_paged_decode(get_config("seamless-m4t-large-v2"))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized sampler
+# ---------------------------------------------------------------------------
+
+def test_sample_batch_greedy_rows_are_argmax():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    t, k, p = stack_sampling([SamplingParams()] * 4)
+    out = sample_batch(logits, jax.random.PRNGKey(0), t, k, p)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_batch_heterogeneous_params():
+    """One call serves a mixed batch: greedy rows are exact argmax; top-k=1
+    rows are argmax even at high temperature; top-p ~ 0 rows too."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.standard_normal((3, 128)) * 3, jnp.float32)
+    params = [
+        SamplingParams(temperature=0.0),
+        SamplingParams(temperature=5.0, top_k=1),
+        SamplingParams(temperature=5.0, top_p=1e-6),
+    ]
+    t, k, p = stack_sampling(params)
+    out = np.asarray(sample_batch(logits, jax.random.PRNGKey(3), t, k, p))
+    np.testing.assert_array_equal(out, np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_batch_topk_stays_in_support():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.standard_normal((2, 256)), jnp.float32)
+    params = [SamplingParams(temperature=1.0, top_k=5)] * 2
+    t, k, p = stack_sampling(params)
+    topk_sets = [set(np.argsort(np.asarray(logits[i]))[-5:]) for i in range(2)]
+    for seed in range(20):
+        out = np.asarray(
+            sample_batch(logits, jax.random.PRNGKey(seed), t, k, p))
+        assert out[0] in topk_sets[0] and out[1] in topk_sets[1]
+
+
+def test_sample_wrapper_matches_batch_semantics():
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.standard_normal((2, 32)), jnp.float32)
+    sp = SamplingParams(temperature=0.0)
+    np.testing.assert_array_equal(
+        np.asarray(sample(logits, jax.random.PRNGKey(0), sp)),
+        np.asarray(jnp.argmax(logits, -1)))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+def test_continuous_batching_admits_mid_decode(dense_setup):
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2)
+    reqs = [Request(prompt=f"{PROMPT} {i}",
+                    sampling=SamplingParams(max_new_tokens=3 + 2 * i))
+            for i in range(5)]
+    res = eng.generate(reqs)
+    assert len(res) == 5
+    assert [r.request_id for r in res] == [q.request_id for q in reqs]
+    for i, r in enumerate(res):
+        assert 1 <= len(r.token_ids) <= 3 + 2 * i
+        assert r.ttft_s >= 0.0 and r.finish_reason
+    # more requests than slots forces mid-decode admissions
+    assert eng.stats.mid_decode_admissions > 0
+    assert eng.stats.requests == 5
+    # all pages returned to the pool after the loop drains
+    assert eng.cache.free_pages == eng.cache.num_pages
+
+
+def test_paged_engine_matches_dense_decode_loop(dense_setup):
+    """Greedy generations from the paged continuous-batching runtime match
+    a dense (pre-paged) decode loop over model.decode_step."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2)
+    assert eng.paged
+    max_new = 6
+    prompts = [f"{PROMPT} alpha", f"{PROMPT} beta"]
+    res = eng.generate(
+        [Request(prompt=p, sampling=SamplingParams(max_new_tokens=max_new))
+         for p in prompts])
+
+    # dense reference loop (the seed engine's hot path)
+    from repro.serving.tokenizer import ByteTokenizer
+    tok = ByteTokenizer(cfg.vocab_size)
+    decode = jax.jit(model.decode_step)
+    for p, r in zip(prompts, res):
+        ids = tok.encode(p)[: 256 - 64]
+        lg, _, st = model.forward(
+            params, jnp.asarray(ids, jnp.int32)[None], collect_state=True)
+        cache = model.init_cache(1, 256)
+        n = len(ids)
+        cache["kv"]["k"] = cache["kv"]["k"].at[:, 0, :n].set(
+            st["kv"]["k"][:, 0, :n])
+        cache["kv"]["v"] = cache["kv"]["v"].at[:, 0, :n].set(
+            st["kv"]["v"][:, 0, :n])
+        logits = lg[0, -1][None]
+        pos = jnp.asarray([n], jnp.int32)
+        want = []
+        for _ in range(max_new):
+            tid = int(jnp.argmax(logits[0]))
+            want.append(tid)
+            if tid == tok.eos_id:
+                break
+            lg2, cache = decode(params, cache,
+                                jnp.asarray([[tid]], jnp.int32), pos)
+            logits = lg2[:, 0]
+            pos = pos + 1
+        assert r.token_ids == want
+
+
+def test_paged_engine_prefix_blocks_drop_into_pages(dense_setup):
+    """SkyMemory hit path: fetched blocks land in pool pages and greedy
+    output is unchanged vs the cache-less engine."""
+    cfg, model, params = dense_setup
+    spec = ConstellationSpec(15, 15, 550.0)
+    kvc = ConstellationKVC(spec, LosWindow(Sat(7, 7), 9, 9),
+                           Strategy.ROTATION_HOP, num_servers=10,
+                           chunk_bytes=6 * 1024)
+    eng_c = Engine(model, params, kvc=kvc, block_size=16, max_seq_len=256,
+                   max_batch=2)
+    eng_n = Engine(model, params, max_seq_len=256, max_batch=2)
+    sp = SamplingParams(max_new_tokens=6)
+    eng_c.generate([Request(prompt=PROMPT, sampling=sp)])
+    rc = eng_c.generate([Request(prompt=PROMPT, sampling=sp)])[0]
+    rn = eng_n.generate([Request(prompt=PROMPT, sampling=sp)])[0]
+    assert rc.cached_tokens > 0 and rc.cached_tokens % 16 == 0  # page-aligned
+    assert rc.token_ids == rn.token_ids
+
+
+def test_contiguous_and_free_list_engines_agree(dense_setup):
+    """The zero-gather slot-region layout and the general block-table
+    layout are the same cache semantics: identical greedy generations."""
+    cfg, model, params = dense_setup
+    sp = SamplingParams(max_new_tokens=5)
+    eng_c = Engine(model, params, block_size=16, max_seq_len=256,
+                   max_batch=2)
+    eng_f = Engine(model, params, block_size=16, max_seq_len=256,
+                   max_batch=2, num_pages=1 + 2 * 16)
+    assert eng_c.cache.contiguous and not eng_f.cache.contiguous
+    reqs = [Request(prompt=f"{PROMPT} {i}", sampling=sp) for i in range(3)]
+    rc = eng_c.generate(reqs)
+    rf = eng_f.generate([Request(prompt=f"{PROMPT} {i}", sampling=sp)
+                         for i in range(3)])
+    assert [r.token_ids for r in rc] == [r.token_ids for r in rf]
+
+
+def test_same_wave_duplicate_contexts_hit_cache(dense_setup):
+    """Regression: requests submitted together must still benefit from
+    write-back of earlier wave members (Set KVC happens per sequence
+    before the next lookup, as in the sequential admission path)."""
+    cfg, model, params = dense_setup
+    kvc = ConstellationKVC(ConstellationSpec(15, 15, 550.0),
+                           LosWindow(Sat(7, 7), 9, 9),
+                           Strategy.ROTATION_HOP, num_servers=10,
+                           chunk_bytes=6 * 1024)
+    eng = Engine(model, params, kvc=kvc, block_size=16, max_seq_len=256,
+                 max_batch=4)
+    sp = SamplingParams(max_new_tokens=2)
+    res = eng.generate([Request(prompt=PROMPT, sampling=sp)
+                        for _ in range(3)])
+    assert res[0].cached_tokens == 0
+    assert res[1].cached_tokens > 0 and res[2].cached_tokens > 0
+
+
+def test_free_list_wave_does_not_over_admit(dense_setup):
+    """Regression: a multi-request admission wave on an oversubscribed
+    free-list pool must reserve pages as it admits -- never exhaust the
+    pool mid-serve."""
+    cfg, model, params = dense_setup
+    # pages for ~1.5 worst-case sequences, 4 slots, 4 concurrent requests
+    eng = Engine(model, params, block_size=16, max_seq_len=256,
+                 max_batch=4, num_pages=1 + 24)
+    sp = SamplingParams(max_new_tokens=30)
+    res = eng.generate([Request(prompt="wave pressure " * 12, sampling=sp)
+                        for _ in range(4)])
+    assert [len(r.token_ids) for r in res] == [30] * 4
+    assert eng.cache.free_pages == eng.cache.num_pages - 1
+
+
+def test_paged_engine_int8_kvc_pool():
+    """Quantized KVC (paper's 8-bit memory trade-off) rides the page pool:
+    writes quantize, reads dequantize, generation still runs."""
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(
+        dtype="float32", kvc_dtype="int8")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, block_size=16, max_seq_len=128, max_batch=2)
+    assert eng.cache.k_pool.dtype == jnp.int8
+    res = eng.generate([Request(prompt=PROMPT,
+                                sampling=SamplingParams(max_new_tokens=4))])
+    assert 1 <= len(res[0].token_ids) <= 4
+
+
+def test_payload_to_pages_matches_dense_state(dense_setup):
+    cfg, model, params = dense_setup
+    from repro.serving.skycache import SkyKVCAdapter
+    adapter = SkyKVCAdapter(model, params)
+    tokens = list(range(3, 35))
+    payload = adapter.kvc_fn(tokens, None, 0)
+    k_blocks, v_blocks = adapter.payload_to_pages(payload, 32, 16)
+    state = adapter.payload_to_state(payload)
+    la, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    np.testing.assert_allclose(
+        np.asarray(k_blocks.reshape(la, 32, hkv, hd)),
+        np.asarray(state["kv"]["k"][:, 0, :32]))
+    np.testing.assert_allclose(
+        np.asarray(v_blocks.reshape(la, 32, hkv, hd)),
+        np.asarray(state["kv"]["v"][:, 0, :32]))
