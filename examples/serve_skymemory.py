@@ -73,11 +73,20 @@ def main() -> None:
         hit = r.cached_tokens / max(r.prompt_tokens, 1) * 100
         print(f"req {r.request_id}: prompt={r.prompt_tokens}tok "
               f"cached={r.cached_tokens} ({hit:.0f}% hit) "
-              f"prefilled={r.prefill_tokens} -> {len(r.token_ids)} new tok")
+              f"prefilled={r.prefill_tokens} -> {len(r.token_ids)} new tok "
+              f"ttft={r.ttft_s*1e3:.0f}ms")
     s = engine.stats
     print(f"\nengine: {s.requests} requests in {wall:.1f}s | "
           f"cached {s.cached_tokens} tok, prefilled {s.prefilled_tokens} "
-          f"tok, decoded {s.decoded_tokens} tok")
+          f"tok, decoded {s.decoded_tokens} tok | "
+          f"{s.prefill_chunks} prefill chunks "
+          f"(budget {engine.chunk_tokens} tok/step rides the decode step)")
+    pct = s.latency_percentiles()
+    print("chunked-admission latency: ttft "
+          f"p50={pct['ttft_s']['p50']*1e3:.0f}ms "
+          f"p99={pct['ttft_s']['p99']*1e3:.0f}ms | inter-token "
+          f"p50={pct['itl_s']['p50']*1e3:.1f}ms "
+          f"p99={pct['itl_s']['p99']*1e3:.1f}ms")
     print(f"constellation: hits={kvc.stats.block_hits} "
           f"misses={kvc.stats.block_misses} blocks_set={kvc.stats.blocks_set}")
     print(f"simulated worst-case fetch latency "

@@ -139,6 +139,125 @@ def chunked_prefill_attention(
     return out[:, :sq]
 
 
+def _kernel_paged(len_ref, off_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, page: int,
+                  block_q: int, num_pages: int):
+    """Paged variant: q is a prefill *chunk* whose keys live in a shared
+    page pool; the page id for (sequence, page-slot) was resolved in the
+    index map from the scalar-prefetched block table, and the causal
+    offset / valid length arrive per sequence through SMEM (they are
+    traced values in the serving engine's fused step, not compile-time
+    constants like the dense kernel's ``q_offset``)."""
+    ib = pl.program_id(0)
+    iq = pl.program_id(2)
+    ip = pl.program_id(3)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)            # [bq, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [page, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # [page, d]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                            # [bq, page]
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + off_ref[ib]
+    k_pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (k_pos <= q_pos) & (k_pos < len_ref[ib])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # masked scores contribute exactly 0 even when the whole page is masked
+    # (m_new == NEG_INF would otherwise make exp(s - m_new) == 1)
+    p = jnp.where(s <= NEG_INF * 0.5, 0.0, jnp.exp(s - m_new))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ip == num_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def chunked_prefill_paged(
+    q, k_pool, v_pool, lengths, block_tables, q_offsets, *,
+    softmax_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    interpret: bool = False,
+):
+    """Chunked prefill reading keys straight from a shared page pool.
+
+    q: [B,Sq,H,Dq] (one chunk per sequence); k/v pool: [N,page,Hkv,D];
+    lengths [B] total valid kv tokens; block_tables [B,P] page ids;
+    q_offsets [B] absolute position of each chunk's first query.  Returns
+    [B,Sq,H,Dv].  Unlike ``chunked_prefill_attention`` the offset and
+    length are *runtime* values (scalar prefetch), so one compiled kernel
+    serves every chunk of a prefill as it advances -- and the prefix pages
+    (SkyMemory-restored blocks, earlier chunks) are read in place, never
+    gathered into a contiguous per-sequence tensor.  Fully masked query
+    rows (padded chunk tail, ``lengths == 0``) return zeros.
+    """
+    b, sq, h, dq = q.shape
+    _, page, hkv, dv = v_pool.shape
+    np_ = block_tables.shape[1]
+    scale = softmax_scale if softmax_scale is not None else dq ** -0.5
+    rep = h // hkv
+
+    block_q = min(block_q, _round_up(sq))
+    pq = (-sq) % block_q
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    nq = qp.shape[1] // block_q
+
+    kernel = functools.partial(
+        _kernel_paged, scale=scale, page=page, block_q=block_q,
+        num_pages=np_,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, nq, np_),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dq),
+                         lambda ib, ih, iq, ip, lens, offs, bt:
+                             (ib, iq, ih, 0)),
+            pl.BlockSpec((1, page, 1, dq),
+                         lambda ib, ih, iq, ip, lens, offs, bt, rep=rep:
+                             (bt[ib, ip], 0, ih // rep, 0)),
+            pl.BlockSpec((1, page, 1, dv),
+                         lambda ib, ih, iq, ip, lens, offs, bt, rep=rep:
+                             (bt[ib, ip], 0, ih // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dv),
+                               lambda ib, ih, iq, ip, lens, offs, bt:
+                                   (ib, iq, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, dv), jnp.float32),  # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, qp.shape[1], h, dv), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q_offsets.astype(jnp.int32),
+      block_tables.astype(jnp.int32), qp, k_pool, v_pool)
+    return out[:, :sq]
+
+
 def _round_up(n: int, mult: int = 128) -> int:
     return max(mult, -(-n // mult) * mult) if n >= mult else _pow2(n)
 

@@ -95,6 +95,35 @@ def paged_attention(
     )
 
 
+def chunked_prefill_paged(
+    q, k_pool, v_pool, lengths, block_tables, q_offsets, *,
+    softmax_scale: float | None = None,
+    impl: str = "auto",
+):
+    """Prefill-chunk attention over a shared page pool ([B,Sq,H,D] x
+    [N,page,Hkv,D] through [B,P] block tables).
+
+    The serving engine's chunked-prefill read path: a chunk's queries at
+    absolute offset ``q_offsets`` attend causally over the first
+    ``lengths`` pool tokens of their sequence -- SkyMemory-restored pages
+    and earlier chunks are read in place (scalar-prefetched tables on
+    TPU; grouped-GQA gather oracle elsewhere).  Offsets/lengths are
+    runtime values, so one compilation serves every chunk of a prefill.
+    """
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.chunked_prefill_paged_ref(
+            q, k_pool, v_pool, lengths, block_tables, q_offsets,
+            softmax_scale=softmax_scale,
+        )
+    from repro.kernels import chunked_prefill
+
+    return chunked_prefill.chunked_prefill_paged(
+        q, k_pool, v_pool, lengths, block_tables, q_offsets,
+        softmax_scale=softmax_scale, interpret=_interpret(),
+    )
+
+
 def ssd_scan(
     x, dt, a, b_mat, c_mat, *,
     chunk_size: int = 64,

@@ -197,6 +197,50 @@ def paged_attention_ref(
     return jnp.where(any_valid, out, jnp.zeros_like(out))
 
 
+def chunked_prefill_paged_ref(
+    q: jax.Array,              # [B, Sq, H, D] one prefill chunk per sequence
+    k_pool: jax.Array,         # [N, page, Hkv, D] shared page pool
+    v_pool: jax.Array,         # [N, page, Hkv, Dv]
+    lengths: jax.Array,        # [B] total valid kv tokens (prefix + chunk)
+    block_tables: jax.Array,   # [B, P] page ids into the pool
+    q_offsets: jax.Array,      # [B] absolute position of q[:, 0]
+    *,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Chunked prefill over a paged KV cache: the semantics of record for
+    the Pallas ``chunked_prefill_paged`` kernel.
+
+    Each row's queries sit at absolute positions ``q_offsets[b] + i`` and
+    attend causally over the first ``lengths[b]`` tokens of the sequence,
+    read *in place* from pool pages through the row's block table -- this
+    is a prefill chunk running on top of a SkyMemory-restored prefix (plus
+    any earlier chunks) without densifying it.  The chunk's own K/V must
+    already be written into the pool (the model layer writes before it
+    reads, like the decode path).  Query rows with no visible key (padded
+    chunk tail, or ``lengths == 0``) return zeros, matching the kernel's
+    empty online-softmax accumulator.  GQA is contracted per KV-head group
+    (no materialized head repeat).
+    """
+    b, sq, h, d = q.shape
+    _, page, hkv, dv = v_pool.shape
+    p = block_tables.shape[1]
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    rep = h // hkv
+    k = jnp.take(k_pool, block_tables, axis=0).reshape(b, p * page, hkv, d)
+    v = jnp.take(v_pool, block_tables, axis=0).reshape(b, p * page, hkv, dv)
+    qg = q.reshape(b, sq, hkv, rep, d)
+    s = jnp.einsum("bqgrd,bsgd->bgrqs", qg, k).astype(jnp.float32) * scale
+    q_pos = q_offsets[:, None] + jnp.arange(sq)[None, :]        # [B, Sq]
+    k_pos = jnp.arange(p * page)[None, :]                       # [1, S]
+    mask = (k_pos[:, None, :] <= q_pos[..., None]) \
+        & (k_pos[:, None, :] < lengths[:, None, None])          # [B, Sq, S]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqs,bsgd->bqgrd", probs, v).reshape(b, sq, h, dv)
+    row_valid = mask.any(axis=-1)[..., None, None]              # [B, Sq, 1, 1]
+    return jnp.where(row_valid, out, jnp.zeros_like(out))
+
+
 def ssd_scan_ref(
     x: jax.Array,    # [B, L, H, P]  inputs per head
     dt: jax.Array,   # [B, L, H]     softplus'd discretization step

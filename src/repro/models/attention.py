@@ -81,6 +81,72 @@ def attention_prefill(
     return out @ params["wo"], (k, v)
 
 
+def attention_prefill_paged(
+    params,
+    x,                     # [R, C, d_model] one prefill chunk per row
+    cfg: ModelConfig,
+    *,
+    k_pool,                # [N_pages, page, Hkv, hd] shared page pool
+    v_pool,
+    block_tables,          # [R, P] page ids of each row's slot
+    q_offsets,             # [R] int32: chunk starts (absolute positions)
+    n_valid,               # [R] int32: valid tokens per chunk (<= C)
+):
+    """A batch of prefill chunks against the shared page pool; returns
+    ``(out, k_pool', v_pool')``.
+
+    Each row's chunk K/V are scattered into its slot's pages *first*
+    (per-token, so a chunk start need not be page-aligned -- the
+    whole-prompt-cached replay starts one token before a block
+    boundary), then the chunk's queries attend over everything valid so
+    far: SkyMemory-restored pages, earlier chunks, and this chunk, all
+    read in place through the block tables.  Positions past ``n_valid``
+    (the padded tail of a ragged final chunk, or an all-padding batch
+    row) are dropped from the write (their page id is pushed out of
+    range with scatter mode ``drop``) and their outputs are garbage the
+    scheduler never reads.  ``q_offsets`` / ``n_valid`` are traced
+    values: one compilation per chunk-buffer shape serves every chunk of
+    every admission.
+    """
+    r, c = x.shape[0], x.shape[1]
+    h, hd = cfg.num_heads, cfg.head_dim
+    page = k_pool.shape[1]
+    n_pages = k_pool.shape[0]
+    num_tables = block_tables.shape[1]
+    q_offsets = jnp.asarray(q_offsets, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+
+    q, k_new, v_new = _project_qkv(params, x, x, cfg)
+    positions = q_offsets[:, None] + jnp.arange(c, dtype=jnp.int32)  # [R, C]
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = maybe_shard(q, "decode_qkv")
+    k_new = maybe_shard(k_new, "decode_qkv")
+    v_new = maybe_shard(v_new, "decode_qkv")
+
+    row_ok = jnp.arange(c)[None, :] < n_valid[:, None]             # [R, C]
+    table_idx = jnp.clip(positions // page, 0, num_tables - 1)
+    page_ids = jnp.take_along_axis(block_tables, table_idx, axis=1)
+    page_ids = jnp.where(row_ok, page_ids, n_pages)        # OOB -> dropped
+    slots = positions % page
+    int8_kvc = k_pool.dtype == jnp.int8
+    if int8_kvc:
+        k_new, v_new = _quant(k_new), _quant(v_new)
+    k_pool = k_pool.at[page_ids, slots].set(
+        k_new.astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[page_ids, slots].set(
+        v_new.astype(v_pool.dtype), mode="drop")
+    if int8_kvc:
+        k_read = _dequant(k_pool, x.dtype)
+        v_read = _dequant(v_pool, x.dtype)
+    else:
+        k_read, v_read = k_pool, v_pool
+    out = ops.chunked_prefill_paged(
+        q, k_read, v_read, q_offsets + n_valid, block_tables, q_offsets,
+    )
+    return out.reshape(r, c, h * hd) @ params["wo"], k_pool, v_pool
+
+
 def attention_decode(
     params,
     x,                     # [B, 1, d_model]

@@ -191,6 +191,11 @@ class PagedKVCache:
             self._free = list(range(self.num_pages - 1, 0, -1))
             self.block_tables = np.zeros((num_slots, p), np.int32)
             self._slot_pages = [[] for _ in range(num_slots)]
+        # partial-prefill write cursor: tokens of the slot's sequence
+        # covered by pages so far (restored blocks + retired chunks) --
+        # chunked prefill advances it span by span, and span bookkeeping
+        # rejects gaps/overlap bugs before they corrupt the pool
+        self.cursors = [0] * num_slots
 
     # -- allocator ------------------------------------------------------
     @property
@@ -240,12 +245,37 @@ class PagedKVCache:
     def free_slot(self, slot: int) -> None:
         """Return the slot's pages to the pool (free-list mode repoints
         the slot at the scratch page)."""
+        self.cursors[slot] = 0
         if self.contiguous:
             self._slot_free[slot] = True
             return
         self._free.extend(reversed(self._slot_pages[slot]))
         self._slot_pages[slot] = []
         self.block_tables[slot, :] = 0
+
+    # -- partial-prefill write cursors ----------------------------------
+    def table_row(self, slot: int) -> np.ndarray:
+        """The slot's block-table row [pages_per_seq] -- what a chunked
+        prefill uploads so the chunk can resolve its own page ids on
+        device (contiguous mode rows are the arithmetic region ids)."""
+        return self.block_tables[slot]
+
+    def note_span(self, slot: int, start: int, n_tokens: int) -> None:
+        """Record that tokens ``[start, start + n_tokens)`` of the slot's
+        sequence are now (being) written to its pages -- the device-side
+        chunk scatter does the actual write.  Rewriting already-covered
+        positions is allowed (the whole-prompt-cached replay recomputes
+        the final token in place); a *gap* past the cursor is a scheduler
+        bug and raises before the pool is corrupted."""
+        if start > self.cursors[slot]:
+            raise RuntimeError(
+                f"slot {slot}: span start {start} leaves a gap past write "
+                f"cursor {self.cursors[slot]}")
+        end = start + n_tokens
+        if self.pages_for(end) > len(self._slot_pages[slot]):
+            raise RuntimeError(
+                f"slot {slot}: span end {end} beyond allocated pages")
+        self.cursors[slot] = max(self.cursors[slot], end)
 
     # -- page writes (host side, outside the jitted step) ---------------
     def write_pages(self, slot: int, first_page: int, k_blocks, v_blocks):
@@ -261,6 +291,8 @@ class PagedKVCache:
         k_blocks, v_blocks = self._cast(k_blocks), self._cast(v_blocks)
         self.k_pool = self.k_pool.at[:, ids].set(k_blocks)
         self.v_pool = self.v_pool.at[:, ids].set(v_blocks)
+        self.cursors[slot] = max(self.cursors[slot],
+                                 (first_page + n) * self.page_size)
 
     def write_token_span(self, slot: int, start: int, k, v):
         """Write ``k``/``v`` ``[layers, n_tokens, kv_heads, head_dim]`` at
@@ -278,6 +310,7 @@ class PagedKVCache:
         shape = (la, nb, self.page_size, hkv, hd)
         self.write_pages(slot, start // self.page_size,
                          k.reshape(shape), v.reshape(shape))
+        self.cursors[slot] = start + n   # the padded tail is not real data
 
     def _cast(self, x):
         x = jnp.asarray(x)

@@ -26,6 +26,7 @@ from repro.models.attention import (
     attention_decode,
     attention_decode_paged,
     attention_prefill,
+    attention_prefill_paged,
     init_attention,
 )
 from repro.models.config import ModelConfig
@@ -537,6 +538,67 @@ class Model:
         x, ks, vs = carry
         x = apply_norm(params["final_norm"], x, cfg)
         logits = unembed(params["embed"], x, cfg)
+        return logits, ks, vs
+
+    def prefill_chunk_paged(self, params, k_pool, v_pool, tokens,
+                            block_tables, q_offsets, n_valid):
+        """A batch of prefill *chunks* over the shared page pool.
+
+        ``tokens`` [R, C] holds one prompt slice per row, row ``i``
+        starting at absolute position ``q_offsets[i]`` (``n_valid[i] <= C``
+        real tokens; the tail is padding, and an all-padding row with
+        ``n_valid == 0`` is a no-op).  Each layer writes the chunks' K/V
+        into their slots' pool pages (through ``block_tables`` [R, P]) and
+        attends over everything cached so far -- SkyMemory-restored pages,
+        earlier chunks, and this chunk -- read in place from the pool.
+        Returns ``(last_logits [R, V], k_pool', v_pool')`` -- only each
+        row's last *valid* position is unembedded (the one logit a
+        finishing chunk samples its first token from; a C x V projection
+        per step would be pure waste on a serving vocabulary).
+        ``q_offsets``/``n_valid`` are traced, so one compilation per
+        buffer shape serves every chunk of every admission; this is the
+        half of the engine's fused mixed step that retires prompt tokens
+        (decode_step_paged retires generation tokens), and the whole of
+        its cold-start admission wave.  Dense attention families only
+        (``supports_paged_decode``).
+        """
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+
+        # pools ride the scan carry with in-place dynamic updates, exactly
+        # like decode_step_paged -- a ys-stacked scan would copy the pool
+        def body(carry, l):
+            x, kp, vp = carry
+            p = jax.tree.map(lambda a: a[l], params["blocks"])
+            h = apply_norm(p["norm1"], x, cfg)
+            a, kl, vl = attention_prefill_paged(
+                p["attn"], h, cfg, k_pool=kp[l], v_pool=vp[l],
+                block_tables=block_tables, q_offsets=q_offsets,
+                n_valid=n_valid,
+            )
+            x = x + a
+            h2 = apply_norm(p["norm2"], x, cfg)
+            if cfg.num_experts > 0:
+                y, _ = moe_forward(p["moe"], h2, cfg)
+            else:
+                y = apply_mlp(p["mlp"], h2, cfg)
+            kp = jax.lax.dynamic_update_index_in_dim(kp, kl, l, 0)
+            vp = jax.lax.dynamic_update_index_in_dim(vp, vl, l, 0)
+            return (x + y, kp, vp), None
+
+        carry = (x, k_pool, v_pool)
+        if self.unroll:
+            for l in range(cfg.num_layers):
+                carry, _ = body(carry, l)
+        else:
+            carry, _ = jax.lax.scan(
+                body, carry, jnp.arange(cfg.num_layers))
+        x, ks, vs = carry
+        x = apply_norm(params["final_norm"], x, cfg)
+        idx = jnp.maximum(jnp.asarray(n_valid, jnp.int32) - 1, 0)   # [R]
+        last = jnp.take_along_axis(
+            x, idx[:, None, None], axis=1)                  # [R, 1, D]
+        logits = unembed(params["embed"], last, cfg)[:, 0]  # [R, V]
         return logits, ks, vs
 
     def decode_step(self, params, cache, tokens, pos):

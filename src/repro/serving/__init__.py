@@ -20,26 +20,48 @@ variant (scalar-prefetched tables; pure-jnp grouped-GQA oracle on CPU).
 The jitted step donates the pools, so backends with buffer donation
 update the cache in place.
 
-**Scheduler states.**  A request moves QUEUED -> RUNNING -> FINISHED
-(``repro.serving.request.SeqState``).  Admission fills freed slots from
-the queue *mid-decode* (continuous batching): prefill runs for the new
-request (bucketed to power-of-two lengths to bound recompiles, or only
-the uncached suffix on a SkyMemory hit), its pages are written, and the
-next fused step simply includes the slot.  Admission reserves the
-worst-case page span (prompt + max_new_tokens, capped at max_seq_len),
-so a running sequence never exhausts the pool mid-decode and block
-tables only change at admission/release; unused pages return to the
-free list at early EOS.  Finish reasons: ``eos``, ``max_new_tokens``,
-``max_seq_len``.
+**Chunk scheduler.**  A request moves QUEUED -> PREFILLING -> RUNNING
+-> FINISHED (``repro.serving.request.SeqState``).  Admission fills
+freed slots from the queue *mid-decode* (continuous batching) and
+reserves the worst-case page span (prompt + max_new_tokens, capped at
+max_seq_len), so a running sequence never exhausts the pool mid-decode
+and block tables only change at admission/release; unused pages return
+to the free list at early EOS.  Prompts are then prefilled in
+page-aligned *chunks* of at most ``chunk_tokens`` (the per-step budget)
+that ride the decode step: each fused step decodes every running slot
+AND retires one chunk, which writes its K/V into the slot's pool pages
+and attends over the SkyMemory-restored prefix + earlier chunks *in
+place* through the paged chunked-prefill kernel (scalar-prefetched
+block tables, runtime offsets) -- decode never pauses for an admission,
+and there is no dense ``prefix_state`` restaging anywhere in the paged
+families.  Chunks are FIFO across PREFILLING sequences; a sequence's
+SkyMemory lookup happens when it reaches the head (after earlier
+write-backs, so duplicate contexts queued together still hit), its
+payload->pages decode runs on the adapter's fetch-ahead thread
+overlapping a live decode step, and a whole-prompt hit keeps every
+restored block, replaying only the final token as a one-token chunk.
+When *nothing* is decoding (cold start), the admission wave prefills
+together as lockstep batched chunk steps instead -- the throughput of a
+batched prefill without whole-prompt compile buckets (chunk buffers are
+power-of-two bucketed up to the budget, so compile count is bounded by
+the chunk size, not max_seq_len).  A sequence's first token is sampled
+inside the step in which its last chunk lands.  MoE families keep
+stop-the-world admission (``chunk_tokens=0`` forces it everywhere, as
+the pre-chunked baseline): capacity routing is group-composition
+dependent, so chunk splits would change real tokens' routing.  Finish
+reasons: ``eos``, ``max_new_tokens``, ``max_seq_len``.
 
 **Sync points.**  The decode loop launches ONE jitted program per step
-(embed -> layers -> paged attention -> vectorized per-slot sampler) and
+(embed -> layers -> paged attention -> vectorized per-slot sampler,
+plus the riding prefill chunk while an admission is in flight) and
 performs ONE host sync per step: reading the sampled token ids, which the
-host scheduler needs for EOS detection, page allocation, and admission.
-Prefill and first-token sampling sync once per *admission* (amortized
-over the whole generation).  Sampling parameters (temperature / top-k /
-top-p) are stacked into [B] arrays and re-uploaded only when slot
-membership changes.
+host scheduler needs for EOS detection, page allocation, and admission
+(a final chunk's first token rides the same vector as row ``B``).
+Cold-start chunk waves sample their first tokens in one call with one
+sync.  Sampling parameters (temperature / top-k / top-p) are stacked
+into [B] arrays and re-uploaded only when slot membership changes.
+``EngineStats`` records TTFT and inter-token-latency samples (plus the
+during-admission ITL subset) for p50/p95/p99 reporting.
 
 Non-paged families (MLA latent, SSM state, hybrid, encoder-decoder) keep
 a dense batched cache but share the vectorized sampler and the

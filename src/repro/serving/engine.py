@@ -1,20 +1,28 @@
-"""Serving engine: a paged, continuously-batched, device-resident runtime.
+"""Serving engine: a paged, continuously-batched, chunked-prefill runtime.
 
 Per request: tokenize -> SkyMemory longest-prefix lookup (radix index +
 constellation fetch) -> drop fetched 128-token blocks straight into KV
-pages -> prefill only the uncached suffix -> continuous-batching decode.
-New full blocks are written back to the constellation (Set KVC), so
-repeated prompts/contexts hit more blocks -- the paper's §5 testbed loop,
-with the LEO cache simulated in-process.
+pages -> prefill the uncached suffix in page-aligned *chunks* that ride
+the decode step -> continuous-batching decode.  New full blocks are
+written back to the constellation (Set KVC), so repeated prompts/contexts
+hit more blocks -- the paper's §5 testbed loop, with the LEO cache
+simulated in-process.
 
 Architecture (see ``repro.serving`` package docstring for the full map):
 
 * dense-attention families run the **paged runtime**: a ``PagedKVCache``
   pool (page size = the SkyMemory block size) lives on device across
-  requests; each decode step is ONE jitted program (embed -> layers ->
-  block-table paged attention -> vectorized sampler) over every slot, and
-  the only host sync per step is reading the sampled token ids for EOS /
-  scheduling.  Freed slots readmit queued requests mid-decode.
+  requests; each step is ONE jitted program -- decode for every slot
+  (embed -> layers -> block-table paged attention -> vectorized sampler)
+  plus, while an admission is in flight, one token-budgeted prefill
+  chunk that writes its K/V into pool pages and attends over the
+  SkyMemory-restored prefix *in place* (the paged chunked-prefill
+  kernel).  Decode never pauses for admissions; a sequence's first
+  token is sampled inside the step in which its last chunk lands.
+* MoE families keep stop-the-world admission (capacity-based expert
+  routing is group-composition dependent, so splitting a prompt into
+  chunks would change its routing); their restored prefixes still live
+  in pool pages.
 * MLA / SSM / hybrid / encoder-decoder families keep the dense per-batch
   cache (their decode state is not plain per-token K/V) but share the
   vectorized sampler and the one-sync-per-step decode loop.
@@ -42,6 +50,37 @@ from repro.serving.skycache import SkyKVCAdapter
 from repro.serving.tokenizer import ByteTokenizer
 
 
+def head_span(n_tokens: int, cursor: int, budget: int) -> tuple[int, int]:
+    """The next chunk for a prompt of ``n_tokens`` prefilled up to
+    ``cursor``: ``(start, length)`` with length at most ``budget``.  The
+    scheduler consumes exactly this, one span per step."""
+    return cursor, min(budget, n_tokens - cursor)
+
+
+def chunk_spans(n_tokens: int, start: int, budget: int
+                ) -> list[tuple[int, int]]:
+    """The full chunk plan for a prompt of ``n_tokens`` whose pages are
+    already valid up to ``start`` (a restored SkyMemory prefix, or the
+    replay point of a whole-prompt hit): the ``head_span`` sequence,
+    covering ``[start, n_tokens)`` in order.  Only the final span may be
+    ragged, so every split lands on a page boundary whenever ``start``
+    and ``budget`` are page-aligned."""
+    spans = []
+    cursor = start
+    while cursor < n_tokens:
+        s, v = head_span(n_tokens, cursor, budget)
+        spans.append((s, v))
+        cursor = s + v
+    return spans
+
+
+def _percentiles(xs: list[float]) -> dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    p50, p95, p99 = np.percentile(np.asarray(xs, np.float64), [50, 95, 99])
+    return {"p50": float(p50), "p95": float(p95), "p99": float(p99)}
+
+
 @dataclass
 class EngineStats:
     requests: int = 0
@@ -52,6 +91,21 @@ class EngineStats:
     decode_time_s: float = 0.0
     decode_steps: int = 0             # jitted step programs launched
     mid_decode_admissions: int = 0    # requests admitted into a live batch
+    prefill_chunks: int = 0           # chunk programs fused into steps
+    ttft_s: list[float] = field(default_factory=list)   # per request
+    itl_s: list[float] = field(default_factory=list)    # per decoded token
+    # the subset of itl_s observed by running sequences while an
+    # admission was in flight -- the tail the chunked scheduler exists
+    # to flatten (a whole-run p99 dilutes a few admission stalls away)
+    itl_admission_s: list[float] = field(default_factory=list)
+
+    def latency_percentiles(self) -> dict[str, dict[str, float]]:
+        """p50/p95/p99 of time-to-first-token and inter-token latency --
+        the serving SLO view of the run (tokens/s hides admission
+        stalls; the ITL tail is where stop-the-world prefill shows)."""
+        return {"ttft_s": _percentiles(self.ttft_s),
+                "itl_s": _percentiles(self.itl_s),
+                "itl_admission_s": _percentiles(self.itl_admission_s)}
 
 
 @dataclass
@@ -66,6 +120,12 @@ class _Seq:
     enqueue_t: float = 0.0
     ttft_s: float = 0.0
     wall_s: float = 0.0
+    # chunked-prefill state machine:
+    reserve: int = 0                  # worst-case token footprint reserved
+    cursor: int = 0                   # next prompt token to prefill
+    looked_up: bool = False           # SkyMemory lookup done for this seq
+    pages_future: object | None = None   # in-flight payload -> pages decode
+    dev_ops: tuple | None = None      # per-admission device operands
     # legacy (non-paged) path only:
     dense_state: dict | None = None
     last_logits: jnp.ndarray | None = None
@@ -84,6 +144,7 @@ class Engine:
         write_back: bool = True,
         seed: int = 0,
         num_pages: int | None = None,
+        chunk_tokens: int | None = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -97,6 +158,8 @@ class Engine:
         self._key = jax.random.PRNGKey(seed)
         self.adapter = SkyKVCAdapter(model, params)
         self.manager: KVCManager | None = None
+        self._wb_future = None        # in-flight async Set KVC write-back
+        self.chunk_log: list[tuple[int, int, int]] = []  # (slot, start, n)
         if kvc is not None:
             self.manager = KVCManager(
                 self.tokenizer.encode, self.adapter.kvc_fn, kvc,
@@ -110,12 +173,38 @@ class Engine:
                 num_slots=max_batch, page_size=block_size,
                 max_seq_len=max_seq_len, num_pages=num_pages,
             )
+            # chunk budget: tokens of prompt prefilled per step, fused
+            # with decode.  Page-aligned so every chunk starts on a block
+            # boundary; 0 disables chunking (stop-the-world admission,
+            # the pre-chunked baseline).  MoE families always take the
+            # stop-the-world path: capacity routing is group-composition
+            # dependent, so chunk splits would change real tokens'
+            # routing (same reason their prefill is never padded).
+            if chunk_tokens is None:
+                chunk_tokens = 2 * block_size
+            if chunk_tokens and self.cfg.num_experts > 0:
+                chunk_tokens = 0
+            if chunk_tokens:
+                chunk_tokens = min(chunk_tokens,
+                                   self.cache.pages_per_seq * block_size)
+                if chunk_tokens % block_size:
+                    raise ValueError("chunk_tokens must be a multiple of "
+                                     "the page/block size")
+            self.chunk_tokens = chunk_tokens
+            self.chunked = bool(chunk_tokens)
             # pools are donated: on backends with donation support the
             # one-token write updates the cache in place instead of
             # copying the whole pool every step (CPU falls back to copy)
             self._step = jax.jit(self._paged_step,
                                  static_argnames=("mode",),
                                  donate_argnums=(1, 2))
+            self._mixed = jax.jit(self._mixed_step,
+                                  static_argnames=("mode",),
+                                  donate_argnums=(1, 2))
+            # cold-start admission waves: batched chunk steps (nothing is
+            # decoding, so the whole wave prefills together)
+            self._chunk_wave = jax.jit(self.model.prefill_chunk_paged,
+                                       donate_argnums=(1, 2))
             self._prefill = jax.jit(
                 lambda p, t: self.model.forward(p, t, collect_state=True)
             )
@@ -137,9 +226,10 @@ class Engine:
     # ==================================================================
     # Paged runtime (dense-attention families)
     # ==================================================================
-    def _paged_step(self, params, k_pool, v_pool, block_tables, lengths,
-                    tokens, key, temps, top_ks, top_ps, *, mode):
-        """One fused decode step: model + sampler, one device program.
+    def _decode_sample(self, params, k_pool, v_pool, block_tables, lengths,
+                      tokens, key, temps, top_ks, top_ps, mode):
+        """Decode every slot and sample its next token: the shared tail of
+        the plain and mixed steps.
 
         ``mode`` is decided host-side from the *active slots'* sampling
         params (it only changes on admission/finish, so at most a few
@@ -164,6 +254,39 @@ class Engine:
             nxt = sample_batch(lg, key, temps, top_ks, top_ps)
         return nxt, k_pool, v_pool
 
+    def _paged_step(self, params, k_pool, v_pool, block_tables, lengths,
+                    tokens, key, temps, top_ks, top_ps, *, mode):
+        """One fused decode step: model + sampler, one device program."""
+        return self._decode_sample(params, k_pool, v_pool, block_tables,
+                                   lengths, tokens, key, temps, top_ks,
+                                   top_ps, mode)
+
+    def _mixed_step(self, params, k_pool, v_pool, block_tables, lengths,
+                    tokens, key, temps, top_ks, top_ps,
+                    c_toks, c_bt, c_off, c_valid, c_temp, c_tk, c_tp,
+                    *, mode):
+        """One fused mixed step: a prefill chunk rides the decode step.
+
+        The chunk (``c_toks`` [1, C] at absolute offset ``c_off``,
+        ``c_valid`` real tokens) writes its K/V into pool pages and
+        attends over the SkyMemory-restored prefix + earlier chunks in
+        place; then every slot decodes exactly as in the plain step, so
+        running sequences never stall for an admission.  If this is the
+        sequence's final chunk, its first output token is the extra id
+        sampled here from the last valid chunk logit -- returned as row
+        ``B`` of the token vector so the host still does ONE sync.
+        ``c_off``/``c_valid`` are traced, so one compilation serves every
+        chunk of every admission (no power-of-two prefill buckets).
+        """
+        kd, kc = jax.random.split(key)
+        c_logits, k_pool, v_pool = self.model.prefill_chunk_paged(
+            params, k_pool, v_pool, c_toks, c_bt, c_off, c_valid)
+        c_tid = sample_batch(c_logits, kc, c_temp, c_tk, c_tp)
+        nxt, k_pool, v_pool = self._decode_sample(
+            params, k_pool, v_pool, block_tables, lengths, tokens, kd,
+            temps, top_ks, top_ps, mode)
+        return jnp.concatenate([nxt, c_tid]), k_pool, v_pool
+
     @staticmethod
     def _sampler_mode(samp: list[SamplingParams]) -> str:
         if any(p.top_k > 0 or p.top_p < 1.0 for p in samp
@@ -180,15 +303,19 @@ class Engine:
         seqs = [self._make_seq(r) for r in requests]
         pending: deque[_Seq] = deque(seqs)
         active: dict[int, _Seq] = {}
+        prefilling: dict[int, _Seq] = {}   # insertion order == chunk FIFO
         free_slots = list(range(self.max_batch - 1, -1, -1))
         b = self.max_batch
+        self.chunk_log = []
 
         lengths_h = np.zeros(b, np.int32)
         tokens_h = np.zeros(b, np.int32)
         samp = [SamplingParams() for _ in range(b)]
+        last_tok_t = [0.0] * b
         samp_dirty = bt_dirty = True
+        admit_stall = False   # a stop-the-world wave ran under live decodes
 
-        while pending or active:
+        while pending or active or prefilling:
             # -- admission: fill freed slots from the queue ------------
             admitted: list[tuple[_Seq, int]] = []
             while (pending and free_slots
@@ -198,26 +325,56 @@ class Engine:
                 slot = free_slots.pop()
                 # reserve pages NOW so can_admit for the rest of the wave
                 # sees the shrunken free list (free-list pools)
-                self.cache.ensure_capacity(slot, self._reserve_tokens(s))
-                if active:
+                s.reserve = self._reserve_tokens(s)
+                self.cache.ensure_capacity(slot, s.reserve)
+                if active or prefilling:
                     self.stats.mid_decode_admissions += 1
                 admitted.append((s, slot))
             if admitted:
-                self._admit_wave(admitted, lengths_h, tokens_h, samp)
-                samp_dirty = bt_dirty = True
-                for s, slot in admitted:
-                    if s.done:        # finished on its very first token
-                        self._release(s, slot, lengths_h, tokens_h, samp)
-                        free_slots.append(slot)
+                bt_dirty = True
+                if self.chunked and (active or prefilling):
+                    # decode is live: chunks ride the decode steps so no
+                    # running sequence stalls for this admission
+                    for s, slot in admitted:
+                        s.state = SeqState.PREFILLING
+                        prefilling[slot] = s
+                        # park the slot's decode lane on its last reserved
+                        # position: the idle lane's unconditional write
+                        # lands where no chunk data lives and where any
+                        # real decode write would overwrite it anyway
+                        lengths_h[slot] = s.reserve - 1
+                        tokens_h[slot] = 0
+                else:
+                    # nothing is decoding, so nothing can starve: prefill
+                    # the whole wave now (as batched chunk steps when
+                    # chunked, else the bucketed stop-the-world wave)
+                    admit_stall = bool(active)
+                    if self.chunked:
+                        self._admit_wave_chunked(admitted, lengths_h,
+                                                 tokens_h, samp)
                     else:
-                        active[slot] = s
-            if not active:
+                        self._admit_wave(admitted, lengths_h, tokens_h,
+                                         samp)
+                    samp_dirty = True
+                    now = time.perf_counter()
+                    for s, slot in admitted:
+                        if s.done:    # finished on its very first token
+                            self._release(s, slot, lengths_h, tokens_h,
+                                          samp)
+                            free_slots.append(slot)
+                        else:
+                            active[slot] = s
+                            last_tok_t[slot] = now
+            if not (active or prefilling):
                 if pending:
                     raise RuntimeError(
                         "cannot admit request: KV page pool too small for a "
                         f"{self._reserve_tokens(pending[0])}-token worst-case"
                         " footprint (prompt + max_new_tokens)")
                 break
+
+            # -- chunk scheduling: at most chunk_tokens prompt tokens ----
+            chunk = self._plan_chunk(prefilling, bool(active))
 
             if samp_dirty:
                 temps_d, tks_d, tps_d = stack_sampling(samp)
@@ -236,20 +393,36 @@ class Engine:
             # -- one fused device step; ONE host sync (the token read) --
             self._key, k = jax.random.split(self._key)
             t0 = time.perf_counter()
-            nxt, k_pool, v_pool = self._step(
-                self.params, self.cache.k_pool, self.cache.v_pool,
-                bt_d, len_d, tok_d, k, temps_d, tks_d, tps_d, mode=mode,
-            )
+            if chunk is None:
+                nxt, k_pool, v_pool = self._step(
+                    self.params, self.cache.k_pool, self.cache.v_pool,
+                    bt_d, len_d, tok_d, k, temps_d, tks_d, tps_d, mode=mode,
+                )
+            else:
+                s_c, slot_c, start_c, v_c, ops_c = chunk
+                nxt, k_pool, v_pool = self._mixed(
+                    self.params, self.cache.k_pool, self.cache.v_pool,
+                    bt_d, len_d, tok_d, k, temps_d, tks_d, tps_d,
+                    *ops_c, mode=mode,
+                )
             self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
             nxt_h = np.asarray(nxt)           # the step's single host sync
-            self.stats.decode_time_s += time.perf_counter() - t0
+            now = time.perf_counter()
+            self.stats.decode_time_s += now - t0
             self.stats.decode_steps += 1
 
             # -- host-side scheduling on the synced token ids ----------
+            in_admission = bool(prefilling) or admit_stall
+            admit_stall = False
             for slot, s in list(active.items()):
                 tid = int(nxt_h[slot])
                 s.out_ids.append(tid)
                 self.stats.decoded_tokens += 1
+                itl = now - last_tok_t[slot]
+                self.stats.itl_s.append(itl)
+                if in_admission:
+                    self.stats.itl_admission_s.append(itl)
+                last_tok_t[slot] = now
                 lengths_h[slot] += 1
                 if self._finished(s, tid):
                     active.pop(slot)
@@ -259,12 +432,226 @@ class Engine:
                 else:
                     tokens_h[slot] = tid
 
+            # -- chunk retirement --------------------------------------
+            if chunk is not None:
+                self.stats.prefill_chunks += 1
+                s_c.cursor = start_c + v_c
+                if s_c.cursor >= len(s_c.tokens):
+                    # last chunk landed: its first token was sampled
+                    # in-step (row b of the synced vector)
+                    prefilling.pop(slot_c)
+                    if self.write_back and self.manager is not None:
+                        # Set KVC on the worker thread; the next
+                        # sequence's lookup drains it, so duplicate
+                        # contexts queued together still hit without the
+                        # payload computation stalling running decodes
+                        self._write_back_async(s_c.tokens)
+                    self._finish_prefill(s_c, slot_c, int(nxt_h[b]), now,
+                                         lengths_h, tokens_h, samp)
+                    if s_c.done:
+                        self._release(s_c, slot_c, lengths_h, tokens_h,
+                                      samp)
+                        free_slots.append(slot_c)
+                    else:
+                        active[slot_c] = s_c
+                        last_tok_t[slot_c] = now
+                    samp_dirty = bt_dirty = True
+
+        self._drain_write_back()     # settle Set KVC before handing back
         wall = time.perf_counter() - t_start
         out = []
         for s in seqs:
             s.wall_s = wall
             out.append(self._result(s))
         return out
+
+    def _plan_chunk(self, prefilling: dict[int, _Seq], have_active: bool):
+        """Pick the next prefill chunk (FIFO over prefilling sequences).
+
+        The head sequence's SkyMemory lookup happens lazily here -- after
+        any earlier sequence's write-back, so duplicate contexts queued
+        together still hit -- and its payload->pages decode runs on the
+        adapter's fetch-ahead thread: when other sequences are decoding,
+        the chunk is deferred one step so the deserialization overlaps
+        that step's device compute instead of stalling the loop.
+        Returns ``(seq, slot, start, n_valid, device_operands)`` or None.
+        """
+        if not self.chunked or not prefilling:
+            return None
+        slot = next(iter(prefilling))
+        s = prefilling[slot]
+        n = len(s.tokens)
+        if not s.looked_up:
+            t0 = time.perf_counter()
+            self._lookup_and_prefetch(s)
+            self.stats.prefill_time_s += time.perf_counter() - t0
+        if s.pages_future is not None:
+            if have_active and not s.pages_future.done():
+                return None       # overlap payload decode with this step
+            k_blocks, v_blocks = s.pages_future.result()
+            s.pages_future = None
+            self.cache.write_pages(slot, 0, k_blocks, v_blocks)
+        start, v = head_span(n, s.cursor, self.chunk_tokens)
+        self.cache.note_span(slot, start, v)
+        self.chunk_log.append((slot, start, v))
+        if s.dev_ops is None:
+            # per-sequence invariants, uploaded once per admission: the
+            # block-table row is frozen (worst-case pages reserved up
+            # front) and sampling params never change per request
+            s.dev_ops = (
+                jnp.asarray(self.cache.table_row(slot)[None], jnp.int32),
+                *stack_sampling([s.request.sampling]),
+            )
+        buf = np.zeros((1, self._chunk_buf(v)), np.int32)
+        buf[0, :v] = s.tokens[start:start + v]
+        bt_row, c_temp, c_tk, c_tp = s.dev_ops
+        ops_c = (
+            jnp.asarray(buf), bt_row,
+            jnp.asarray([start], jnp.int32), jnp.asarray([v], jnp.int32),
+            c_temp, c_tk, c_tp,
+        )
+        return s, slot, start, v, ops_c
+
+    def _chunk_buf(self, v: int) -> int:
+        """Chunk-buffer length for ``v`` valid tokens: the next power of
+        two (floor 32), capped at the chunk budget.  Short prompts and
+        ragged final chunks don't pay for a full-budget buffer, and the
+        compile count is bounded by the (small) budget instead of
+        max_seq_len -- the legacy O(log^2) whole-prompt buckets reduce to
+        a handful of chunk-sized shapes."""
+        b = 32
+        while b < v:
+            b *= 2
+        return min(b, max(self.chunk_tokens, v))
+
+    def _admit_wave_chunked(self, admitted: list[tuple[_Seq, int]],
+                            lengths_h, tokens_h, samp) -> None:
+        """Cold-start admission wave, chunked flavor: nothing is decoding,
+        so the wave's prompts prefill *together* as lockstep batched chunk
+        steps over the page pool -- the throughput of the old batched wave
+        without its dense restaging or whole-prompt compile buckets.
+
+        Phase 1 walks the wave in order: SkyMemory lookup, fetch-ahead
+        payload decode (submitted per sequence, resolved after the loop so
+        deserialization overlaps the later members' lookups/write-backs),
+        and Set KVC write-back -- before the NEXT member's lookup, so
+        duplicate contexts within one wave still hit.  Phase 2 runs
+        batched chunk steps until every prompt is covered; each
+        sequence's final-chunk logits are kept and the wave's first
+        tokens are sampled in one call with one host sync."""
+        t0 = time.perf_counter()
+        for s, slot in admitted:
+            s.state = SeqState.PREFILLING
+            self._lookup_and_prefetch(s)
+            if self.write_back and self.manager is not None:
+                self._write_back_async(s.tokens)
+        for s, slot in admitted:
+            if s.pages_future is not None:
+                k_blocks, v_blocks = s.pages_future.result()
+                s.pages_future = None
+                self.cache.write_pages(slot, 0, k_blocks, v_blocks)
+
+        last_logits: dict[int, jnp.ndarray] = {}
+        live = [(s, slot) for s, slot in admitted]
+        while live:
+            c_b = self._chunk_buf(max(
+                min(self.chunk_tokens, len(s.tokens) - s.cursor)
+                for s, _ in live))
+            rows = 1
+            while rows < len(live):          # pad batch rows to a power
+                rows *= 2                    # of two: O(log max_batch)
+            buf = np.zeros((rows, c_b), np.int32)
+            offs = np.zeros(rows, np.int32)
+            valids = np.zeros(rows, np.int32)   # padding rows are no-ops
+            bts = np.zeros((rows, self.cache.pages_per_seq), np.int32)
+            for i, (s, slot) in enumerate(live):
+                start = s.cursor
+                v = min(c_b, len(s.tokens) - start)
+                buf[i, :v] = s.tokens[start:start + v]
+                offs[i], valids[i] = start, v
+                bts[i] = self.cache.table_row(slot)
+                self.cache.note_span(slot, start, v)
+                self.chunk_log.append((slot, start, v))
+            lg, k_pool, v_pool = self._chunk_wave(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                jnp.asarray(buf), jnp.asarray(bts), jnp.asarray(offs),
+                jnp.asarray(valids),
+            )
+            self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
+            self.stats.prefill_chunks += 1
+            nxt_live = []
+            for i, (s, slot) in enumerate(live):
+                s.cursor = int(offs[i] + valids[i])
+                if s.cursor >= len(s.tokens):
+                    last_logits[id(s)] = lg[i]
+                else:
+                    nxt_live.append((s, slot))
+            live = nxt_live
+
+        self.stats.prefill_time_s += time.perf_counter() - t0
+
+        # first tokens for the wave: one sample call, one host sync
+        self._key, k = jax.random.split(self._key)
+        t_arr, tk_arr, tp_arr = stack_sampling(
+            [s.request.sampling for s, _ in admitted])
+        tids = np.asarray(sample_batch(
+            jnp.stack([last_logits[id(s)] for s, _ in admitted]),
+            k, t_arr, tk_arr, tp_arr))
+        now = time.perf_counter()
+        for (s, slot), tid in zip(admitted, tids):
+            self._finish_prefill(s, slot, int(tid), now, lengths_h,
+                                 tokens_h, samp)
+
+    def _lookup_and_prefetch(self, s: _Seq) -> None:
+        """SkyMemory longest-prefix lookup for ``s``: on a hit, start the
+        sequence at the cached boundary -- a whole-prompt hit keeps every
+        restored block and replays only the final token through the paged
+        chunk path (a one-token recompute, not a full page through a
+        dense prefill) -- and submit the payload->pages decode to the
+        adapter's fetch-ahead thread.  Any in-flight Set KVC write-back
+        is drained first, so duplicate contexts queued together still
+        hit (the paper's repeated-context workload)."""
+        s.looked_up = True
+        if self.manager is None:
+            return
+        self._drain_write_back()
+        payload, cached = self.manager.get_cache_tokens(s.tokens)
+        if payload is not None and cached:
+            restore = cached
+            if cached >= len(s.tokens):
+                cached = len(s.tokens) - 1
+            s.cached = cached
+            s.cursor = cached
+            s.pages_future = self.adapter.pages_async(
+                payload, restore, self.page_size)
+
+    def _write_back_async(self, tokens: list[int]) -> None:
+        """Set KVC for a finished prefill *off* the decode loop: the
+        block payload computation (one forward per uncached block) runs
+        on the adapter's worker thread and the next sequence's lookup
+        drains it, so write-back no longer stalls running decodes."""
+        self._wb_future = self.adapter.run_async(
+            self.manager.add_blocks_tokens, tokens)
+
+    def _drain_write_back(self) -> None:
+        if self._wb_future is not None:
+            self._wb_future.result()
+            self._wb_future = None
+
+    def _finish_prefill(self, s: _Seq, slot: int, tid: int, now: float,
+                        lengths_h, tokens_h, samp) -> None:
+        """A sequence's last chunk landed: book its first token."""
+        s.out_ids.append(tid)
+        s.ttft_s = now - s.enqueue_t
+        self.stats.ttft_s.append(s.ttft_s)
+        self.stats.decoded_tokens += 1
+        self.stats.cached_tokens += s.cached
+        self.stats.prefilled_tokens += len(s.tokens) - s.cached
+        s.state = SeqState.RUNNING
+        if not self._finished(s, tid):
+            lengths_h[slot] = len(s.tokens)
+            tokens_h[slot] = tid
+            samp[slot] = s.request.sampling
 
     def _make_seq(self, req: Request) -> _Seq:
         tokens = self.tokenizer.encode(req.prompt)[: self.max_seq_len - 64]
@@ -277,9 +664,9 @@ class Engine:
                    self.max_seq_len)
 
     def _bucket(self, n: int) -> int:
-        """Prefill length bucket (next power of two, floor 32, capped at
-        max_seq_len): bounds the number of distinct prefill compilations
-        to O(log max_seq_len) without padding past the sequence cap."""
+        """Prefill length bucket for stop-the-world admission (next power
+        of two, floor 32, capped at max_seq_len).  The chunked scheduler
+        needs no buckets: its one fixed chunk shape serves every prompt."""
         b = 32
         while b < n:
             b *= 2
@@ -287,27 +674,19 @@ class Engine:
 
     def _admit_wave(self, admitted: list[tuple[_Seq, int]],
                     lengths_h, tokens_h, samp) -> None:
-        """Prefill a wave of admissions: SkyMemory hits restore blocks
-        straight into pages and prefill only their suffix (per sequence);
-        misses prefill as ONE batched, bucketed forward.  First tokens for
-        the whole wave are sampled in one call with one host sync."""
+        """Stop-the-world admission (MoE families / ``chunk_tokens=0``):
+        SkyMemory hits restore blocks straight into pages and prefill only
+        their suffix (per sequence); misses prefill as ONE batched,
+        bucketed forward.  First tokens for the whole wave are sampled in
+        one call with one host sync."""
         t0 = time.perf_counter()
         last_logits: list = []
         fresh: list[tuple[_Seq, int]] = []
         for s, slot in admitted:
             # (pages were already reserved in the admission loop)
-            n = len(s.tokens)
-            payload = cached = None
-            if self.manager is not None:
-                payload, cached = self.manager.get_cache_tokens(s.tokens)
-                if payload is not None and cached >= n:
-                    # whole prompt cached: replay the final block so the
-                    # decode loop has a starting distribution (keeps page
-                    # alignment)
-                    cached = max(0, cached - self.page_size)
-            if payload is not None and cached:
-                last_logits.append(
-                    self._prefill_with_prefix(s, slot, payload, cached))
+            self._lookup_and_prefetch(s)
+            if s.pages_future is not None:
+                last_logits.append(self._prefill_suffix_paged(s, slot))
             elif self.cfg.num_experts > 0:
                 # MoE: capacity-based expert routing is group-composition
                 # dependent, so bucket padding would alter real tokens'
@@ -354,10 +733,6 @@ class Engine:
                     last_logits[j] = fresh_logits[fi]
                     fi += 1
 
-        for s, slot in admitted:
-            self.stats.cached_tokens += s.cached
-            self.stats.prefilled_tokens += len(s.tokens) - s.cached
-            s.state = SeqState.RUNNING
         self.stats.prefill_time_s += time.perf_counter() - t0
 
         # first tokens for the wave from the prefill logits: one sample
@@ -369,14 +744,8 @@ class Engine:
             jnp.stack(last_logits), k, t_arr, tk_arr, tp_arr))
         now = time.perf_counter()
         for (s, slot), tid in zip(admitted, tids):
-            tid = int(tid)
-            s.out_ids.append(tid)
-            s.ttft_s = now - s.enqueue_t
-            self.stats.decoded_tokens += 1
-            if not self._finished(s, tid):
-                lengths_h[slot] = len(s.tokens)
-                tokens_h[slot] = tid
-                samp[slot] = s.request.sampling
+            self._finish_prefill(s, slot, int(tid), now, lengths_h,
+                                 tokens_h, samp)
 
     def _prefill_exact(self, s: _Seq, slot: int):
         """Unpadded, per-sequence prefill (MoE families, where padding
@@ -392,38 +761,31 @@ class Engine:
         )
         return lg[0, n - 1]
 
-    def _prefill_with_prefix(self, s: _Seq, slot: int, payload: bytes,
-                             cached: int):
-        """SkyMemory hit: fetched blocks drop straight into pool pages (no
-        dense restacking) and only the uncached suffix runs through the
-        model, attending over the restored prefix."""
+    def _prefill_suffix_paged(self, s: _Seq, slot: int):
+        """SkyMemory hit under stop-the-world admission (the sequence's
+        lookup already ran): fetched blocks drop straight into pool pages
+        and the uncached suffix runs as ONE paged chunk attending over
+        them *in place* -- no dense ``prefix_state`` restaging anywhere
+        in the paged families.  A whole-prompt hit keeps every restored
+        block and replays only the final token (the chunk machinery
+        handles the one-token, unaligned-start span)."""
         n = len(s.tokens)
-        # 1. constellation blocks -> pages
-        k_blocks, v_blocks = self.adapter.payload_to_pages(
-            payload, cached, self.page_size)
+        k_blocks, v_blocks = s.pages_future.result()
+        s.pages_future = None
         self.cache.write_pages(slot, 0, k_blocks, v_blocks)
-        # 2. suffix prefill attends over the restored prefix -- built from
-        # the page tensors already decoded above (one deserialization)
-        la, _, _, hkv, hd = k_blocks.shape
-        prefix_state = {
-            "kv": {
-                "k": k_blocks.reshape(la, cached, hkv, hd)[:, None],
-                "v": v_blocks.reshape(la, cached, hkv, hd)[:, None],
-            }
-        }
-        toks = jnp.asarray(s.tokens, jnp.int32)[None]
-        lg, _, state = self.model.forward(
-            self.params, toks[:, cached:], q_offset=cached,
-            prefix_state=prefix_state, collect_state=True,
+        start = s.cursor
+        v = n - start
+        self.cache.note_span(slot, start, v)
+        self.chunk_log.append((slot, start, v))
+        toks = np.asarray(s.tokens[start:], np.int32)[None]
+        lg, k_pool, v_pool = self.model.prefill_chunk_paged(
+            self.params, self.cache.k_pool, self.cache.v_pool,
+            jnp.asarray(toks),
+            jnp.asarray(self.cache.table_row(slot)[None], jnp.int32),
+            jnp.asarray([start], jnp.int32), jnp.asarray([v], jnp.int32),
         )
-        # forward returns prefix+suffix K/V; only the suffix is new
-        self.cache.write_token_span(
-            slot, cached,
-            state["kv"]["k"][:, 0, cached:n],
-            state["kv"]["v"][:, 0, cached:n],
-        )
-        s.cached = cached
-        return lg[0, -1]
+        self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
+        return lg[0]
 
     def _finished(self, s: _Seq, tid: int) -> bool:
         if tid == self.tokenizer.eos_id:
@@ -536,17 +898,23 @@ class Engine:
         max_new = max(s.request.sampling.max_new_tokens for s in seqs)
         t_dec = time.perf_counter()
         first = True
+        last_tok_t = [0.0] * len(seqs)
         for _step in range(max_new):
             self._key, k = jax.random.split(self._key)
             nxt = self._sample(logits, k, temps_d, tks_d, tps_d)
             nxt_h = np.asarray(nxt)           # the step's single host sync
+            now = time.perf_counter()
             for i, s in enumerate(seqs):
                 if s.done:
                     continue
                 tid = int(nxt_h[i])
                 s.out_ids.append(tid)
                 if first:
-                    s.ttft_s = time.perf_counter() - s.enqueue_t
+                    s.ttft_s = now - s.enqueue_t
+                    self.stats.ttft_s.append(s.ttft_s)
+                else:
+                    self.stats.itl_s.append(now - last_tok_t[i])
+                last_tok_t[i] = now
                 self._finished(s, tid)
             first = False
             self.stats.decoded_tokens += sum(

@@ -13,9 +13,11 @@ _ids = itertools.count()
 class SeqState(enum.Enum):
     """Lifecycle of a request inside the continuous-batching scheduler."""
 
-    QUEUED = "queued"        # waiting for a free slot + pages
-    RUNNING = "running"      # owns a slot; decoded every step
-    FINISHED = "finished"    # slot and pages released
+    QUEUED = "queued"            # waiting for a free slot + pages
+    PREFILLING = "prefilling"    # owns a slot; prompt chunks ride the
+    #                              decode step until the last one lands
+    RUNNING = "running"          # decoded every step
+    FINISHED = "finished"        # slot and pages released
 
 
 class FinishReason(enum.Enum):

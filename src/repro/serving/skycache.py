@@ -30,6 +30,7 @@ class SkyKVCAdapter:
         self.model = model
         self.params = params
         self.cfg = model.cfg
+        self._executor = None    # lazy fetch-ahead worker (pages_async)
 
     # -- state <-> payload ------------------------------------------------
     def state_to_payload(self, state: dict, n_tokens: int) -> bytes:
@@ -96,6 +97,35 @@ class SkyKVCAdapter:
             jnp.asarray(k[:, :n_tokens]).reshape(shape),
             jnp.asarray(v[:, :n_tokens]).reshape(shape),
         )
+
+    def pages_async(self, payload: bytes, n_tokens: int, page_size: int):
+        """Fetch-ahead hook: decode a constellation payload into
+        page-shaped K/V on a worker thread, returning a Future.
+
+        The byte -> array deserialization is pure host work; submitting it
+        here lets the engine keep its in-flight decode step (device
+        compute) running while the payload decodes, instead of stalling
+        the serving loop -- the communication/compute overlap the chunked
+        scheduler exploits for the first fresh chunk after a SkyMemory
+        hit.  ``.result()`` gives the same ``(k_blocks, v_blocks)`` as
+        ``payload_to_pages``.
+        """
+        return self.run_async(
+            self.payload_to_pages, payload, n_tokens, page_size)
+
+    def run_async(self, fn, *args):
+        """Run ``fn(*args)`` on the adapter's single worker thread.
+
+        One worker serializes everything submitted here (payload decodes,
+        Set KVC write-backs), so protocol-ordering guarantees -- a
+        write-back lands before the next lookup that should hit it --
+        survive the move off the engine's decode loop."""
+        if self._executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="skymem-fetch")
+        return self._executor.submit(fn, *args)
 
     # -- the KVCManager hook ----------------------------------------------
     def kvc_fn(self, tokens: Sequence[int], past: bytes | None,

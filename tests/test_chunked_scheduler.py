@@ -1,0 +1,296 @@
+"""Chunked-prefill scheduler: invariants, equivalence with stop-the-world
+admission, SkyMemory paged prefix reads, and the fetch-ahead hook.
+
+Property tests (hypothesis; skip cleanly under the conftest fallback
+stub) pin the pure planner invariants -- budget respected, page-aligned
+splits, exact coverage; engine-level tests then check the same invariants
+on real runs plus token-for-token equivalence with the pre-chunked
+baseline (``chunk_tokens=0``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, smoke_config
+from repro.core import ConstellationKVC, ConstellationSpec, LosWindow, Sat, Strategy
+from repro.models.model import Model
+from repro.serving import Engine, Request, SamplingParams, SeqState
+from repro.serving.engine import chunk_spans
+
+PROMPT = "SkyMemory stripes KV cache chunks across LEO satellites. " * 3
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_kvc():
+    return ConstellationKVC(
+        ConstellationSpec(15, 15, 550.0), LosWindow(Sat(7, 7), 9, 9),
+        Strategy.ROTATION_HOP, num_servers=10, chunk_bytes=6 * 1024,
+    )
+
+
+# ---------------------------------------------------------------------------
+# planner invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_pages=st.integers(1, 64),
+    cached_pages=st.integers(0, 63),
+    budget_pages=st.integers(1, 8),
+    page=st.sampled_from([16, 64, 128]),
+    ragged=st.integers(0, 127),
+)
+def test_chunk_spans_cover_budget_and_alignment(n_pages, cached_pages,
+                                                budget_pages, page, ragged):
+    """Spans partition [start, n) in order; each is <= budget; every
+    split lands on a page boundary (only the final span may be ragged)."""
+    n = n_pages * page - (ragged % page)
+    start = min(cached_pages * page, (n // page) * page)
+    budget = budget_pages * page
+    spans = chunk_spans(n, start, budget)
+    assert sum(v for _, v in spans) == n - start
+    cursor = start
+    for i, (s, v) in enumerate(spans):
+        assert s == cursor and 1 <= v <= budget
+        assert s % page == 0
+        if i < len(spans) - 1:
+            assert v == budget          # only the last span may be ragged
+        cursor += v
+    assert cursor == n
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(1, 4096), start=st.integers(0, 4095),
+       budget=st.integers(1, 512))
+def test_chunk_spans_cover_any_offsets(n, start, budget):
+    """Even unaligned starts (the whole-prompt-cached replay) are covered
+    exactly, with no span past the prompt end."""
+    start = min(start, n - 1)
+    spans = chunk_spans(n, start, budget)
+    assert spans[0][0] == start
+    assert sum(v for _, v in spans) == n - start
+    assert all(v <= budget for _, v in spans)
+    end, _ = spans[-1]
+    assert end + spans[-1][1] == n
+
+
+def test_chunk_buf_is_bounded_and_sufficient(dense_setup):
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2,
+                 chunk_tokens=64)
+    for v in (1, 2, 31, 32, 33, 63, 64):
+        b = eng._chunk_buf(v)
+        assert v <= b <= 64
+
+
+# ---------------------------------------------------------------------------
+# engine-level invariants
+# ---------------------------------------------------------------------------
+
+def test_chunked_matches_stop_the_world(dense_setup):
+    """Token-for-token greedy equivalence between the chunked scheduler
+    (several budgets, incl. a non-power-of-two page multiple) and
+    stop-the-world admission, across cold waves AND mid-decode chunks."""
+    cfg, model, params = dense_setup
+    sp = SamplingParams(max_new_tokens=6)
+    reqs = lambda: [Request(prompt=f"{PROMPT} {i}", sampling=sp)
+                    for i in range(5)]
+    ref_eng = Engine(model, params, block_size=16, max_seq_len=256,
+                     max_batch=2, chunk_tokens=0)
+    assert not ref_eng.chunked
+    want = [r.token_ids for r in ref_eng.generate(reqs())]
+    for ct in (16, 48, 64):
+        eng = Engine(model, params, block_size=16, max_seq_len=256,
+                     max_batch=2, chunk_tokens=ct)
+        assert eng.chunked
+        got = [r.token_ids for r in eng.generate(reqs())]
+        assert got == want
+        assert eng.stats.prefill_chunks > 0
+
+
+def test_chunk_log_budget_alignment_coverage(dense_setup):
+    """Real runs respect the planner invariants: every chunk <= budget,
+    every fresh chunk page-aligned, and each admission's spans cover its
+    prompt contiguously."""
+    cfg, model, params = dense_setup
+    budget, page = 32, 16
+    eng = Engine(model, params, block_size=page, max_seq_len=256,
+                 max_batch=2, chunk_tokens=budget)
+    sp = SamplingParams(max_new_tokens=4)
+    res = eng.generate([Request(prompt=f"{PROMPT} {i}", sampling=sp)
+                        for i in range(4)])
+    assert len(eng.chunk_log) > 0
+    per_slot: dict[int, list[list[tuple[int, int]]]] = {}
+    for slot, start, v in eng.chunk_log:
+        assert 1 <= v <= budget
+        assert start % page == 0            # no SkyMemory manager: all fresh
+        runs = per_slot.setdefault(slot, [])
+        if start == 0:                      # a new admission on this slot
+            runs.append([])
+        runs[-1].append((start, v))
+    prompt_lens = {r.prompt_tokens for r in res}
+    for runs in per_slot.values():
+        for spans in runs:
+            cursor = 0
+            for start, v in spans:
+                assert start == cursor      # contiguous, in order
+                cursor += v
+            assert cursor in prompt_lens    # covered exactly one prompt
+
+
+def test_no_decode_starvation_during_admission(dense_setup):
+    """While a long prompt admits mid-decode, the running sequence keeps
+    producing a token every step: the admission-window ITL sample count
+    proves tokens were decoded during every chunk-riding step."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2,
+                 chunk_tokens=16)
+    reqs = [
+        Request(prompt=f"{PROMPT} runner",
+                sampling=SamplingParams(max_new_tokens=24)),
+        Request(prompt="short", sampling=SamplingParams(max_new_tokens=2)),
+        Request(prompt=PROMPT * 2,       # long prompt, admitted mid-decode
+                sampling=SamplingParams(max_new_tokens=4)),
+    ]
+    res = eng.generate(reqs)
+    assert eng.stats.mid_decode_admissions > 0
+    # the long prompt's chunks are the entries after the LAST start==0
+    # (the first two prompts prefilled together in the cold wave)
+    last_admission = max(i for i, c in enumerate(eng.chunk_log)
+                         if c[1] == 0)
+    n_long_chunks = len(eng.chunk_log) - last_admission
+    assert n_long_chunks >= 5, "long prompt should take several chunks"
+    # every one of those chunk steps also decoded the running sequence:
+    # one admission-window ITL sample per runner per chunk-riding step
+    assert len(eng.stats.itl_admission_s) >= n_long_chunks
+    assert len(res[0].token_ids) == 24
+
+
+def test_mid_decode_admission_does_not_change_running_output(dense_setup):
+    """A long admission riding the decode steps must not perturb the
+    running sequence's greedy output (KV pages fully isolated)."""
+    cfg, model, params = dense_setup
+    sp_run = SamplingParams(max_new_tokens=16)
+    alone = Engine(model, params, block_size=16, max_seq_len=256,
+                   max_batch=2)
+    want = alone.generate(
+        [Request(prompt=f"{PROMPT} runner", sampling=sp_run)])[0].token_ids
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2)
+    res = eng.generate([
+        Request(prompt=f"{PROMPT} runner", sampling=sp_run),
+        Request(prompt="tiny", sampling=SamplingParams(max_new_tokens=1)),
+        Request(prompt=PROMPT * 2, sampling=SamplingParams(max_new_tokens=2)),
+    ])
+    assert eng.stats.mid_decode_admissions > 0
+    assert res[0].token_ids == want
+
+
+def test_whole_prompt_cached_replays_one_token(dense_setup):
+    """A whole-prompt SkyMemory hit keeps every restored block and
+    recomputes exactly ONE token through the paged chunk path -- not a
+    full page through a dense prefill."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=2)
+    prompt = "x" * 63                     # + bos = 64 tokens = 4 blocks
+    sp = SamplingParams(max_new_tokens=6)
+    eng.generate([Request(prompt=prompt, sampling=sp)])
+    eng.chunk_log = []
+    rc = eng.generate([Request(prompt=prompt, sampling=sp)])[0]
+    assert rc.prompt_tokens == 64
+    assert rc.cached_tokens == 63 and rc.prefill_tokens == 1
+    assert eng.chunk_log == [(0, 63, 1)]  # the only chunk: 1-token replay
+    rn = Engine(model, params, max_seq_len=256, max_batch=2).generate(
+        [Request(prompt=prompt, sampling=sp)])[0]
+    assert rc.token_ids == rn.token_ids
+
+
+def test_partial_prefix_hit_chunks_only_suffix(dense_setup):
+    """A partial hit restores its blocks into pages and chunks only the
+    uncached suffix, starting exactly at the cached boundary."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=2, chunk_tokens=32)
+    sp = SamplingParams(max_new_tokens=4)
+    eng.generate([Request(prompt=PROMPT, sampling=sp)])
+    eng.chunk_log = []
+    r = eng.generate([Request(prompt=PROMPT + " more text afterwards",
+                              sampling=sp)])[0]
+    assert 0 < r.cached_tokens < r.prompt_tokens
+    assert r.cached_tokens % 16 == 0
+    starts = [c[1] for c in eng.chunk_log]
+    assert starts[0] == r.cached_tokens   # suffix starts at the boundary
+    assert sum(c[2] for c in eng.chunk_log) == r.prefill_tokens
+
+
+def test_chunked_free_list_pool_matches_contiguous(dense_setup):
+    """The chunk path resolves pages through block tables identically in
+    slot-region and free-list pools."""
+    cfg, model, params = dense_setup
+    sp = SamplingParams(max_new_tokens=5)
+    reqs = lambda: [Request(prompt=f"{PROMPT} {i}", sampling=sp)
+                    for i in range(3)]
+    eng_c = Engine(model, params, block_size=16, max_seq_len=256,
+                   max_batch=2, chunk_tokens=32)
+    eng_f = Engine(model, params, block_size=16, max_seq_len=256,
+                   max_batch=2, chunk_tokens=32, num_pages=1 + 2 * 16)
+    assert eng_c.cache.contiguous and not eng_f.cache.contiguous
+    rc = [r.token_ids for r in eng_c.generate(reqs())]
+    rf = [r.token_ids for r in eng_f.generate(reqs())]
+    assert rc == rf
+
+
+def test_moe_families_fall_back_to_stop_the_world(dense_setup):
+    """Chunk splits would change capacity-based expert routing, so MoE
+    engines disable chunking regardless of the requested budget."""
+    cfg = smoke_config(get_config("granite-moe-3b-a800m")).replace(
+        dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2,
+                 chunk_tokens=32)
+    assert not eng.chunked
+    res = eng.generate([Request(prompt=PROMPT,
+                                sampling=SamplingParams(max_new_tokens=3))])
+    assert 1 <= len(res[0].token_ids) <= 3
+
+
+def test_fetch_ahead_hook_matches_sync_decode(dense_setup):
+    """pages_async (worker-thread payload decode) returns the exact pages
+    payload_to_pages produces synchronously."""
+    cfg, model, params = dense_setup
+    from repro.serving.skycache import SkyKVCAdapter
+    adapter = SkyKVCAdapter(model, params)
+    tokens = list(range(3, 35))
+    payload = adapter.kvc_fn(tokens, None, 0)
+    want_k, want_v = adapter.payload_to_pages(payload, 32, 16)
+    got_k, got_v = adapter.pages_async(payload, 32, 16).result()
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_engine_stats_latency_percentiles(dense_setup):
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2)
+    eng.generate([Request(prompt=f"{PROMPT} {i}",
+                          sampling=SamplingParams(max_new_tokens=5))
+                  for i in range(3)])
+    assert len(eng.stats.ttft_s) == 3
+    assert len(eng.stats.itl_s) > 0
+    pct = eng.stats.latency_percentiles()
+    for key in ("ttft_s", "itl_s", "itl_admission_s"):
+        assert set(pct[key]) == {"p50", "p95", "p99"}
+        assert pct[key]["p50"] <= pct[key]["p99"]
+
+
+def test_prefilling_state_visible_in_lifecycle():
+    assert SeqState.PREFILLING.value == "prefilling"

@@ -10,7 +10,10 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.chunked_prefill import chunked_prefill_attention
+from repro.kernels.chunked_prefill import (
+    chunked_prefill_attention,
+    chunked_prefill_paged,
+)
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssd_scan import ssd_chunk_scan
 
@@ -64,6 +67,110 @@ def test_chunked_prefill_noncausal():
     got = chunked_prefill_attention(q, k, v, causal=False, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
                                rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged chunked prefill (prefill chunks reading a shared page pool)
+# ---------------------------------------------------------------------------
+
+def _paged_setup(b, sq, h, hkv, d, page, p_max, n_pages, dtype=jnp.float32):
+    q = _rand((b, sq, h, d), dtype)
+    kp = _rand((n_pages, page, hkv, d), dtype)
+    vp = _rand((n_pages, page, hkv, d), dtype)
+    bt = jnp.asarray(
+        RNG.permutation(n_pages)[: b * p_max].reshape(b, p_max), jnp.int32)
+    return q, kp, vp, bt
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,h,hkv,d,page,p_max,offs,lens",
+    [
+        # ragged, non-page-multiple offsets (chunk boundaries mid-page)
+        (2, 24, 4, 2, 16, 8, 4, [5, 17], [22, 31]),
+        # page-aligned chunk boundaries (the scheduler's normal case)
+        (2, 16, 4, 4, 32, 16, 4, [16, 32], [32, 48]),
+        # zero-length suffix: all keys masked -> zeros; plus a full row
+        (2, 8, 2, 1, 16, 8, 3, [0, 3], [0, 11]),
+        # single-token replay chunk one position before a page boundary
+        (1, 1, 4, 2, 64, 16, 4, [31], [32]),
+    ],
+)
+def test_chunked_prefill_paged_matches_oracle(b, sq, h, hkv, d, page, p_max,
+                                              offs, lens, dtype):
+    q, kp, vp, bt = _paged_setup(b, sq, h, hkv, d, page, p_max,
+                                 b * p_max + 2, dtype)
+    offs = jnp.asarray(offs, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    want = ref.chunked_prefill_paged_ref(q, kp, vp, lens, bt, offs)
+    got = chunked_prefill_paged(q, kp, vp, lens, bt, offs, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_chunked_prefill_paged_matches_dense_gather():
+    """Reading the prefix in place through the block table == gathering
+    the pages into a contiguous sequence and running the dense oracle."""
+    b, sq, h, hkv, d, page, p_max = 1, 24, 4, 2, 16, 8, 4
+    q, kp, vp, bt = _paged_setup(b, sq, h, hkv, d, page, p_max, 8)
+    off, kv_len = 5, 5 + sq
+    got = chunked_prefill_paged(
+        q, kp, vp, jnp.asarray([kv_len], jnp.int32), bt,
+        jnp.asarray([off], jnp.int32), interpret=True)
+    k_seq = jnp.take(kp, bt[0], axis=0).reshape(1, p_max * page, hkv, d)
+    v_seq = jnp.take(vp, bt[0], axis=0).reshape(1, p_max * page, hkv, d)
+    want = ref.attention_ref(q, k_seq[:, :kv_len], v_seq[:, :kv_len],
+                             causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_chunked_prefill_paged_zero_length_rows_are_zero():
+    """A row with no visible key (lengths == 0, or the padded tail of a
+    ragged final chunk) must return exactly zero in kernel and oracle."""
+    b, sq, h, hkv, d, page, p_max = 2, 8, 2, 2, 8, 4, 2
+    q, kp, vp, bt = _paged_setup(b, sq, h, hkv, d, page, p_max, 6)
+    lens = jnp.asarray([0, 5], jnp.int32)
+    offs = jnp.asarray([0, 0], jnp.int32)
+    got = chunked_prefill_paged(q, kp, vp, lens, bt, offs, interpret=True)
+    want = ref.chunked_prefill_paged_ref(q, kp, vp, lens, bt, offs)
+    assert np.abs(np.asarray(got[0])).max() == 0.0
+    assert np.abs(np.asarray(want[0])).max() == 0.0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_chunked_prefill_paged_gqa_head_mapping():
+    """Query head h must read KV head h // (H/Hkv) through the table."""
+    b, sq, h, hkv, d, page, p_max = 1, 8, 8, 4, 4, 8, 2
+    q, kp, _, bt = _paged_setup(b, sq, h, hkv, d, page, p_max, 4)
+    vp = jnp.broadcast_to(
+        jnp.arange(hkv, dtype=jnp.float32)[None, None, :, None],
+        kp.shape)
+    lens = jnp.asarray([11], jnp.int32)
+    offs = jnp.asarray([4], jnp.int32)
+    out = np.asarray(chunked_prefill_paged(q, kp, vp, lens, bt, offs,
+                                           interpret=True))
+    rep = h // hkv
+    for ih in range(h):
+        np.testing.assert_allclose(out[0, :, ih], ih // rep, atol=1e-5)
+    np.testing.assert_allclose(
+        out, np.asarray(ref.chunked_prefill_paged_ref(q, kp, vp, lens, bt,
+                                                      offs)),
+        atol=2e-5, rtol=2e-4)
+
+
+def test_ops_chunked_prefill_paged_dispatch():
+    b, sq, h, hkv, d, page, p_max = 2, 16, 4, 2, 8, 8, 3
+    q, kp, vp, bt = _paged_setup(b, sq, h, hkv, d, page, p_max, 8)
+    lens = jnp.asarray([10, 20], jnp.int32)
+    offs = jnp.asarray([0, 7], jnp.int32)
+    a = ops.chunked_prefill_paged(q, kp, vp, lens, bt, offs, impl="jnp")
+    b_ = ops.chunked_prefill_paged(q, kp, vp, lens, bt, offs, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               atol=2e-5, rtol=2e-4)
 
 
 # ---------------------------------------------------------------------------
