@@ -5,6 +5,20 @@ by default so the demo runs in ~a minute on CPU) against a simulated 19x5
 constellation.  Repeated contexts hit cached blocks, skipping prefill -- the
 paper's Table-3 experiment.
 
+The ``Engine`` built below is a thin facade over three layers (see the
+``repro.serving`` package docstring for the full map):
+
+* **Scheduler** -- continuous admission, page-aligned chunk budgeting
+  (prompt chunks ride the decode step), and preemption-by-offload: under
+  memory pressure the lowest-priority sequence is swapped out instead of
+  refusing admission.
+* **Executor** -- the jitted device programs: one fused decode(+chunk)
+  step per iteration, one host sync per step.
+* **TieredKVManager** -- the KV fabric the paper implies: L0 device page
+  pool (page = 128-token SkyMemory block) -> L1 host-RAM page cache
+  (bit-exact offload/restore) -> L2 constellation Set/Get KVC (prefix
+  hits AND spilled swap blocks, one shared LRU clock across tiers).
+
 Run: PYTHONPATH=src python examples/serve_skymemory.py [--full] [--requests N]
 """
 import argparse
@@ -56,6 +70,10 @@ def main() -> None:
         spec, LosWindow(Sat(2, 9), 5, 5), Strategy.ROTATION_HOP,
         num_servers=10, chunk_bytes=6 * 1024,
     )
+    # block_size doubles as the L0 page size, so constellation-fetched
+    # blocks drop straight into pool pages; passing ``num_pages`` here
+    # would oversubscribe the pool and exercise preemption-by-offload
+    # (see benchmarks/run.py::_oversubscribed_pool)
     engine = Engine(model, params, kvc=kvc, block_size=128, max_seq_len=512,
                     max_batch=4)
 
@@ -81,6 +99,10 @@ def main() -> None:
           f"tok, decoded {s.decoded_tokens} tok | "
           f"{s.prefill_chunks} prefill chunks "
           f"(budget {engine.chunk_tokens} tok/step rides the decode step)")
+    print(f"swap tier: {s.preemptions} preemptions, {s.restores} restores, "
+          f"{s.offloaded_pages} pages offloaded, {s.spilled_blocks} blocks "
+          f"spilled to the constellation, {s.replayed_tokens} tokens "
+          "replayed (a full pool swaps nothing)")
     pct = s.latency_percentiles()
     print("chunked-admission latency: ttft "
           f"p50={pct['ttft_s']['p50']*1e3:.0f}ms "

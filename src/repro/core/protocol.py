@@ -113,16 +113,27 @@ class ConstellationKVC:
         )
         self._stores: dict[Sat, SatelliteStore] = {}
         self._capacity = per_sat_capacity_bytes
+        self.policy = None   # shared LRU clock, injected via adopt_policy
         # block hash -> n_chunks for blocks believed stored (server-side dir).
         self.directory: dict[bytes, int] = {}
         self.on_block_lost: Callable[[bytes], None] | None = None
 
     # -- plumbing ------------------------------------------------------
+    def adopt_policy(self, policy) -> None:
+        """Share a recency clock (``core.eviction.LRUClock``) with every
+        satellite store, present and future, so L2 victim selection sees
+        the same access timeline as the host-side tiers (radix index, L1
+        page cache)."""
+        self.policy = policy
+        for store in self._stores.values():
+            store.policy = policy
+
     def store_for(self, sat: Sat) -> SatelliteStore:
         sat = self.spec.wrap(sat)
         if sat not in self._stores:
             self._stores[sat] = SatelliteStore(
-                capacity_bytes=self._capacity, on_evict=self._on_evict
+                capacity_bytes=self._capacity, on_evict=self._on_evict,
+                policy=self.policy,
             )
         return self._stores[sat]
 
@@ -162,13 +173,22 @@ class ConstellationKVC:
     # -- Get KVC (paper §3.8) ------------------------------------------
     def has_block(self, block_hash: bytes) -> bool:
         """Probe chunk 0 at its server -- a missing first chunk means the
-        block is absent (paper: lookups start at the nearest satellite)."""
+        block is absent (paper: lookups start at the nearest satellite).
+
+        A positive probe *touches* the chunk's LRU clock: a presence
+        check is a use (the caller is about to rely on the block), and
+        leaving it unstamped made repeatedly-probed blocks look cold and
+        get evicted first -- the staleness the shared policy fixed."""
         self.stats.lookup_probes += 1
         sat = self.server_sat(chunk_server(0, self.num_servers))
         self.transport.record_op(
             self.transport.chunk_op_latency_s(self.center, sat, 0, round_trip=True)
         )
-        return self.store_for(sat).contains((block_hash, 0))
+        store = self.store_for(sat)
+        present = store.contains((block_hash, 0))
+        if present:
+            store.touch((block_hash, 0))
+        return present
 
     def get_block(self, block_hash: bytes, n_chunks: int | None = None) -> bytes | None:
         if n_chunks is None:
@@ -334,13 +354,21 @@ class KVCManager:
         *,
         block_size: int = 128,
         use_radix: bool = True,
+        policy=None,
     ) -> None:
         self.tokenize = tokenize
         self.kvc_fn = kvc_fn
         self.cache = cache
         self.block_size = block_size
         self.use_radix = use_radix
-        self.index = RadixBlockIndex()
+        if policy is None:
+            # local import: eviction imports this module at its top level
+            from repro.core.eviction import LRUClock
+
+            policy = LRUClock()
+        self.policy = policy
+        self.index = RadixBlockIndex(policy=policy)
+        cache.adopt_policy(policy)
         cache.on_block_lost = self._on_block_lost
         self._hash_to_chain: dict[bytes, list[bytes]] = {}
 
@@ -380,6 +408,41 @@ class KVCManager:
             metas[i] = meta
             self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
             past = payload
+            added += 1
+        if self.use_radix and added:
+            self.index.insert(hashes, metas)
+        return added
+
+    def add_precomputed_blocks(
+        self,
+        tokens: Sequence[int],
+        payload_for: Callable[[int], bytes],
+    ) -> int:
+        """Set KVC for uncached full blocks whose payloads the caller
+        already *has* -- ``payload_for(n_blocks)`` returns the serialized
+        payload covering blocks ``[0, n_blocks)``.
+
+        This is the swap-tier write path: a preempted sequence's pool
+        pages hold the exact K/V of its block-aligned prefix, so spilling
+        them to the constellation must not re-run the model the way
+        ``add_blocks_tokens`` does -- the bytes are rebuilt from the
+        exported pages instead.  Radix indexing and chain hashing are
+        identical to the computed path, so later lookups cannot tell the
+        difference."""
+        hashes = chain_hashes(tokens, self.block_size)
+        if not hashes:
+            return 0
+        n_cached, _ = (
+            self.index.longest_cached_prefix(hashes)
+            if self.use_radix
+            else (self.cache.lookup_longest(hashes), None)
+        )
+        added = 0
+        metas: list[BlockMeta | None] = [None] * len(hashes)
+        for i in range(n_cached, len(hashes)):
+            payload = payload_for(i + 1)
+            metas[i] = self.cache.set_block(hashes[i], payload)
+            self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
             added += 1
         if self.use_radix and added:
             self.index.insert(hashes, metas)

@@ -31,11 +31,21 @@ class _Node:
 
 
 class RadixBlockIndex:
-    """Path-compressed radix tree keyed by chained block hashes."""
+    """Path-compressed radix tree keyed by chained block hashes.
 
-    def __init__(self) -> None:
+    ``policy`` is an optional shared recency clock (``core.eviction.
+    LRUClock``): every cached block matched by a lookup -- and every
+    block inserted -- is stamped on it, so tier victim selection (host
+    page cache, satellite stores) sees radix prefix hits as *uses* even
+    though they never touch the constellation.  Without the stamp, the
+    hottest blocks (the ones the radix answers for locally) look coldest
+    to the stores and are evicted first.
+    """
+
+    def __init__(self, policy=None) -> None:
         self._root = _Node()
         self._count = 0
+        self._policy = policy
 
     def __len__(self) -> int:
         return self._count
@@ -58,6 +68,8 @@ class RadixBlockIndex:
                     if m is not None:
                         child.meta[j] = m
                         self._count += 1
+                        if self._policy is not None:
+                            self._policy.touch(hashes[i + j])
                 return
             # Walk the compressed edge.
             edge = child.edge
@@ -68,6 +80,8 @@ class RadixBlockIndex:
                     if k not in child.meta:
                         self._count += 1
                     child.meta[k] = m
+                    if self._policy is not None:
+                        self._policy.touch(hashes[i + k])
                 k += 1
             if k == len(edge):
                 node = child
@@ -104,6 +118,8 @@ class RadixBlockIndex:
             while k < len(edge) and i + k < len(hashes) and edge[k] == hashes[i + k]:
                 if k in child.meta:
                     best_len, best_meta = i + k + 1, child.meta[k]
+                    if self._policy is not None:
+                        self._policy.touch(hashes[i + k])
                 k += 1
             if k < len(edge):
                 break
@@ -131,6 +147,8 @@ class RadixBlockIndex:
             if i + k == len(hashes) and k >= 1 and (k - 1) in child.meta:
                 del child.meta[k - 1]
                 self._count -= 1
+                if self._policy is not None:
+                    self._policy.forget(hashes[-1])
                 return True
             if k < len(edge):
                 return False

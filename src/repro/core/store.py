@@ -26,10 +26,19 @@ class StoreStats:
 
 @dataclass
 class SatelliteStore:
-    """LRU key-value store for KVC chunks on one satellite."""
+    """LRU key-value store for KVC chunks on one satellite.
+
+    ``policy`` is an optional shared recency clock (``core.eviction.
+    LRUClock``, keyed by block hash): when present, victim selection uses
+    the *cross-tier* recency stamp instead of this store's private
+    insertion order, so radix prefix hits and presence probes at the LLM
+    host count as uses here too.  Without it the store falls back to its
+    own OrderedDict LRU (seed behavior).
+    """
 
     capacity_bytes: int | None = None
     on_evict: EvictionCallback | None = None
+    policy: object | None = None
     _data: OrderedDict = field(default_factory=OrderedDict)
     stats: StoreStats = field(default_factory=StoreStats)
 
@@ -47,6 +56,8 @@ class SatelliteStore:
         self._data[key] = value
         self.stats.bytes_stored += len(value)
         self.stats.sets += 1
+        if self.policy is not None:
+            self.policy.touch(key[0])
         self._enforce_capacity()
 
     def get(self, key: ChunkKey) -> bytes | None:
@@ -54,11 +65,25 @@ class SatelliteStore:
             self.stats.misses += 1
             return None
         self._data.move_to_end(key)  # LRU touch
+        if self.policy is not None:
+            self.policy.touch(key[0])
         self.stats.hits += 1
         return self._data[key]
 
     def contains(self, key: ChunkKey) -> bool:
         return key in self._data
+
+    def touch(self, key: ChunkKey) -> None:
+        """Stamp ``key`` as used without reading it.  Presence probes
+        (``has_block``'s chunk-0 check) go through ``contains``, which --
+        by design -- does not move the LRU clock; before this hook
+        existed, a block confirmed present over and over by lookups still
+        aged as if untouched and was evicted first (the LRU-clock
+        staleness fixed alongside the shared policy)."""
+        if key in self._data:
+            self._data.move_to_end(key)
+            if self.policy is not None:
+                self.policy.touch(key[0])
 
     def delete(self, key: ChunkKey) -> bool:
         if key in self._data:
@@ -80,8 +105,26 @@ class SatelliteStore:
     def _enforce_capacity(self) -> None:
         if self.capacity_bytes is None:
             return
+        order = None
         while self.stats.bytes_stored > self.capacity_bytes and self._data:
-            key, value = self._data.popitem(last=False)  # LRU out
+            if self.policy is not None:
+                # cross-tier LRU: coldest block-hash stamp first; ties
+                # fall back to this store's insertion order.  The order is
+                # computed ONCE per enforcement (recency only changes via
+                # the evictions themselves), so displacing k chunks costs
+                # one O(n log n) sort, not k O(n) scans -- and on_evict
+                # typically purges the victim's sibling chunks too, so a
+                # stale entry in the order is just skipped.
+                if order is None:
+                    order = iter(sorted(
+                        self._data, key=lambda k: self.policy.recency(k[0])))
+                key = next((k for k in order if k in self._data), None)
+                if key is None:
+                    order = None
+                    continue
+                value = self._data.pop(key)
+            else:
+                key, value = self._data.popitem(last=False)  # LRU out
             self.stats.bytes_stored -= len(value)
             self.stats.evictions += 1
             if self.on_evict is not None:

@@ -242,6 +242,32 @@ class PagedKVCache:
             changed = True
         return changed
 
+    def pages_allocated(self, slot: int) -> int:
+        """Pages currently backing ``slot`` (contiguous regions always own
+        their full span; free-list slots grow lazily)."""
+        if self.contiguous:
+            return self.pages_per_seq
+        return len(self._slot_pages[slot])
+
+    def export_pages(self, slot: int, n_pages: int):
+        """Offload view: the slot's first ``n_pages`` pages as host arrays
+        ``[layers, n_pages, page_size, kv_heads, head_dim]``.
+
+        ONE gathered device read per pool (then a single device->host
+        transfer each), not a round trip per page -- the export half of
+        preemption-by-offload, where a victim sequence's K/V moves to the
+        host tier so its pool pages can be reassigned.  ``write_pages`` is
+        the exact inverse; an export/import round trip is bit-identical
+        (int8 pools move as raw int8)."""
+        ids = self._slot_pages[slot][:n_pages]
+        if len(ids) != n_pages:
+            raise RuntimeError(
+                f"slot {slot}: export of {n_pages} pages exceeds "
+                f"{len(ids)} allocated")
+        idx = jnp.asarray(ids, jnp.int32)
+        return (np.asarray(self.k_pool[:, idx]),
+                np.asarray(self.v_pool[:, idx]))
+
     def free_slot(self, slot: int) -> None:
         """Return the slot's pages to the pool (free-list mode repoints
         the slot at the scratch page)."""

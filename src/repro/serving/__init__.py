@@ -1,73 +1,102 @@
-"""Serving layer: the paged, continuously-batched SkyMemory runtime.
+"""Serving layer: a tiered-KV, continuously-batched SkyMemory runtime.
 
-Engine architecture
-===================
+Layering
+========
 
-**Paged layout.**  Dense-attention families decode against a
-``repro.models.cache.PagedKVCache``: one device-resident pool of K/V pages
-per layer (``[L, N_pages, page, Hkv, hd]``) whose page size equals the
-SkyMemory block size (the paper's 128-token KVC blocks).  Each batch slot
-owns a page list through an int32 block table; pages come from a shared
-free list and are recycled when a sequence finishes.  Because pages and
-constellation blocks coincide, a prefix fetched from the LEO cache is
-reshaped ``[L, n_blocks, page, Hkv, hd]`` and scattered straight into pool
-pages -- there is no dense per-sequence restacking between prefill and
-decode.  Full-size pools (the default) use fixed per-slot page regions,
-so decode attention reads the pool as ``[B, P, page, Hkv, hd]`` by
-reshape with zero gather; oversubscribed pools (explicit ``num_pages``)
-resolve pages through the Pallas paged-attention kernel's block-table
-variant (scalar-prefetched tables; pure-jnp grouped-GQA oracle on CPU).
-The jitted step donates the pools, so backends with buffer donation
-update the cache in place.
+The stack is three explicit layers behind a thin ``Engine`` facade
+(``repro.serving.engine``), each separately importable and separately
+tested:
 
-**Chunk scheduler.**  A request moves QUEUED -> PREFILLING -> RUNNING
--> FINISHED (``repro.serving.request.SeqState``).  Admission fills
-freed slots from the queue *mid-decode* (continuous batching) and
-reserves the worst-case page span (prompt + max_new_tokens, capped at
-max_seq_len), so a running sequence never exhausts the pool mid-decode
-and block tables only change at admission/release; unused pages return
-to the free list at early EOS.  Prompts are then prefilled in
-page-aligned *chunks* of at most ``chunk_tokens`` (the per-step budget)
-that ride the decode step: each fused step decodes every running slot
-AND retires one chunk, which writes its K/V into the slot's pool pages
-and attends over the SkyMemory-restored prefix + earlier chunks *in
-place* through the paged chunked-prefill kernel (scalar-prefetched
-block tables, runtime offsets) -- decode never pauses for an admission,
-and there is no dense ``prefix_state`` restaging anywhere in the paged
-families.  Chunks are FIFO across PREFILLING sequences; a sequence's
-SkyMemory lookup happens when it reaches the head (after earlier
-write-backs, so duplicate contexts queued together still hit), its
-payload->pages decode runs on the adapter's fetch-ahead thread
-overlapping a live decode step, and a whole-prompt hit keeps every
-restored block, replaying only the final token as a one-token chunk.
-When *nothing* is decoding (cold start), the admission wave prefills
-together as lockstep batched chunk steps instead -- the throughput of a
-batched prefill without whole-prompt compile buckets (chunk buffers are
-power-of-two bucketed up to the budget, so compile count is bounded by
-the chunk size, not max_seq_len).  A sequence's first token is sampled
-inside the step in which its last chunk lands.  MoE families keep
-stop-the-world admission (``chunk_tokens=0`` forces it everywhere, as
-the pre-chunked baseline): capacity routing is group-composition
-dependent, so chunk splits would change real tokens' routing.  Finish
-reasons: ``eos``, ``max_new_tokens``, ``max_seq_len``.
+* **Scheduler** (``repro.serving.scheduler``) -- the host-side brain:
+  request lifecycle (QUEUED -> PREFILLING -> RUNNING -> FINISHED, with
+  PREEMPTED as the swap detour), continuous admission, page-aligned
+  chunk budgeting, and the preemption policy.  It speaks tokens and
+  slots, never device arrays.
+* **Executor** (``repro.serving.executor``) -- every jitted device
+  program: the fused decode step, the mixed decode+chunk step, the
+  cold-start chunk wave, bucketed dense prefill, the vectorized
+  sampler, and the PRNG stream; plus the dense runtime for non-paged
+  families.
+* **KVManager** (``repro.serving.kv_manager``) -- the
+  ``TieredKVManager``, a three-level KV fabric:
 
-**Sync points.**  The decode loop launches ONE jitted program per step
-(embed -> layers -> paged attention -> vectorized per-slot sampler,
-plus the riding prefill chunk while an admission is in flight) and
-performs ONE host sync per step: reading the sampled token ids, which the
-host scheduler needs for EOS detection, page allocation, and admission
-(a final chunk's first token rides the same vector as row ``B``).
-Cold-start chunk waves sample their first tokens in one call with one
-sync.  Sampling parameters (temperature / top-k / top-p) are stacked
+  - **L0, device page pool** (``repro.models.cache.PagedKVCache``): one
+    pool of K/V pages per layer (``[L, N_pages, page, Hkv, hd]``), page
+    size = the SkyMemory block size (the paper's 128-token KVC blocks).
+    Slots own pages through int32 block tables; pages are allocated
+    *lazily* as sequences grow -- no worst-case reservation -- so the
+    pool can run more live sequences than it could hold at their maximum
+    lengths.  Full-size pools use fixed per-slot regions (zero-gather
+    reshape reads); oversubscribed pools (explicit ``num_pages``) go
+    through the Pallas paged-attention kernel's scalar-prefetched
+    block-table variant.  The jitted step donates the pools, so backends
+    with buffer donation update the cache in place.
+  - **L1, host-RAM page cache** (``HostPageCache``): preempted
+    sequences' pages, exported in ONE gathered device read per pool.  A
+    hit restores bit-identical K/V including the non-block-aligned tail
+    page, so a resumed sequence replays nothing.
+  - **L2, the constellation** (``core.protocol`` Set/Get KVC through
+    ``SkyKVCAdapter``): the paper's LEO cache, now a real swap tier.
+    Host-cache overflow spills a victim's *block-aligned* prefix as
+    payloads built directly from its exported pages (no model
+    recompute), indexed in the same §3.10 radix tree as ordinary
+    write-backs; restores that miss L1 fetch the longest cached block
+    prefix and replay only the unaligned tail.
+
+  One ``core.eviction.LRUClock`` stamps accesses across L1, L2, and the
+  radix index, so every tier's victim selection sees one recency
+  timeline.
+
+Preemption-by-offload
+=====================
+
+Admission needs a free slot and pages for the prompt plus one decode
+write.  When a running sequence needs a page and the pool has none
+(growth pressure), or a strictly higher-priority request is queued
+behind a full machine (``Request.priority``), the scheduler offloads the
+lowest-priority sequence -- ties broken against the most recently
+admitted -- up the tier hierarchy and requeues it at the front.  The
+already-sampled next token travels with the swap, so a preempted-and-
+resumed sequence emits byte-identical tokens to an uninterrupted run
+when restored from L1, and replays only its unaligned tail through the
+chunked-prefill path otherwise.  Admission refusal and pool exhaustion
+are therefore no longer failure modes: an oversubscribed pool completes
+every request.
+
+Chunked prefill and sync points
+===============================
+
+Prompts prefill in page-aligned chunks of at most ``chunk_tokens`` that
+ride the decode step: each fused step decodes every running slot AND
+retires one chunk, which writes its K/V into pool pages and attends over
+the SkyMemory-restored prefix + earlier chunks *in place* (paged
+chunked-prefill kernel, runtime offsets -- one compilation per buffer
+shape).  Chunks are FIFO across PREFILLING sequences; a sequence's
+SkyMemory lookup happens at chunk-head (after earlier write-backs, so
+duplicate contexts queued together still hit) and its payload->pages
+decode runs on the adapter's fetch-ahead thread overlapping a live
+decode step.  Cold-start waves prefill together as lockstep batched
+chunk steps.  MoE families keep stop-the-world admission
+(``chunk_tokens=0``): capacity routing is group-composition dependent,
+so chunk splits would change real tokens' routing.
+
+The decode loop launches ONE jitted program per step and performs ONE
+host sync: reading the sampled token ids (a finishing chunk's first
+token rides the same vector as row ``B``).  Sampling params are stacked
 into [B] arrays and re-uploaded only when slot membership changes.
-``EngineStats`` records TTFT and inter-token-latency samples (plus the
-during-admission ITL subset) for p50/p95/p99 reporting.
+``EngineStats`` records TTFT / inter-token-latency samples (plus the
+during-admission ITL subset) for p50/p95/p99 reporting, and the swap
+counters (``preemptions``, ``restores``, ``offloaded_pages``,
+``spilled_blocks``, ``replayed_tokens``).
 
-Non-paged families (MLA latent, SSM state, hybrid, encoder-decoder) keep
-a dense batched cache but share the vectorized sampler and the
-one-sync-per-step loop; paging their decode state is future work.
+Non-paged families (MLA latent, SSM state, hybrid, encoder-decoder)
+keep a dense batched cache (``DenseRuntime``) but share the vectorized
+sampler and the one-sync-per-step loop; paging their decode state is
+future work.
 """
-from repro.serving.engine import Engine, EngineStats
+from repro.serving.engine import Engine
+from repro.serving.executor import DenseRuntime, PagedExecutor
+from repro.serving.kv_manager import HostPageCache, TieredKVManager
 from repro.serving.request import (
     FinishReason,
     GenerationResult,
@@ -80,7 +109,9 @@ from repro.serving.sampler import (
     sample_batch,
     stack_sampling,
 )
+from repro.serving.scheduler import Scheduler, chunk_spans, head_span
 from repro.serving.skycache import SkyKVCAdapter
+from repro.serving.stats import EngineStats
 from repro.serving.tokenizer import ByteTokenizer
 
 __all__ = [
@@ -91,6 +122,13 @@ __all__ = [
     "Request",
     "SamplingParams",
     "SeqState",
+    "Scheduler",
+    "PagedExecutor",
+    "DenseRuntime",
+    "TieredKVManager",
+    "HostPageCache",
+    "chunk_spans",
+    "head_span",
     "sample",
     "sample_batch",
     "stack_sampling",

@@ -1,134 +1,43 @@
-"""Serving engine: a paged, continuously-batched, chunked-prefill runtime.
+"""Engine: the thin orchestration facade over the three serving layers.
 
-Per request: tokenize -> SkyMemory longest-prefix lookup (radix index +
-constellation fetch) -> drop fetched 128-token blocks straight into KV
-pages -> prefill the uncached suffix in page-aligned *chunks* that ride
-the decode step -> continuous-batching decode.  New full blocks are
-written back to the constellation (Set KVC), so repeated prompts/contexts
-hit more blocks -- the paper's §5 testbed loop, with the LEO cache
-simulated in-process.
+The runtime itself lives in three separately importable, separately
+tested modules (see the ``repro.serving`` package docstring for the full
+map):
 
-Architecture (see ``repro.serving`` package docstring for the full map):
+* ``repro.serving.scheduler``  -- admission, chunk budgeting, and the
+  preemption-by-offload policy (host-side state machine);
+* ``repro.serving.executor``   -- the jitted mixed decode/prefill steps,
+  sampling, and device state (plus the dense runtime for non-paged
+  families);
+* ``repro.serving.kv_manager`` -- the ``TieredKVManager``: L0 device
+  page pool -> L1 host-RAM page cache -> L2 constellation Set/Get KVC.
 
-* dense-attention families run the **paged runtime**: a ``PagedKVCache``
-  pool (page size = the SkyMemory block size) lives on device across
-  requests; each step is ONE jitted program -- decode for every slot
-  (embed -> layers -> block-table paged attention -> vectorized sampler)
-  plus, while an admission is in flight, one token-budgeted prefill
-  chunk that writes its K/V into pool pages and attends over the
-  SkyMemory-restored prefix *in place* (the paged chunked-prefill
-  kernel).  Decode never pauses for admissions; a sequence's first
-  token is sampled inside the step in which its last chunk lands.
-* MoE families keep stop-the-world admission (capacity-based expert
-  routing is group-composition dependent, so splitting a prompt into
-  chunks would change its routing); their restored prefixes still live
-  in pool pages.
-* MLA / SSM / hybrid / encoder-decoder families keep the dense per-batch
-  cache (their decode state is not plain per-token K/V) but share the
-  vectorized sampler and the one-sync-per-step decode loop.
+``Engine`` wires them together and preserves the public API every test,
+benchmark, and example drives: construct with a model + params (+ an
+optional ``ConstellationKVC``), call ``generate``, read ``stats`` /
+``chunk_log`` / ``cache``.  Per request the flow is: tokenize ->
+SkyMemory longest-prefix lookup -> fetched 128-token blocks drop
+straight into KV pages -> the uncached suffix prefills in page-aligned
+chunks that ride the decode step -> continuous-batching decode, with
+preemption-by-offload absorbing pool pressure -- the paper's §5 testbed
+loop with the LEO cache simulated in-process and used as a real swap
+tier.
 """
 from __future__ import annotations
 
-import time
-from collections import deque
-from dataclasses import dataclass, field
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core.protocol import ConstellationKVC, KVCManager
 from repro.models.model import Model
-from repro.serving.request import (
-    FinishReason,
-    GenerationResult,
-    Request,
-    SeqState,
+from repro.serving.executor import DenseRuntime, PagedExecutor
+from repro.serving.kv_manager import TieredKVManager
+from repro.serving.request import GenerationResult, Request
+from repro.serving.scheduler import (  # noqa: F401  (re-exported API)
+    Scheduler,
+    chunk_spans,
+    head_span,
 )
-from repro.serving.sampler import SamplingParams, sample_batch, stack_sampling
 from repro.serving.skycache import SkyKVCAdapter
+from repro.serving.stats import EngineStats
 from repro.serving.tokenizer import ByteTokenizer
-
-
-def head_span(n_tokens: int, cursor: int, budget: int) -> tuple[int, int]:
-    """The next chunk for a prompt of ``n_tokens`` prefilled up to
-    ``cursor``: ``(start, length)`` with length at most ``budget``.  The
-    scheduler consumes exactly this, one span per step."""
-    return cursor, min(budget, n_tokens - cursor)
-
-
-def chunk_spans(n_tokens: int, start: int, budget: int
-                ) -> list[tuple[int, int]]:
-    """The full chunk plan for a prompt of ``n_tokens`` whose pages are
-    already valid up to ``start`` (a restored SkyMemory prefix, or the
-    replay point of a whole-prompt hit): the ``head_span`` sequence,
-    covering ``[start, n_tokens)`` in order.  Only the final span may be
-    ragged, so every split lands on a page boundary whenever ``start``
-    and ``budget`` are page-aligned."""
-    spans = []
-    cursor = start
-    while cursor < n_tokens:
-        s, v = head_span(n_tokens, cursor, budget)
-        spans.append((s, v))
-        cursor = s + v
-    return spans
-
-
-def _percentiles(xs: list[float]) -> dict[str, float]:
-    if not xs:
-        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
-    p50, p95, p99 = np.percentile(np.asarray(xs, np.float64), [50, 95, 99])
-    return {"p50": float(p50), "p95": float(p95), "p99": float(p99)}
-
-
-@dataclass
-class EngineStats:
-    requests: int = 0
-    cached_tokens: int = 0
-    prefilled_tokens: int = 0
-    decoded_tokens: int = 0
-    prefill_time_s: float = 0.0
-    decode_time_s: float = 0.0
-    decode_steps: int = 0             # jitted step programs launched
-    mid_decode_admissions: int = 0    # requests admitted into a live batch
-    prefill_chunks: int = 0           # chunk programs fused into steps
-    ttft_s: list[float] = field(default_factory=list)   # per request
-    itl_s: list[float] = field(default_factory=list)    # per decoded token
-    # the subset of itl_s observed by running sequences while an
-    # admission was in flight -- the tail the chunked scheduler exists
-    # to flatten (a whole-run p99 dilutes a few admission stalls away)
-    itl_admission_s: list[float] = field(default_factory=list)
-
-    def latency_percentiles(self) -> dict[str, dict[str, float]]:
-        """p50/p95/p99 of time-to-first-token and inter-token latency --
-        the serving SLO view of the run (tokens/s hides admission
-        stalls; the ITL tail is where stop-the-world prefill shows)."""
-        return {"ttft_s": _percentiles(self.ttft_s),
-                "itl_s": _percentiles(self.itl_s),
-                "itl_admission_s": _percentiles(self.itl_admission_s)}
-
-
-@dataclass
-class _Seq:
-    request: Request
-    tokens: list[int]
-    state: SeqState = SeqState.QUEUED
-    cached: int = 0
-    out_ids: list[int] = field(default_factory=list)
-    done: bool = False
-    finish_reason: str = FinishReason.MAX_NEW_TOKENS.value
-    enqueue_t: float = 0.0
-    ttft_s: float = 0.0
-    wall_s: float = 0.0
-    # chunked-prefill state machine:
-    reserve: int = 0                  # worst-case token footprint reserved
-    cursor: int = 0                   # next prompt token to prefill
-    looked_up: bool = False           # SkyMemory lookup done for this seq
-    pages_future: object | None = None   # in-flight payload -> pages decode
-    dev_ops: tuple | None = None      # per-admission device operands
-    # legacy (non-paged) path only:
-    dense_state: dict | None = None
-    last_logits: jnp.ndarray | None = None
 
 
 class Engine:
@@ -145,6 +54,7 @@ class Engine:
         seed: int = 0,
         num_pages: int | None = None,
         chunk_tokens: int | None = None,
+        host_cache_pages: int | None = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -152,14 +62,9 @@ class Engine:
         self.tokenizer = ByteTokenizer(self.cfg.vocab_size)
         self.max_seq_len = max_seq_len
         self.max_batch = max_batch
-        self.write_back = write_back
         self.block_size = block_size
-        self.stats = EngineStats()
-        self._key = jax.random.PRNGKey(seed)
         self.adapter = SkyKVCAdapter(model, params)
         self.manager: KVCManager | None = None
-        self._wb_future = None        # in-flight async Set KVC write-back
-        self.chunk_log: list[tuple[int, int, int]] = []  # (slot, start, n)
         if kvc is not None:
             self.manager = KVCManager(
                 self.tokenizer.encode, self.adapter.kvc_fn, kvc,
@@ -192,746 +97,73 @@ class Engine:
                                      "the page/block size")
             self.chunk_tokens = chunk_tokens
             self.chunked = bool(chunk_tokens)
-            # pools are donated: on backends with donation support the
-            # one-token write updates the cache in place instead of
-            # copying the whole pool every step (CPU falls back to copy)
-            self._step = jax.jit(self._paged_step,
-                                 static_argnames=("mode",),
-                                 donate_argnums=(1, 2))
-            self._mixed = jax.jit(self._mixed_step,
-                                  static_argnames=("mode",),
-                                  donate_argnums=(1, 2))
-            # cold-start admission waves: batched chunk steps (nothing is
-            # decoding, so the whole wave prefills together)
-            self._chunk_wave = jax.jit(self.model.prefill_chunk_paged,
-                                       donate_argnums=(1, 2))
-            self._prefill = jax.jit(
-                lambda p, t: self.model.forward(p, t, collect_state=True)
+            self.kv = TieredKVManager(
+                self.cache, self.adapter, self.manager,
+                host_cache_pages=host_cache_pages, write_back=write_back,
             )
+            self.executor = PagedExecutor(
+                model, params, self.cache, chunk_tokens=chunk_tokens,
+                max_seq_len=max_seq_len, seed=seed,
+            )
+            self.scheduler = Scheduler(
+                self.executor, self.kv, self.tokenizer,
+                max_batch=max_batch, max_seq_len=max_seq_len,
+                chunk_tokens=chunk_tokens,
+            )
+            self._dense = None
         else:
-            self._decode = jax.jit(model.decode_step)
-            self._sample = jax.jit(sample_batch)
+            self.kv = None
+            self.scheduler = None
+            self._dense = DenseRuntime(
+                model, params, self.tokenizer, self.adapter, self.manager,
+                max_seq_len=max_seq_len, max_batch=max_batch,
+                write_back=write_back, seed=seed,
+            )
+        self.stats = EngineStats()
 
     # ------------------------------------------------------------------
     def generate(self, requests: list[Request]) -> list[GenerationResult]:
         if not requests:
             return []
         if self.paged:
-            return self._generate_paged(requests)
-        results: list[GenerationResult] = []
-        for lo in range(0, len(requests), self.max_batch):
-            results.extend(self._run_batch(requests[lo : lo + self.max_batch]))
-        return results
+            return self.scheduler.run(requests)
+        return self._dense.generate(requests)
 
-    # ==================================================================
-    # Paged runtime (dense-attention families)
-    # ==================================================================
-    def _decode_sample(self, params, k_pool, v_pool, block_tables, lengths,
-                      tokens, key, temps, top_ks, top_ps, mode):
-        """Decode every slot and sample its next token: the shared tail of
-        the plain and mixed steps.
+    # ------------------------------------------------------------------
+    # facade surface: one stats / chunk-log / write-back view across the
+    # layers (benchmarks reset stats by assignment; tests reset chunk_log)
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> EngineStats:
+        return self._stats
 
-        ``mode`` is decided host-side from the *active slots'* sampling
-        params (it only changes on admission/finish, so at most a few
-        compilations): ``greedy`` is a pure argmax, ``temp`` skips the
-        top-k/top-p sort machinery, ``full`` runs the general sampler.
-        """
-        logits, k_pool, v_pool = self.model.decode_step_paged(
-            params, k_pool, v_pool, tokens[:, None], block_tables, lengths,
-            contiguous=self.cache.contiguous,
-        )
-        lg = logits[:, 0]
-        if mode == "greedy":
-            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        elif mode == "temp":
-            lg32 = lg.astype(jnp.float32)
-            greedy = jnp.argmax(lg32, axis=-1).astype(jnp.int32)
-            is_greedy = temps <= 0.0
-            scaled = lg32 / jnp.where(is_greedy, 1.0, temps)[:, None]
-            sampled = jax.random.categorical(key, scaled, -1).astype(jnp.int32)
-            nxt = jnp.where(is_greedy, greedy, sampled)
+    @stats.setter
+    def stats(self, value: EngineStats) -> None:
+        self._stats = value
+        if self.paged:
+            self.scheduler.stats = value
+            self.kv.stats = value
         else:
-            nxt = sample_batch(lg, key, temps, top_ks, top_ps)
-        return nxt, k_pool, v_pool
+            self._dense.stats = value
 
-    def _paged_step(self, params, k_pool, v_pool, block_tables, lengths,
-                    tokens, key, temps, top_ks, top_ps, *, mode):
-        """One fused decode step: model + sampler, one device program."""
-        return self._decode_sample(params, k_pool, v_pool, block_tables,
-                                   lengths, tokens, key, temps, top_ks,
-                                   top_ps, mode)
+    @property
+    def chunk_log(self) -> list[tuple[int, int, int]]:
+        return self.scheduler.chunk_log
 
-    def _mixed_step(self, params, k_pool, v_pool, block_tables, lengths,
-                    tokens, key, temps, top_ks, top_ps,
-                    c_toks, c_bt, c_off, c_valid, c_temp, c_tk, c_tp,
-                    *, mode):
-        """One fused mixed step: a prefill chunk rides the decode step.
+    @chunk_log.setter
+    def chunk_log(self, value) -> None:
+        self.scheduler.chunk_log = value
 
-        The chunk (``c_toks`` [1, C] at absolute offset ``c_off``,
-        ``c_valid`` real tokens) writes its K/V into pool pages and
-        attends over the SkyMemory-restored prefix + earlier chunks in
-        place; then every slot decodes exactly as in the plain step, so
-        running sequences never stall for an admission.  If this is the
-        sequence's final chunk, its first output token is the extra id
-        sampled here from the last valid chunk logit -- returned as row
-        ``B`` of the token vector so the host still does ONE sync.
-        ``c_off``/``c_valid`` are traced, so one compilation serves every
-        chunk of every admission (no power-of-two prefill buckets).
-        """
-        kd, kc = jax.random.split(key)
-        c_logits, k_pool, v_pool = self.model.prefill_chunk_paged(
-            params, k_pool, v_pool, c_toks, c_bt, c_off, c_valid)
-        c_tid = sample_batch(c_logits, kc, c_temp, c_tk, c_tp)
-        nxt, k_pool, v_pool = self._decode_sample(
-            params, k_pool, v_pool, block_tables, lengths, tokens, kd,
-            temps, top_ks, top_ps, mode)
-        return jnp.concatenate([nxt, c_tid]), k_pool, v_pool
+    @property
+    def write_back(self) -> bool:
+        return self.kv.write_back if self.paged else self._dense.write_back
 
-    @staticmethod
-    def _sampler_mode(samp: list[SamplingParams]) -> str:
-        if any(p.top_k > 0 or p.top_p < 1.0 for p in samp
-               if p.temperature > 0.0):
-            return "full"
-        if any(p.temperature > 0.0 for p in samp):
-            return "temp"
-        return "greedy"
-
-    def _generate_paged(
-        self, requests: list[Request]
-    ) -> list[GenerationResult]:
-        t_start = time.perf_counter()
-        seqs = [self._make_seq(r) for r in requests]
-        pending: deque[_Seq] = deque(seqs)
-        active: dict[int, _Seq] = {}
-        prefilling: dict[int, _Seq] = {}   # insertion order == chunk FIFO
-        free_slots = list(range(self.max_batch - 1, -1, -1))
-        b = self.max_batch
-        self.chunk_log = []
-
-        lengths_h = np.zeros(b, np.int32)
-        tokens_h = np.zeros(b, np.int32)
-        samp = [SamplingParams() for _ in range(b)]
-        last_tok_t = [0.0] * b
-        samp_dirty = bt_dirty = True
-        admit_stall = False   # a stop-the-world wave ran under live decodes
-
-        while pending or active or prefilling:
-            # -- admission: fill freed slots from the queue ------------
-            admitted: list[tuple[_Seq, int]] = []
-            while (pending and free_slots
-                   and self.cache.can_admit(
-                       self._reserve_tokens(pending[0]))):
-                s = pending.popleft()
-                slot = free_slots.pop()
-                # reserve pages NOW so can_admit for the rest of the wave
-                # sees the shrunken free list (free-list pools)
-                s.reserve = self._reserve_tokens(s)
-                self.cache.ensure_capacity(slot, s.reserve)
-                if active or prefilling:
-                    self.stats.mid_decode_admissions += 1
-                admitted.append((s, slot))
-            if admitted:
-                bt_dirty = True
-                if self.chunked and (active or prefilling):
-                    # decode is live: chunks ride the decode steps so no
-                    # running sequence stalls for this admission
-                    for s, slot in admitted:
-                        s.state = SeqState.PREFILLING
-                        prefilling[slot] = s
-                        # park the slot's decode lane on its last reserved
-                        # position: the idle lane's unconditional write
-                        # lands where no chunk data lives and where any
-                        # real decode write would overwrite it anyway
-                        lengths_h[slot] = s.reserve - 1
-                        tokens_h[slot] = 0
-                else:
-                    # nothing is decoding, so nothing can starve: prefill
-                    # the whole wave now (as batched chunk steps when
-                    # chunked, else the bucketed stop-the-world wave)
-                    admit_stall = bool(active)
-                    if self.chunked:
-                        self._admit_wave_chunked(admitted, lengths_h,
-                                                 tokens_h, samp)
-                    else:
-                        self._admit_wave(admitted, lengths_h, tokens_h,
-                                         samp)
-                    samp_dirty = True
-                    now = time.perf_counter()
-                    for s, slot in admitted:
-                        if s.done:    # finished on its very first token
-                            self._release(s, slot, lengths_h, tokens_h,
-                                          samp)
-                            free_slots.append(slot)
-                        else:
-                            active[slot] = s
-                            last_tok_t[slot] = now
-            if not (active or prefilling):
-                if pending:
-                    raise RuntimeError(
-                        "cannot admit request: KV page pool too small for a "
-                        f"{self._reserve_tokens(pending[0])}-token worst-case"
-                        " footprint (prompt + max_new_tokens)")
-                break
-
-            # -- chunk scheduling: at most chunk_tokens prompt tokens ----
-            chunk = self._plan_chunk(prefilling, bool(active))
-
-            if samp_dirty:
-                temps_d, tks_d, tps_d = stack_sampling(samp)
-                mode = self._sampler_mode(samp)
-                samp_dirty = False
-            if bt_dirty:
-                # contiguous slot regions need no table on device; free-list
-                # pools upload the table only when admission/release (the
-                # full worst-case span is reserved up front) changed it
-                bt_d = (None if self.cache.contiguous
-                        else jnp.asarray(self.cache.block_tables))
-                bt_dirty = False
-            len_d = jnp.asarray(lengths_h)
-            tok_d = jnp.asarray(tokens_h)
-
-            # -- one fused device step; ONE host sync (the token read) --
-            self._key, k = jax.random.split(self._key)
-            t0 = time.perf_counter()
-            if chunk is None:
-                nxt, k_pool, v_pool = self._step(
-                    self.params, self.cache.k_pool, self.cache.v_pool,
-                    bt_d, len_d, tok_d, k, temps_d, tks_d, tps_d, mode=mode,
-                )
-            else:
-                s_c, slot_c, start_c, v_c, ops_c = chunk
-                nxt, k_pool, v_pool = self._mixed(
-                    self.params, self.cache.k_pool, self.cache.v_pool,
-                    bt_d, len_d, tok_d, k, temps_d, tks_d, tps_d,
-                    *ops_c, mode=mode,
-                )
-            self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
-            nxt_h = np.asarray(nxt)           # the step's single host sync
-            now = time.perf_counter()
-            self.stats.decode_time_s += now - t0
-            self.stats.decode_steps += 1
-
-            # -- host-side scheduling on the synced token ids ----------
-            in_admission = bool(prefilling) or admit_stall
-            admit_stall = False
-            for slot, s in list(active.items()):
-                tid = int(nxt_h[slot])
-                s.out_ids.append(tid)
-                self.stats.decoded_tokens += 1
-                itl = now - last_tok_t[slot]
-                self.stats.itl_s.append(itl)
-                if in_admission:
-                    self.stats.itl_admission_s.append(itl)
-                last_tok_t[slot] = now
-                lengths_h[slot] += 1
-                if self._finished(s, tid):
-                    active.pop(slot)
-                    self._release(s, slot, lengths_h, tokens_h, samp)
-                    free_slots.append(slot)
-                    samp_dirty = bt_dirty = True
-                else:
-                    tokens_h[slot] = tid
-
-            # -- chunk retirement --------------------------------------
-            if chunk is not None:
-                self.stats.prefill_chunks += 1
-                s_c.cursor = start_c + v_c
-                if s_c.cursor >= len(s_c.tokens):
-                    # last chunk landed: its first token was sampled
-                    # in-step (row b of the synced vector)
-                    prefilling.pop(slot_c)
-                    if self.write_back and self.manager is not None:
-                        # Set KVC on the worker thread; the next
-                        # sequence's lookup drains it, so duplicate
-                        # contexts queued together still hit without the
-                        # payload computation stalling running decodes
-                        self._write_back_async(s_c.tokens)
-                    self._finish_prefill(s_c, slot_c, int(nxt_h[b]), now,
-                                         lengths_h, tokens_h, samp)
-                    if s_c.done:
-                        self._release(s_c, slot_c, lengths_h, tokens_h,
-                                      samp)
-                        free_slots.append(slot_c)
-                    else:
-                        active[slot_c] = s_c
-                        last_tok_t[slot_c] = now
-                    samp_dirty = bt_dirty = True
-
-        self._drain_write_back()     # settle Set KVC before handing back
-        wall = time.perf_counter() - t_start
-        out = []
-        for s in seqs:
-            s.wall_s = wall
-            out.append(self._result(s))
-        return out
-
-    def _plan_chunk(self, prefilling: dict[int, _Seq], have_active: bool):
-        """Pick the next prefill chunk (FIFO over prefilling sequences).
-
-        The head sequence's SkyMemory lookup happens lazily here -- after
-        any earlier sequence's write-back, so duplicate contexts queued
-        together still hit -- and its payload->pages decode runs on the
-        adapter's fetch-ahead thread: when other sequences are decoding,
-        the chunk is deferred one step so the deserialization overlaps
-        that step's device compute instead of stalling the loop.
-        Returns ``(seq, slot, start, n_valid, device_operands)`` or None.
-        """
-        if not self.chunked or not prefilling:
-            return None
-        slot = next(iter(prefilling))
-        s = prefilling[slot]
-        n = len(s.tokens)
-        if not s.looked_up:
-            t0 = time.perf_counter()
-            self._lookup_and_prefetch(s)
-            self.stats.prefill_time_s += time.perf_counter() - t0
-        if s.pages_future is not None:
-            if have_active and not s.pages_future.done():
-                return None       # overlap payload decode with this step
-            k_blocks, v_blocks = s.pages_future.result()
-            s.pages_future = None
-            self.cache.write_pages(slot, 0, k_blocks, v_blocks)
-        start, v = head_span(n, s.cursor, self.chunk_tokens)
-        self.cache.note_span(slot, start, v)
-        self.chunk_log.append((slot, start, v))
-        if s.dev_ops is None:
-            # per-sequence invariants, uploaded once per admission: the
-            # block-table row is frozen (worst-case pages reserved up
-            # front) and sampling params never change per request
-            s.dev_ops = (
-                jnp.asarray(self.cache.table_row(slot)[None], jnp.int32),
-                *stack_sampling([s.request.sampling]),
-            )
-        buf = np.zeros((1, self._chunk_buf(v)), np.int32)
-        buf[0, :v] = s.tokens[start:start + v]
-        bt_row, c_temp, c_tk, c_tp = s.dev_ops
-        ops_c = (
-            jnp.asarray(buf), bt_row,
-            jnp.asarray([start], jnp.int32), jnp.asarray([v], jnp.int32),
-            c_temp, c_tk, c_tp,
-        )
-        return s, slot, start, v, ops_c
+    @write_back.setter
+    def write_back(self, value: bool) -> None:
+        if self.paged:
+            self.kv.write_back = value
+        else:
+            self._dense.write_back = value
 
     def _chunk_buf(self, v: int) -> int:
-        """Chunk-buffer length for ``v`` valid tokens: the next power of
-        two (floor 32), capped at the chunk budget.  Short prompts and
-        ragged final chunks don't pay for a full-budget buffer, and the
-        compile count is bounded by the (small) budget instead of
-        max_seq_len -- the legacy O(log^2) whole-prompt buckets reduce to
-        a handful of chunk-sized shapes."""
-        b = 32
-        while b < v:
-            b *= 2
-        return min(b, max(self.chunk_tokens, v))
-
-    def _admit_wave_chunked(self, admitted: list[tuple[_Seq, int]],
-                            lengths_h, tokens_h, samp) -> None:
-        """Cold-start admission wave, chunked flavor: nothing is decoding,
-        so the wave's prompts prefill *together* as lockstep batched chunk
-        steps over the page pool -- the throughput of the old batched wave
-        without its dense restaging or whole-prompt compile buckets.
-
-        Phase 1 walks the wave in order: SkyMemory lookup, fetch-ahead
-        payload decode (submitted per sequence, resolved after the loop so
-        deserialization overlaps the later members' lookups/write-backs),
-        and Set KVC write-back -- before the NEXT member's lookup, so
-        duplicate contexts within one wave still hit.  Phase 2 runs
-        batched chunk steps until every prompt is covered; each
-        sequence's final-chunk logits are kept and the wave's first
-        tokens are sampled in one call with one host sync."""
-        t0 = time.perf_counter()
-        for s, slot in admitted:
-            s.state = SeqState.PREFILLING
-            self._lookup_and_prefetch(s)
-            if self.write_back and self.manager is not None:
-                self._write_back_async(s.tokens)
-        for s, slot in admitted:
-            if s.pages_future is not None:
-                k_blocks, v_blocks = s.pages_future.result()
-                s.pages_future = None
-                self.cache.write_pages(slot, 0, k_blocks, v_blocks)
-
-        last_logits: dict[int, jnp.ndarray] = {}
-        live = [(s, slot) for s, slot in admitted]
-        while live:
-            c_b = self._chunk_buf(max(
-                min(self.chunk_tokens, len(s.tokens) - s.cursor)
-                for s, _ in live))
-            rows = 1
-            while rows < len(live):          # pad batch rows to a power
-                rows *= 2                    # of two: O(log max_batch)
-            buf = np.zeros((rows, c_b), np.int32)
-            offs = np.zeros(rows, np.int32)
-            valids = np.zeros(rows, np.int32)   # padding rows are no-ops
-            bts = np.zeros((rows, self.cache.pages_per_seq), np.int32)
-            for i, (s, slot) in enumerate(live):
-                start = s.cursor
-                v = min(c_b, len(s.tokens) - start)
-                buf[i, :v] = s.tokens[start:start + v]
-                offs[i], valids[i] = start, v
-                bts[i] = self.cache.table_row(slot)
-                self.cache.note_span(slot, start, v)
-                self.chunk_log.append((slot, start, v))
-            lg, k_pool, v_pool = self._chunk_wave(
-                self.params, self.cache.k_pool, self.cache.v_pool,
-                jnp.asarray(buf), jnp.asarray(bts), jnp.asarray(offs),
-                jnp.asarray(valids),
-            )
-            self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
-            self.stats.prefill_chunks += 1
-            nxt_live = []
-            for i, (s, slot) in enumerate(live):
-                s.cursor = int(offs[i] + valids[i])
-                if s.cursor >= len(s.tokens):
-                    last_logits[id(s)] = lg[i]
-                else:
-                    nxt_live.append((s, slot))
-            live = nxt_live
-
-        self.stats.prefill_time_s += time.perf_counter() - t0
-
-        # first tokens for the wave: one sample call, one host sync
-        self._key, k = jax.random.split(self._key)
-        t_arr, tk_arr, tp_arr = stack_sampling(
-            [s.request.sampling for s, _ in admitted])
-        tids = np.asarray(sample_batch(
-            jnp.stack([last_logits[id(s)] for s, _ in admitted]),
-            k, t_arr, tk_arr, tp_arr))
-        now = time.perf_counter()
-        for (s, slot), tid in zip(admitted, tids):
-            self._finish_prefill(s, slot, int(tid), now, lengths_h,
-                                 tokens_h, samp)
-
-    def _lookup_and_prefetch(self, s: _Seq) -> None:
-        """SkyMemory longest-prefix lookup for ``s``: on a hit, start the
-        sequence at the cached boundary -- a whole-prompt hit keeps every
-        restored block and replays only the final token through the paged
-        chunk path (a one-token recompute, not a full page through a
-        dense prefill) -- and submit the payload->pages decode to the
-        adapter's fetch-ahead thread.  Any in-flight Set KVC write-back
-        is drained first, so duplicate contexts queued together still
-        hit (the paper's repeated-context workload)."""
-        s.looked_up = True
-        if self.manager is None:
-            return
-        self._drain_write_back()
-        payload, cached = self.manager.get_cache_tokens(s.tokens)
-        if payload is not None and cached:
-            restore = cached
-            if cached >= len(s.tokens):
-                cached = len(s.tokens) - 1
-            s.cached = cached
-            s.cursor = cached
-            s.pages_future = self.adapter.pages_async(
-                payload, restore, self.page_size)
-
-    def _write_back_async(self, tokens: list[int]) -> None:
-        """Set KVC for a finished prefill *off* the decode loop: the
-        block payload computation (one forward per uncached block) runs
-        on the adapter's worker thread and the next sequence's lookup
-        drains it, so write-back no longer stalls running decodes."""
-        self._wb_future = self.adapter.run_async(
-            self.manager.add_blocks_tokens, tokens)
-
-    def _drain_write_back(self) -> None:
-        if self._wb_future is not None:
-            self._wb_future.result()
-            self._wb_future = None
-
-    def _finish_prefill(self, s: _Seq, slot: int, tid: int, now: float,
-                        lengths_h, tokens_h, samp) -> None:
-        """A sequence's last chunk landed: book its first token."""
-        s.out_ids.append(tid)
-        s.ttft_s = now - s.enqueue_t
-        self.stats.ttft_s.append(s.ttft_s)
-        self.stats.decoded_tokens += 1
-        self.stats.cached_tokens += s.cached
-        self.stats.prefilled_tokens += len(s.tokens) - s.cached
-        s.state = SeqState.RUNNING
-        if not self._finished(s, tid):
-            lengths_h[slot] = len(s.tokens)
-            tokens_h[slot] = tid
-            samp[slot] = s.request.sampling
-
-    def _make_seq(self, req: Request) -> _Seq:
-        tokens = self.tokenizer.encode(req.prompt)[: self.max_seq_len - 64]
-        return _Seq(request=req, tokens=tokens, enqueue_t=time.perf_counter())
-
-    def _reserve_tokens(self, s: _Seq) -> int:
-        """Worst-case token footprint: pages for this many tokens are
-        reserved at admission so decode can never exhaust the pool."""
-        return min(len(s.tokens) + s.request.sampling.max_new_tokens,
-                   self.max_seq_len)
-
-    def _bucket(self, n: int) -> int:
-        """Prefill length bucket for stop-the-world admission (next power
-        of two, floor 32, capped at max_seq_len).  The chunked scheduler
-        needs no buckets: its one fixed chunk shape serves every prompt."""
-        b = 32
-        while b < n:
-            b *= 2
-        return min(b, max(n, self.max_seq_len))
-
-    def _admit_wave(self, admitted: list[tuple[_Seq, int]],
-                    lengths_h, tokens_h, samp) -> None:
-        """Stop-the-world admission (MoE families / ``chunk_tokens=0``):
-        SkyMemory hits restore blocks straight into pages and prefill only
-        their suffix (per sequence); misses prefill as ONE batched,
-        bucketed forward.  First tokens for the whole wave are sampled in
-        one call with one host sync."""
-        t0 = time.perf_counter()
-        last_logits: list = []
-        fresh: list[tuple[_Seq, int]] = []
-        for s, slot in admitted:
-            # (pages were already reserved in the admission loop)
-            self._lookup_and_prefetch(s)
-            if s.pages_future is not None:
-                last_logits.append(self._prefill_suffix_paged(s, slot))
-            elif self.cfg.num_experts > 0:
-                # MoE: capacity-based expert routing is group-composition
-                # dependent, so bucket padding would alter real tokens'
-                # routing -- prefill exactly, one sequence at a time
-                s.cached = 0
-                last_logits.append(self._prefill_exact(s, slot))
-            else:
-                s.cached = 0
-                fresh.append((s, slot))
-                last_logits.append(None)
-            if self.write_back and self.manager is not None:
-                # Set KVC now, before the NEXT wave member's lookup, so
-                # duplicate contexts within one admission wave still hit
-                # (the paper's repeated-context workload)
-                self.manager.add_blocks_tokens(s.tokens)
-
-        if fresh:
-            # one batched forward per length bucket; causal masking makes
-            # the zero padding past each row's length invisible
-            by_bucket: dict[int, list[int]] = {}
-            for i, (s, _) in enumerate(fresh):
-                by_bucket.setdefault(self._bucket(len(s.tokens)), []).append(i)
-            fresh_logits: dict[int, jnp.ndarray] = {}
-            for bucket, idxs in by_bucket.items():
-                rows = 1
-                while rows < len(idxs):      # pad batch dim to a power of
-                    rows *= 2                # two: O(log^2) compilations
-                toks = np.zeros((rows, bucket), np.int32)
-                for row, i in enumerate(idxs):
-                    toks[row, : len(fresh[i][0].tokens)] = fresh[i][0].tokens
-                lg, _, state = self._prefill(self.params, jnp.asarray(toks))
-                for row, i in enumerate(idxs):
-                    s, slot = fresh[i]
-                    n = len(s.tokens)
-                    self.cache.write_token_span(
-                        slot, 0,
-                        state["kv"]["k"][:, row, :n],
-                        state["kv"]["v"][:, row, :n],
-                    )
-                    fresh_logits[i] = lg[row, n - 1]
-            fi = 0
-            for j, lgt in enumerate(last_logits):
-                if lgt is None:
-                    last_logits[j] = fresh_logits[fi]
-                    fi += 1
-
-        self.stats.prefill_time_s += time.perf_counter() - t0
-
-        # first tokens for the wave from the prefill logits: one sample
-        # call, one host sync (at admission, not in the decode loop)
-        self._key, k = jax.random.split(self._key)
-        t_arr, tk_arr, tp_arr = stack_sampling(
-            [s.request.sampling for s, _ in admitted])
-        tids = np.asarray(sample_batch(
-            jnp.stack(last_logits), k, t_arr, tk_arr, tp_arr))
-        now = time.perf_counter()
-        for (s, slot), tid in zip(admitted, tids):
-            self._finish_prefill(s, slot, int(tid), now, lengths_h,
-                                 tokens_h, samp)
-
-    def _prefill_exact(self, s: _Seq, slot: int):
-        """Unpadded, per-sequence prefill (MoE families, where padding
-        would perturb capacity-based routing of real tokens)."""
-        n = len(s.tokens)
-        toks = jnp.asarray(s.tokens, jnp.int32)[None]
-        lg, _, state = self.model.forward(
-            self.params, toks, collect_state=True)
-        self.cache.write_token_span(
-            slot, 0,
-            state["kv"]["k"][:, 0, :n],
-            state["kv"]["v"][:, 0, :n],
-        )
-        return lg[0, n - 1]
-
-    def _prefill_suffix_paged(self, s: _Seq, slot: int):
-        """SkyMemory hit under stop-the-world admission (the sequence's
-        lookup already ran): fetched blocks drop straight into pool pages
-        and the uncached suffix runs as ONE paged chunk attending over
-        them *in place* -- no dense ``prefix_state`` restaging anywhere
-        in the paged families.  A whole-prompt hit keeps every restored
-        block and replays only the final token (the chunk machinery
-        handles the one-token, unaligned-start span)."""
-        n = len(s.tokens)
-        k_blocks, v_blocks = s.pages_future.result()
-        s.pages_future = None
-        self.cache.write_pages(slot, 0, k_blocks, v_blocks)
-        start = s.cursor
-        v = n - start
-        self.cache.note_span(slot, start, v)
-        self.chunk_log.append((slot, start, v))
-        toks = np.asarray(s.tokens[start:], np.int32)[None]
-        lg, k_pool, v_pool = self.model.prefill_chunk_paged(
-            self.params, self.cache.k_pool, self.cache.v_pool,
-            jnp.asarray(toks),
-            jnp.asarray(self.cache.table_row(slot)[None], jnp.int32),
-            jnp.asarray([start], jnp.int32), jnp.asarray([v], jnp.int32),
-        )
-        self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
-        return lg[0]
-
-    def _finished(self, s: _Seq, tid: int) -> bool:
-        if tid == self.tokenizer.eos_id:
-            s.done, s.finish_reason = True, FinishReason.EOS.value
-        elif len(s.out_ids) >= s.request.sampling.max_new_tokens:
-            s.done = True
-            s.finish_reason = FinishReason.MAX_NEW_TOKENS.value
-        elif len(s.tokens) + len(s.out_ids) >= self.max_seq_len:
-            s.done = True
-            s.finish_reason = FinishReason.MAX_SEQ_LEN.value
-        return s.done
-
-    def _release(self, s: _Seq, slot: int, lengths_h, tokens_h, samp):
-        s.state = SeqState.FINISHED
-        self.cache.free_slot(slot)
-        lengths_h[slot] = 0
-        tokens_h[slot] = 0
-        samp[slot] = SamplingParams()
-        self.stats.requests += 1
-
-    def _result(self, s: _Seq) -> GenerationResult:
-        return GenerationResult(
-            request_id=s.request.request_id,
-            prompt=s.request.prompt,
-            text=self.tokenizer.decode(s.out_ids),
-            token_ids=s.out_ids,
-            prompt_tokens=len(s.tokens),
-            cached_tokens=s.cached,
-            prefill_tokens=len(s.tokens) - s.cached,
-            wall_time_s=s.wall_s,
-            ttft_s=s.ttft_s,
-            finish_reason=s.finish_reason,
-        )
-
-    # ==================================================================
-    # Dense runtime (MLA / SSM / hybrid / enc-dec families)
-    # ==================================================================
-    def _prefill_one(self, req: Request) -> _Seq:
-        t0 = time.perf_counter()
-        s = self._make_seq(req)
-        tokens = s.tokens
-        cached = 0
-        prefix_state = None
-        if self.manager is not None:
-            payload, cached = self.manager.get_cache_tokens(tokens)
-            if payload is not None:
-                prefix_state = self.adapter.payload_to_state(payload)
-        toks = jnp.asarray(tokens, jnp.int32)[None]
-        if cached >= len(tokens):
-            # whole prompt cached: replay the final token so the decode
-            # loop has a starting distribution
-            cached = len(tokens) - 1
-        if cached:
-            lg, _, state = self.model.forward(
-                self.params, toks[:, cached:], q_offset=cached,
-                prefix_state=prefix_state, collect_state=True,
-            )
-        else:
-            lg, _, state = self.model.forward(
-                self.params, toks, collect_state=True
-            )
-        self.stats.prefill_time_s += time.perf_counter() - t0
-        self.stats.cached_tokens += cached
-        self.stats.prefilled_tokens += len(tokens) - cached
-        if self.write_back and self.manager is not None:
-            self.manager.add_blocks_tokens(tokens)
-        s.cached = cached
-        s.dense_state = state
-        s.last_logits = lg[0, -1]
-        s.state = SeqState.RUNNING
-        return s
-
-    def _stack_dense_caches(self, seqs: list[_Seq]):
-        """Dense prefill->decode handoff for the NON-paged families only
-        (MLA latents, SSM state, hybrid, enc-dec): per-sequence states are
-        restacked into one batched cache.  Paged families never come here
-        -- their blocks were written into pool pages at admission."""
-        cache = self.model.init_cache(len(seqs), self.max_seq_len)
-        for i, s in enumerate(seqs):
-            n = len(s.tokens)
-            st = s.dense_state
-            if "kv" in st and "kv" in cache:
-                cache["kv"]["k"] = cache["kv"]["k"].at[:, i, :n].set(
-                    st["kv"]["k"][:, 0, :n])
-                cache["kv"]["v"] = cache["kv"]["v"].at[:, i, :n].set(
-                    st["kv"]["v"][:, 0, :n])
-            if "mla" in st:
-                cache["mla"]["ckv"] = cache["mla"]["ckv"].at[:, i, :n].set(
-                    st["mla"]["ckv"][:, 0, :n])
-                cache["mla"]["kr"] = cache["mla"]["kr"].at[:, i, :n].set(
-                    st["mla"]["kr"][:, 0, :n])
-            if "ssm" in st:
-                cache["ssm"]["conv"] = cache["ssm"]["conv"].at[:, i].set(
-                    st["ssm"]["conv"][:, 0])
-                cache["ssm"]["state"] = cache["ssm"]["state"].at[:, i].set(
-                    st["ssm"]["state"][:, 0].astype(cache["ssm"]["state"].dtype))
-        return cache
-
-    def _run_batch(self, requests: list[Request]) -> list[GenerationResult]:
-        t_start = time.perf_counter()
-        seqs = [self._prefill_one(r) for r in requests]
-        cache = self._stack_dense_caches(seqs)
-        pos = jnp.asarray([len(s.tokens) for s in seqs], jnp.int32)
-
-        # first token of each sequence from its prefill logits
-        logits = jnp.stack([s.last_logits for s in seqs])
-        temps_d, tks_d, tps_d = stack_sampling(
-            [s.request.sampling for s in seqs])
-
-        max_new = max(s.request.sampling.max_new_tokens for s in seqs)
-        t_dec = time.perf_counter()
-        first = True
-        last_tok_t = [0.0] * len(seqs)
-        for _step in range(max_new):
-            self._key, k = jax.random.split(self._key)
-            nxt = self._sample(logits, k, temps_d, tks_d, tps_d)
-            nxt_h = np.asarray(nxt)           # the step's single host sync
-            now = time.perf_counter()
-            for i, s in enumerate(seqs):
-                if s.done:
-                    continue
-                tid = int(nxt_h[i])
-                s.out_ids.append(tid)
-                if first:
-                    s.ttft_s = now - s.enqueue_t
-                    self.stats.ttft_s.append(s.ttft_s)
-                else:
-                    self.stats.itl_s.append(now - last_tok_t[i])
-                last_tok_t[i] = now
-                self._finished(s, tid)
-            first = False
-            self.stats.decoded_tokens += sum(
-                0 if s.done else 1 for s in seqs)
-            if all(s.done for s in seqs):
-                break
-            lg, cache = self._decode(self.params, cache, nxt[:, None], pos)
-            self.stats.decode_steps += 1
-            logits = lg[:, 0]
-            pos = pos + 1
-        self.stats.decode_time_s += time.perf_counter() - t_dec
-
-        out = []
-        wall = time.perf_counter() - t_start
-        for s in seqs:
-            self.stats.requests += 1
-            s.state = SeqState.FINISHED
-            s.wall_s = wall
-            out.append(self._result(s))
-        return out
+        return self.executor.chunk_buf(v)

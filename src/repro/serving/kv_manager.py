@@ -1,0 +1,270 @@
+"""TieredKVManager: the serving stack's three-level KV fabric.
+
+* **L0 -- device page pool** (``repro.models.cache.PagedKVCache``): the
+  pages decode and chunked prefill read/write in place.  Pages are
+  allocated *lazily* as sequences grow (no worst-case reservation), so
+  the pool can run more live sequences than it could hold at their
+  maximum lengths.
+* **L1 -- host-RAM page cache** (``HostPageCache``): preempted
+  sequences' pages, exported in one gathered device read per pool.  A
+  hit restores bit-identical K/V -- including the non-block-aligned tail
+  page -- so a resumed sequence replays nothing.
+* **L2 -- the constellation** (``core.protocol.KVCManager`` over
+  ``ConstellationKVC``): when the host cache overflows, the shared LRU
+  policy picks a victim whose *block-aligned* prefix is spilled as Set
+  KVC payloads built directly from the exported pages (no model
+  recompute) and indexed in the same radix tree as ordinary write-backs.
+  A restore that misses L1 runs Get KVC on the sequence's exact token
+  chain, drops fetched blocks into pool pages, and leaves only the
+  unaligned tail for the scheduler to replay through the chunked-prefill
+  path.
+
+One ``LRUClock`` (``core.eviction``) stamps accesses across all three
+levels plus the radix index, so "least recently used" is one timeline,
+not three.  Admission refusal and pool exhaustion stop being failure
+modes: under memory pressure the scheduler calls ``offload`` on a
+victim and the fabric absorbs it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+from repro.core.eviction import LRUClock
+from repro.core.protocol import KVCManager
+from repro.models.cache import PagedKVCache
+from repro.serving.skycache import SkyKVCAdapter
+from repro.serving.stats import EngineStats
+
+
+@dataclass
+class HostEntry:
+    """One offloaded sequence's pages in host RAM.
+
+    ``pinned`` entries are exempt from capacity eviction: MoE sequences
+    must restore bit-exact from here (replaying their tail as a chunk
+    group would re-route experts -- capacity routing is group-composition
+    dependent -- and change the rebuilt K/V), so their pages may not be
+    spilled-and-dropped the way dense families' can.
+    """
+
+    k: object                 # np [layers, n_pages, page, Hkv, hd]
+    v: object
+    tokens: list[int]         # the tokens those pages cover, in order
+    pinned: bool = False
+    n_pages: int = field(init=False)
+
+    def __post_init__(self) -> None:
+        self.n_pages = int(self.k.shape[1])
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+
+class HostPageCache:
+    """L1: offloaded page sets keyed by sequence, bounded in pages.
+
+    ``capacity_pages=None`` means unbounded (host RAM is the backstop);
+    ``0`` disables the tier (every offload spills straight to L2 /
+    recompute -- the ablation knob).  Victims are chosen by the shared
+    ``LRUClock``; the ``spill`` callback receives each evicted entry
+    before it is dropped.
+    """
+
+    def __init__(self, capacity_pages: int | None, policy: LRUClock,
+                 spill=None) -> None:
+        self.capacity_pages = capacity_pages
+        self.policy = policy
+        self.spill = spill
+        self._entries: dict[object, HostEntry] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(e.n_pages for e in self._entries.values())
+
+    def put(self, key, entry: HostEntry) -> None:
+        self._entries[key] = entry
+        self.policy.touch(("l1", key))
+        if self.capacity_pages is None:
+            return
+        while self.used_pages > self.capacity_pages:
+            victim = self.policy.victim(
+                ("l1", k) for k, e in self._entries.items()
+                if not e.pinned)
+            if victim is None:
+                break             # only pinned entries remain: keep them
+            _, vkey = victim
+            evicted = self._entries.pop(vkey)
+            self.policy.forget(victim)
+            if self.spill is not None:
+                self.spill(vkey, evicted)
+
+    def pop(self, key) -> HostEntry | None:
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self.policy.forget(("l1", key))
+        return entry
+
+
+class TieredKVManager:
+    """Owns the page pool and moves K/V between the three tiers.
+
+    The scheduler speaks tokens (``*_tokens`` arguments); this class
+    translates to pages.  All device writes happen between jitted steps,
+    exactly like the pre-tiered engine's page drops.
+    """
+
+    def __init__(
+        self,
+        pool: PagedKVCache,
+        adapter: SkyKVCAdapter,
+        manager: KVCManager | None,
+        *,
+        host_cache_pages: int | None = None,
+        write_back: bool = True,
+    ) -> None:
+        self.pool = pool
+        self.adapter = adapter
+        self.manager = manager
+        self.write_back = write_back
+        self.stats = EngineStats()       # facade re-points this per run
+        self.policy: LRUClock = (
+            manager.policy if manager is not None else LRUClock())
+        self.host = HostPageCache(host_cache_pages, self.policy,
+                                  spill=self._spill_to_l2)
+        self._wb_future = None           # in-flight async Set KVC
+
+    # -- L0: lazy page accounting --------------------------------------
+    def can_admit_tokens(self, n_tokens: int) -> bool:
+        return self.pool.can_admit(n_tokens)
+
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        """Allocate pages for ``n_tokens`` now (admission/restore); True
+        when the block table changed."""
+        return self.pool.ensure_capacity(slot, n_tokens)
+
+    def try_grow(self, slot: int, n_tokens: int) -> tuple[bool, bool]:
+        """Grow ``slot`` to hold ``n_tokens`` tokens if the free list
+        allows: ``(ok, table_changed)``.  ``ok=False`` means the pool is
+        exhausted -- the scheduler's cue to preempt a victim, never an
+        exception."""
+        need = self.pool.pages_for(n_tokens)
+        have = self.pool.pages_allocated(slot)
+        if need <= have:
+            return True, False
+        if self.pool.free_pages < need - have:
+            return False, False
+        return True, self.pool.ensure_capacity(slot, n_tokens)
+
+    def release(self, slot: int) -> None:
+        self.pool.free_slot(slot)
+
+    # -- preemption-by-offload ------------------------------------------
+    def offload(self, key, slot: int, tokens: list[int]) -> int:
+        """Export the pages covering ``tokens`` (one gathered read per
+        pool) into the host tier under ``key``.  Returns pages moved.
+        The slot itself is NOT freed here -- the scheduler releases it,
+        keeping page bookkeeping in one place."""
+        n_pages = self.pool.pages_for(len(tokens))
+        if n_pages == 0:
+            return 0
+        if self.manager is not None:
+            # the spill path mutates the radix index; settle any async
+            # write-back first so index updates stay single-threaded
+            self.drain_write_back()
+        k, v = self.pool.export_pages(slot, n_pages)
+        # MoE restores must be bit-exact (tail replay would re-route
+        # experts), so their host entries are pinned against eviction
+        pinned = self.pool.cfg.num_experts > 0
+        self.host.put(key, HostEntry(k=k, v=v, tokens=list(tokens),
+                                     pinned=pinned))
+        self.stats.offloaded_pages += n_pages
+        return n_pages
+
+    def take_host(self, key) -> HostEntry | None:
+        """Claim ``key``'s host-tier pages (bit-exact restore source)."""
+        return self.host.pop(key)
+
+    def restore(self, key, slot: int, tokens: list[int]) -> int:
+        """Repopulate ``slot``'s pages for ``tokens``; returns how many
+        leading tokens are covered (the scheduler replays the rest).
+
+        L1 hit: the exact exported pages come back -- full coverage,
+        including the unaligned tail page, nothing to replay.  L1 miss:
+        Get KVC on the token chain restores the longest block-aligned
+        prefix the constellation still holds (possibly spilled there by
+        the host tier, possibly written back long ago, possibly gone --
+        then the whole sequence replays, the recompute flavor of
+        preemption)."""
+        entry = self.take_host(key)
+        if entry is not None:
+            self.pool.write_pages(slot, 0, jnp.asarray(entry.k),
+                                  jnp.asarray(entry.v))
+            return min(entry.n_tokens, len(tokens))
+        if self.manager is None:
+            return 0
+        self.drain_write_back()
+        payload, cached = self.manager.get_cache_tokens(tokens)
+        if payload is None or not cached:
+            return 0
+        cached = min(cached, len(tokens))
+        k_blocks, v_blocks = self.adapter.payload_to_pages(
+            payload, cached, self.pool.page_size)
+        self.pool.write_pages(slot, 0, k_blocks, v_blocks)
+        return cached
+
+    def _spill_to_l2(self, key, entry: HostEntry) -> None:
+        """Host-tier eviction: push the entry's block-aligned prefix to
+        the constellation as exact-page payloads (no model recompute);
+        the unaligned tail is dropped and recomputed at restore."""
+        if self.manager is None:
+            return
+        bs = self.manager.block_size
+        n_blocks = entry.n_tokens // bs
+        if n_blocks == 0:
+            return
+        added = self.manager.add_precomputed_blocks(
+            entry.tokens[: n_blocks * bs],
+            lambda nb: self.adapter.pages_to_payload(
+                entry.k, entry.v, nb * bs),
+        )
+        self.stats.spilled_blocks += added
+
+    # -- L2: SkyMemory prefix lookups / write-back ----------------------
+    def lookup_prefix(self, tokens: list[int]) -> tuple[bytes | None, int]:
+        """Get KVC for the longest cached prefix, draining any in-flight
+        write-back first so duplicate contexts queued together still hit
+        (the paper's repeated-context workload)."""
+        if self.manager is None:
+            return None, 0
+        self.drain_write_back()
+        return self.manager.get_cache_tokens(tokens)
+
+    def pages_async(self, payload: bytes, n_tokens: int):
+        """Fetch-ahead payload -> pages decode on the adapter worker."""
+        return self.adapter.pages_async(payload, n_tokens,
+                                        self.pool.page_size)
+
+    def write_back_async(self, tokens: list[int]) -> None:
+        """Set KVC for a finished prefill *off* the decode loop: the
+        block payload computation (one forward per uncached block) runs
+        on the adapter's worker thread and the next lookup drains it, so
+        write-back no longer stalls running decodes."""
+        if self.manager is None:
+            return
+        self._wb_future = self.adapter.run_async(
+            self.manager.add_blocks_tokens, tokens)
+
+    def write_back_sync(self, tokens: list[int]) -> None:
+        if self.manager is not None:
+            self.manager.add_blocks_tokens(tokens)
+
+    def drain_write_back(self) -> None:
+        if self._wb_future is not None:
+            self._wb_future.result()
+            self._wb_future = None

@@ -98,6 +98,28 @@ class SkyKVCAdapter:
             jnp.asarray(v[:, :n_tokens]).reshape(shape),
         )
 
+    def pages_to_payload(self, k_blocks, v_blocks, n_tokens: int) -> bytes:
+        """Inverse of ``payload_to_pages``: page-shaped K/V blocks
+        (``[layers, n_pages, page, Hkv, hd]``, e.g. a preempted sequence's
+        exported pool pages) -> a dense-family KVC payload covering the
+        first ``n_tokens`` positions.
+
+        This is how the swap tier writes the constellation without model
+        recompute: the pool pages already hold the exact K/V, so the
+        payload is a pure reshape + serialize.  A later
+        ``payload_to_pages`` round trip returns the identical arrays
+        (int8 pools stay int8)."""
+        k = np.asarray(k_blocks)
+        v = np.asarray(v_blocks)
+        la, nb, page, hkv, hd = k.shape
+        if n_tokens > nb * page:
+            raise ValueError("n_tokens exceeds the exported pages")
+        flat = (la, nb * page, hkv, hd)
+        return arrays_to_bytes([
+            np.ascontiguousarray(k.reshape(flat)[:, :n_tokens]),
+            np.ascontiguousarray(v.reshape(flat)[:, :n_tokens]),
+        ])
+
     def pages_async(self, payload: bytes, n_tokens: int, page_size: int):
         """Fetch-ahead hook: decode a constellation payload into
         page-shaped K/V on a worker thread, returning a Future.

@@ -1,0 +1,51 @@
+"""Engine-level counters and latency percentiles.
+
+One ``EngineStats`` object is shared by the facade, the scheduler, and
+the executor-side runtimes; benchmarks reset it between timed runs by
+assigning a fresh instance to ``Engine.stats``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def _percentiles(xs: list[float]) -> dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    p50, p95, p99 = np.percentile(np.asarray(xs, np.float64), [50, 95, 99])
+    return {"p50": float(p50), "p95": float(p95), "p99": float(p99)}
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0
+    cached_tokens: int = 0
+    prefilled_tokens: int = 0
+    decoded_tokens: int = 0
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+    decode_steps: int = 0             # jitted step programs launched
+    mid_decode_admissions: int = 0    # requests admitted into a live batch
+    prefill_chunks: int = 0           # chunk programs fused into steps
+    # tiered-KV swap activity (preemption-by-offload):
+    preemptions: int = 0              # sequences offloaded out of the pool
+    restores: int = 0                 # preempted sequences brought back
+    offloaded_pages: int = 0          # pool pages exported to the host tier
+    spilled_blocks: int = 0           # host-tier blocks spilled to L2
+    replayed_tokens: int = 0          # tail tokens recomputed at restore
+    ttft_s: list[float] = field(default_factory=list)   # per request
+    itl_s: list[float] = field(default_factory=list)    # per decoded token
+    # the subset of itl_s observed by running sequences while an
+    # admission was in flight -- the tail the chunked scheduler exists
+    # to flatten (a whole-run p99 dilutes a few admission stalls away)
+    itl_admission_s: list[float] = field(default_factory=list)
+
+    def latency_percentiles(self) -> dict[str, dict[str, float]]:
+        """p50/p95/p99 of time-to-first-token and inter-token latency --
+        the serving SLO view of the run (tokens/s hides admission
+        stalls; the ITL tail is where stop-the-world prefill shows)."""
+        return {"ttft_s": _percentiles(self.ttft_s),
+                "itl_s": _percentiles(self.itl_s),
+                "itl_admission_s": _percentiles(self.itl_admission_s)}

@@ -1,0 +1,394 @@
+"""Tiered KV fabric: Scheduler/Executor/KVManager layering, lazy page
+growth, preemption-by-offload, restore equivalence, and the shared LRU
+policy across tiers.
+
+The core guarantee under test: a preempted-and-resumed sequence emits
+byte-identical tokens to an uninterrupted run -- across paged families
+(dense and MoE), both pool modes (contiguous slot regions and free-list
+oversubscription), and every restore flavor (bit-exact host-tier import,
+constellation block prefix + tail replay, full recompute).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import ConstellationKVC, ConstellationSpec, LosWindow, Sat, Strategy
+from repro.core.eviction import LRUClock
+from repro.core.hashing import chain_hashes
+from repro.core.radix import BlockMeta, RadixBlockIndex
+from repro.core.store import SatelliteStore
+from repro.models.cache import PagedKVCache
+from repro.models.model import Model
+from repro.serving import Engine, Request, SamplingParams, SeqState
+
+PROMPT = "SkyMemory stripes KV cache chunks across LEO satellites. " * 3
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = smoke_config(get_config("granite-moe-3b-a800m")).replace(
+        dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_kvc():
+    return ConstellationKVC(
+        ConstellationSpec(15, 15, 550.0), LosWindow(Sat(7, 7), 9, 9),
+        Strategy.ROTATION_HOP, num_servers=10, chunk_bytes=6 * 1024,
+    )
+
+
+def grow_reqs(max_new=100, n=4):
+    """Short prompts that co-admit into every slot and then grow: the
+    workload that exercises lazy allocation and growth-pressure
+    preemption (long prompts serialize at admission instead)."""
+    sp = SamplingParams(max_new_tokens=max_new)
+    return [Request(prompt=f"grow {i} " + "x" * 24, sampling=sp)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# layering: the three modules are separately importable, engine is a facade
+# ---------------------------------------------------------------------------
+
+def test_layers_importable_and_engine_is_a_facade():
+    from repro.serving.executor import DenseRuntime, PagedExecutor  # noqa
+    from repro.serving.kv_manager import HostPageCache, TieredKVManager  # noqa
+    from repro.serving.scheduler import Scheduler, chunk_spans  # noqa
+
+    import repro.serving.engine as engine_mod
+    with open(engine_mod.__file__) as f:
+        n_lines = len(f.readlines())
+    assert n_lines < 300, "engine.py must stay an orchestration facade"
+
+
+def test_engine_wires_layers(dense_setup):
+    cfg, model, params = dense_setup
+    from repro.serving.executor import PagedExecutor
+    from repro.serving.kv_manager import TieredKVManager
+    from repro.serving.scheduler import Scheduler
+
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=2)
+    assert isinstance(eng.scheduler, Scheduler)
+    assert isinstance(eng.executor, PagedExecutor)
+    assert isinstance(eng.kv, TieredKVManager)
+    assert eng.kv.pool is eng.cache
+    # one stats object across the layers; reassignment re-points all
+    assert eng.scheduler.stats is eng.stats and eng.kv.stats is eng.stats
+    from repro.serving import EngineStats
+    eng.stats = EngineStats()
+    assert eng.scheduler.stats is eng.stats and eng.kv.stats is eng.stats
+
+
+def test_preempted_state_in_lifecycle():
+    assert SeqState.PREEMPTED.value == "preempted"
+
+
+# ---------------------------------------------------------------------------
+# page export/import views
+# ---------------------------------------------------------------------------
+
+def test_export_import_pages_bit_identical(dense_setup):
+    cfg, _, _ = dense_setup
+    c = PagedKVCache(cfg, num_slots=2, page_size=16, max_seq_len=64,
+                     num_pages=1 + 8)
+    c.ensure_capacity(0, 48)
+    la, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal((la, 3, 16, hkv, hd)), jnp.float32)
+    c.write_pages(0, 0, k, k + 1)
+    ek, ev = c.export_pages(0, 3)
+    c.free_slot(0)
+    c.ensure_capacity(1, 48)                 # different physical pages
+    c.write_pages(1, 0, ek, ev)
+    ek2, ev2 = c.export_pages(1, 3)
+    np.testing.assert_array_equal(ek, np.asarray(k))
+    np.testing.assert_array_equal(ek2, ek)
+    np.testing.assert_array_equal(ev2, ev)
+    with pytest.raises(RuntimeError):
+        c.export_pages(1, 4)                 # beyond allocated
+
+
+def test_pages_payload_roundtrip(dense_setup):
+    """pages -> payload -> pages is exact: the L2 spill path writes a
+    preempted sequence's literal pool pages, never a recompute."""
+    cfg, model, params = dense_setup
+    from repro.serving.skycache import SkyKVCAdapter
+    adapter = SkyKVCAdapter(model, params)
+    la, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(1)
+    k = rng.standard_normal((la, 2, 16, hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((la, 2, 16, hkv, hd)).astype(np.float32)
+    payload = adapter.pages_to_payload(k, v, 32)
+    k2, v2 = adapter.payload_to_pages(payload, 32, 16)
+    np.testing.assert_array_equal(np.asarray(k2), k)
+    np.testing.assert_array_equal(np.asarray(v2), v)
+
+
+# ---------------------------------------------------------------------------
+# preempt/restore equivalence (the satellite's core requirement)
+# ---------------------------------------------------------------------------
+
+def test_growth_preemption_free_list_byte_identical(dense_setup):
+    """Oversubscribed free-list pool: sequences co-admit lazily, growth
+    exhausts the pool, the scheduler preempts by offload, and every
+    request still completes with byte-identical tokens (host-tier
+    restore: nothing replayed)."""
+    cfg, model, params = dense_setup
+    ref = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4)
+    want = [r.token_ids for r in ref.generate(grow_reqs())]
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4,
+                 num_pages=1 + 16)
+    res = eng.generate(grow_reqs())
+    assert eng.stats.preemptions > 0
+    assert eng.stats.restores == eng.stats.preemptions
+    assert eng.stats.offloaded_pages > 0
+    assert eng.stats.replayed_tokens == 0      # L1 restores are bit-exact
+    assert sum(r.preemptions for r in res) == eng.stats.preemptions
+    assert [r.token_ids for r in res] == want
+    assert eng.cache.free_pages == eng.cache.num_pages - 1
+
+
+def test_recompute_restore_byte_identical(dense_setup):
+    """host_cache_pages=0 disables L1 and there is no constellation, so
+    every restore is a full chunked-prefill recompute of the sequence --
+    tokens must still match the uninterrupted run."""
+    cfg, model, params = dense_setup
+    ref = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4)
+    want = [r.token_ids for r in ref.generate(grow_reqs())]
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4,
+                 num_pages=1 + 16, host_cache_pages=0)
+    res = eng.generate(grow_reqs())
+    assert eng.stats.preemptions > 0
+    assert eng.stats.replayed_tokens > 0       # the whole span recomputes
+    assert [r.token_ids for r in res] == want
+
+
+def test_l2_spill_restore_byte_identical(dense_setup):
+    """A tiny host cache spills block-aligned prefixes to the
+    constellation (exact-page payloads, no model recompute); restores
+    fetch them back through Get KVC and replay at most the unaligned
+    tail."""
+    cfg, model, params = dense_setup
+    ref = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4)
+    want = [r.token_ids for r in ref.generate(grow_reqs())]
+    eng = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=4, num_pages=1 + 16,
+                 host_cache_pages=4)
+    res = eng.generate(grow_reqs())
+    assert eng.stats.preemptions > 0
+    assert eng.stats.spilled_blocks > 0
+    assert [r.token_ids for r in res] == want
+
+
+def test_priority_preemption_contiguous_byte_identical(dense_setup):
+    """Contiguous pools never run out of pages, but slots are scarce: a
+    strictly higher-priority request evicts the lowest-priority running
+    sequence, which resumes later with unchanged output."""
+    cfg, model, params = dense_setup
+    sp_long = SamplingParams(max_new_tokens=40)
+    sp_hi = SamplingParams(max_new_tokens=8)
+    ref = Engine(model, params, block_size=16, max_seq_len=256, max_batch=1)
+    w_lo = ref.generate(
+        [Request(prompt=PROMPT + "low", sampling=sp_long)])[0].token_ids
+    w_hi = ref.generate(
+        [Request(prompt=PROMPT + "high", sampling=sp_hi)])[0].token_ids
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=1)
+    res = eng.generate([
+        Request(prompt=PROMPT + "low", sampling=sp_long, priority=0),
+        Request(prompt=PROMPT + "high", sampling=sp_hi, priority=5),
+    ])
+    assert eng.cache.contiguous
+    assert eng.stats.preemptions >= 1
+    assert res[0].preemptions >= 1
+    assert res[0].token_ids == w_lo
+    assert res[1].token_ids == w_hi
+
+
+def test_equal_priority_never_preempts(dense_setup):
+    """Plain FIFO streams must not thrash: equal priorities queue, they
+    do not evict each other (preemption needs growth pressure or a
+    strictly higher priority)."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=1)
+    sp = SamplingParams(max_new_tokens=6)
+    res = eng.generate([Request(prompt=f"{PROMPT} {i}", sampling=sp)
+                        for i in range(3)])
+    assert eng.stats.preemptions == 0
+    assert all(len(r.token_ids) == 6 for r in res)
+
+
+def test_moe_preemption_byte_identical(moe_setup):
+    """MoE families (stop-the-world admission) swap through the same
+    tiers; the host-tier restore is bit-exact, so capacity routing sees
+    identical K/V and outputs are unchanged."""
+    cfg, model, params = moe_setup
+    ref = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4)
+    assert not ref.chunked                     # MoE forces chunk_tokens=0
+    want = [r.token_ids for r in ref.generate(grow_reqs(max_new=60))]
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4,
+                 num_pages=1 + 16)
+    res = eng.generate(grow_reqs(max_new=60))
+    assert eng.stats.preemptions > 0
+    assert eng.stats.replayed_tokens == 0      # restored from L1, bit-exact
+    assert [r.token_ids for r in res] == want
+
+
+def test_moe_offloads_pinned_in_host_tier(moe_setup):
+    """A tail replay would run the replayed tokens as one chunk group
+    and re-route experts (capacity routing is group-composition
+    dependent), so MoE offloads are PINNED in the host tier: even with
+    the cache nominally disabled, restores stay bit-exact and outputs
+    unchanged."""
+    cfg, model, params = moe_setup
+    ref = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4)
+    want = [r.token_ids for r in ref.generate(grow_reqs(max_new=60))]
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4,
+                 num_pages=1 + 16, host_cache_pages=0)
+    res = eng.generate(grow_reqs(max_new=60))
+    assert eng.stats.preemptions > 0
+    assert eng.stats.replayed_tokens == 0      # pinned: never recomputed
+    assert [r.token_ids for r in res] == want
+
+
+def test_oversubscribed_pool_completes_every_request(dense_setup):
+    """Pool sized for roughly half the live sequences: every request
+    completes via preemption-by-offload -- no admission refusal, no pool
+    exhaustion, all pages recycled."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, block_size=16, max_seq_len=256, max_batch=4,
+                 num_pages=1 + 16)
+    res = eng.generate(grow_reqs(max_new=80, n=8))
+    assert len(res) == 8
+    assert all(len(r.token_ids) == 80 for r in res)
+    assert eng.stats.preemptions > 0
+    assert eng.cache.free_pages == eng.cache.num_pages - 1
+
+
+def test_preemption_with_skymemory_prefix_hits(dense_setup):
+    """Preemption composes with the prefix cache: warm blocks still hit
+    at (re)admission, and generations match the unpressured engine."""
+    cfg, model, params = dense_setup
+    sp = SamplingParams(max_new_tokens=60)
+    reqs = lambda: [Request(prompt=PROMPT + f" q{i}", sampling=sp)
+                    for i in range(3)]
+    ref = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=3)
+    ref.generate(reqs())
+    want = [r.token_ids for r in ref.generate(reqs())]
+    eng = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=3, num_pages=1 + 16)
+    eng.generate(reqs())
+    res = eng.generate(reqs())
+    assert all(r.cached_tokens > 0 for r in res)
+    assert [r.token_ids for r in res] == want
+
+
+# ---------------------------------------------------------------------------
+# shared LRU policy across tiers
+# ---------------------------------------------------------------------------
+
+def test_lru_clock_victim_and_forget():
+    c = LRUClock()
+    c.touch("a"), c.touch("b"), c.touch("c")
+    assert c.victim(["a", "b", "c"]) == "a"
+    c.touch("a")
+    assert c.victim(["a", "b", "c"]) == "b"
+    c.forget("c")
+    assert c.recency("c") == 0
+    assert c.victim(["a", "c"]) == "c"         # forgotten = oldest
+    assert c.victim([]) is None
+
+
+def test_radix_hits_touch_shared_policy():
+    policy = LRUClock()
+    idx = RadixBlockIndex(policy=policy)
+    hashes = chain_hashes(list(range(64)), 16)
+    metas = [BlockMeta(n_chunks=1, set_time=0.0) for _ in hashes]
+    idx.insert(hashes, metas)
+    base = [policy.recency(h) for h in hashes]
+    n, _ = idx.longest_cached_prefix(hashes[:2])
+    assert n == 2
+    after = [policy.recency(h) for h in hashes]
+    assert after[0] > base[0] and after[1] > base[1]
+    assert after[2] == base[2] and after[3] == base[3]
+    idx.remove(hashes[:4])
+    assert policy.recency(hashes[3]) == 0
+
+
+def test_store_eviction_uses_shared_policy():
+    policy = LRUClock()
+    store = SatelliteStore(capacity_bytes=3 * 10, policy=policy)
+    for name in (b"h1", b"h2", b"h3"):
+        store.set((name, 0), b"x" * 10)
+    policy.touch(b"h1")                        # e.g. a radix hit elsewhere
+    store.set((b"h4", 0), b"x" * 10)           # forces one eviction
+    assert store.contains((b"h1", 0))          # hot via the shared clock
+    assert not store.contains((b"h2", 0))      # coldest cross-tier stamp
+
+
+def test_has_block_probe_refreshes_lru():
+    """The staleness fix: a block repeatedly confirmed present by
+    ``has_block`` probes must age as *used*, not as untouched."""
+    kvc = make_kvc()
+    from repro.core.protocol import KVCManager
+    mgr = KVCManager(lambda s: [ord(c) % 7 for c in s],
+                     lambda t, p, n: b"payload", kvc, block_size=4,
+                     use_radix=False)
+    assert kvc.policy is mgr.policy            # adopted at manager init
+    h1 = chain_hashes(list(range(4)), 4)[0]
+    h2 = chain_hashes(list(range(1, 5)), 4)[0]
+    kvc.set_block(h1, b"a" * 8)
+    kvc.set_block(h2, b"b" * 8)
+    r_before = mgr.policy.recency(h1)
+    assert kvc.has_block(h1)
+    assert mgr.policy.recency(h1) > r_before
+    assert mgr.policy.recency(h1) > mgr.policy.recency(h2)
+
+
+def test_engine_tiers_share_one_policy(dense_setup):
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=2)
+    assert eng.kv.policy is eng.manager.policy
+    assert eng.manager.cache.policy is eng.kv.policy
+    assert eng.kv.host.policy is eng.kv.policy
+
+
+# ---------------------------------------------------------------------------
+# host page cache behavior
+# ---------------------------------------------------------------------------
+
+def test_host_cache_capacity_and_spill():
+    from repro.serving.kv_manager import HostEntry, HostPageCache
+    policy = LRUClock()
+    spilled = []
+    cache = HostPageCache(4, policy, spill=lambda k, e: spilled.append(k))
+
+    def entry(n_pages, n_tokens):
+        k = np.zeros((1, n_pages, 4, 1, 1), np.float32)
+        return HostEntry(k=k, v=k, tokens=list(range(n_tokens)))
+
+    cache.put("a", entry(2, 8))
+    cache.put("b", entry(2, 8))
+    assert cache.used_pages == 4 and not spilled
+    cache.put("c", entry(2, 8))                # over: evicts oldest ("a")
+    assert spilled == ["a"] and len(cache) == 2
+    assert cache.pop("a") is None
+    assert cache.pop("b") is not None          # pop removes
+    assert len(cache) == 1
+    cache.put("big", entry(9, 36))             # alone over capacity:
+    assert "big" in spilled                    # spilled through, not kept
+    assert "c" in spilled
