@@ -1,25 +1,28 @@
-"""End-to-end serving driver: batched requests over a SkyMemory prefix cache.
+"""End-to-end scale-out driver: a replica cluster over one orbital cache.
 
-Serves a TinyLlama-family model (the paper's §5 testbed model; reduced depth
-by default so the demo runs in ~a minute on CPU) against a simulated 19x5
-constellation.  Repeated contexts hit cached blocks, skipping prefill -- the
-paper's Table-3 experiment.
+Serves a TinyLlama-family model (the paper's §5 testbed model; reduced
+depth by default so the demo runs in ~a minute on CPU) from an
+``EngineCluster``: router -> N Engine replicas -> ONE shared simulated
+19x5 constellation.  The pieces on display:
 
-The ``Engine`` built below is a thin facade over three layers (see the
-``repro.serving`` package docstring for the full map):
+* **Shared fabric** -- every replica is anchored at a different
+  satellite of the same ``ConstellationKVC`` (one chunk store, one block
+  directory, one §3.10 radix index), so a context cached by any replica
+  is a prefix hit for all of them.
+* **Hop-aware, prefix-affinity routing** -- requests are scored per
+  replica by prefix affinity, anchor-to-home-satellite Get latency, and
+  load before any engine sees them; duplicated contexts (the paper's
+  RAG workload) land on the replica already holding their blocks.
+* **Experienced ISL latency** -- a ``SimClock`` on the fabric gives
+  every Get KVC a completion time; fetched prefixes are *in flight*
+  until the clock passes it, decode steps overlap the flight, and the
+  un-hidden remainder shows up as ``l2_wait_s``.
+* **Rotation during serving** -- the constellation rotates on the same
+  clock while requests are in flight: chunks migrate and prefix
+  affinity shifts under the live cluster.
 
-* **Scheduler** -- continuous admission, page-aligned chunk budgeting
-  (prompt chunks ride the decode step), and preemption-by-offload: under
-  memory pressure the lowest-priority sequence is swapped out instead of
-  refusing admission.
-* **Executor** -- the jitted device programs: one fused decode(+chunk)
-  step per iteration, one host sync per step.
-* **TieredKVManager** -- the KV fabric the paper implies: L0 device page
-  pool (page = 128-token SkyMemory block) -> L1 host-RAM page cache
-  (bit-exact offload/restore) -> L2 constellation Set/Get KVC (prefix
-  hits AND spilled swap blocks, one shared LRU clock across tiers).
-
-Run: PYTHONPATH=src python examples/serve_skymemory.py [--full] [--requests N]
+Run: PYTHONPATH=src python examples/serve_skymemory.py
+     [--full] [--replicas N] [--requests N] [--policy random]
 """
 import argparse
 import sys
@@ -33,12 +36,18 @@ from repro.configs import get_config  # noqa: E402
 from repro.core import (  # noqa: E402
     ConstellationKVC,
     ConstellationSpec,
+    IslTransport,
     LosWindow,
     Sat,
+    SimClock,
     Strategy,
 )
 from repro.models.model import Model  # noqa: E402
-from repro.serving import Engine, Request, SamplingParams  # noqa: E402
+from repro.serving import (  # noqa: E402
+    EngineCluster,
+    Request,
+    SamplingParams,
+)
 
 CONTEXT = (
     "SkyMemory expands the scope of cache memory to include LEO "
@@ -52,8 +61,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full TinyLlama-1.1B dims (slow on CPU)")
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--policy", default="prefix_affinity",
+                    choices=["prefix_affinity", "random"])
     args = ap.parse_args()
 
     cfg = get_config("skymemory-tinyllama")
@@ -66,61 +78,88 @@ def main() -> None:
 
     spec = ConstellationSpec(num_planes=5, sats_per_plane=19,
                              altitude_km=550.0)  # paper's 19x5 testbed
+    # the fabric clock: Get/Set KVC ops complete at a virtual time on it
+    # (rate 10 = ten virtual seconds per wall second, so multi-hop ISL
+    # flights are experienced without dominating a CPU demo)
+    clock = SimClock(rate=10.0)
     kvc = ConstellationKVC(
         spec, LosWindow(Sat(2, 9), 5, 5), Strategy.ROTATION_HOP,
         num_servers=10, chunk_bytes=6 * 1024,
+        transport=IslTransport(spec, clock=clock,
+                               chunk_processing_time_s=2e-4),
     )
-    # block_size doubles as the L0 page size, so constellation-fetched
-    # blocks drop straight into pool pages; passing ``num_pages`` here
-    # would oversubscribe the pool and exercise preemption-by-offload
-    # (see benchmarks/run.py::_oversubscribed_pool)
-    engine = Engine(model, params, kvc=kvc, block_size=128, max_seq_len=512,
-                    max_batch=4)
+    # block_size doubles as each replica's L0 page size, so blocks
+    # fetched from the shared constellation drop straight into pool
+    # pages; the orbital rotation ticker rotates the LOS window every 2
+    # virtual seconds while requests are in flight
+    cluster = EngineCluster(
+        model, params, kvc, num_replicas=args.replicas,
+        policy=args.policy, block_size=128, max_seq_len=512, max_batch=4,
+        rotate_every_s=2.0,
+    )
+    print(f"cluster: {cluster.num_replicas} replicas anchored at "
+          f"{[(a.plane, a.slot) for a in cluster.anchors]} | "
+          f"routing={args.policy}")
 
     sp = SamplingParams(max_new_tokens=args.max_new)
+    # a duplicated-prefix stream: two repeated contexts (distinct from
+    # their first block, so each group has its own affinity home),
+    # interleaved the way a shared front door would see them
     reqs = [
-        Request(prompt=CONTEXT * 2 + f" Question {i}: what is cached?",
+        Request(prompt=f"[document {i % 2}] " + CONTEXT * 2
+                + f" Question {i % 2}: what is cached?",
                 sampling=sp)
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
-    results = engine.generate(reqs)
+    results = cluster.serve(reqs)
     wall = time.perf_counter() - t0
 
-    for r in results:
+    for r, d in zip(results, cluster.decisions):
         hit = r.cached_tokens / max(r.prompt_tokens, 1) * 100
-        print(f"req {r.request_id}: prompt={r.prompt_tokens}tok "
-              f"cached={r.cached_tokens} ({hit:.0f}% hit) "
-              f"prefilled={r.prefill_tokens} -> {len(r.token_ids)} new tok "
+        print(f"req {r.request_id} -> replica {d.replica} "
+              f"(affinity={d.affinity_tokens}tok "
+              f"hop={d.hop_latency_s*1e3:.1f}ms): "
+              f"prompt={r.prompt_tokens}tok cached={r.cached_tokens} "
+              f"({hit:.0f}% hit) -> {len(r.token_ids)} new tok "
               f"ttft={r.ttft_s*1e3:.0f}ms")
-    s = engine.stats
-    print(f"\nengine: {s.requests} requests in {wall:.1f}s | "
-          f"cached {s.cached_tokens} tok, prefilled {s.prefilled_tokens} "
-          f"tok, decoded {s.decoded_tokens} tok | "
-          f"{s.prefill_chunks} prefill chunks "
-          f"(budget {engine.chunk_tokens} tok/step rides the decode step)")
-    print(f"swap tier: {s.preemptions} preemptions, {s.restores} restores, "
-          f"{s.offloaded_pages} pages offloaded, {s.spilled_blocks} blocks "
-          f"spilled to the constellation, {s.replayed_tokens} tokens "
-          "replayed (a full pool swaps nothing)")
-    pct = s.latency_percentiles()
-    print("chunked-admission latency: ttft "
-          f"p50={pct['ttft_s']['p50']*1e3:.0f}ms "
+
+    print("\nper-replica:")
+    for rs in cluster.replica_stats():
+        pct = rs["latency_percentiles"]
+        print(f"  replica {rs['replica']} @ sat{rs['anchor']}: "
+              f"{rs['requests']} reqs | cached {rs['cached_tokens']} / "
+              f"prefilled {rs['prefilled_tokens']} / decoded "
+              f"{rs['decoded_tokens']} tok | "
+              f"ttft p50={pct['ttft_s']['p50']*1e3:.0f}ms | "
+              f"constellation hits={rs['constellation']['block_hits']} "
+              f"misses={rs['constellation']['block_misses']} | "
+              f"transport p95={rs['transport_latency_s']['p95']*1e3:.1f}ms "
+              f"| l2_wait={rs['l2_wait_s']*1e3:.0f}ms")
+
+    merged = cluster.merged_stats()
+    fabric = cluster.fabric_stats()
+    pct = merged.latency_percentiles()
+    toks = sum(len(r.token_ids) for r in results)
+    print(f"\nmerged: {merged.requests} requests, {toks} tokens in "
+          f"{wall:.1f}s ({toks/wall:.1f} tok/s aggregate) | cached "
+          f"{merged.cached_tokens} tok, prefilled {merged.prefilled_tokens}"
+          f" tok | {merged.preemptions} preemptions")
+    print(f"cluster latency: ttft p50={pct['ttft_s']['p50']*1e3:.0f}ms "
           f"p99={pct['ttft_s']['p99']*1e3:.0f}ms | inter-token "
           f"p50={pct['itl_s']['p50']*1e3:.1f}ms "
           f"p99={pct['itl_s']['p99']*1e3:.1f}ms")
-    print(f"constellation: hits={kvc.stats.block_hits} "
-          f"misses={kvc.stats.block_misses} blocks_set={kvc.stats.blocks_set}")
-    print(f"simulated worst-case fetch latency "
-          f"{max(kvc.transport.stats.op_latencies_s)*1e3:.2f} ms over "
-          f"{kvc.transport.stats.messages} ISL messages")
-
-    # Rotate mid-service: hits must survive migration.
-    kvc.rotate(steps=3)
-    r = engine.generate([Request(prompt=CONTEXT * 2 + " after rotation",
-                                 sampling=sp)])[0]
-    print(f"\nafter 3 rotation steps: cached={r.cached_tokens} tok "
-          f"(migrations={kvc.stats.migrations})")
+    print(f"shared constellation: prefix_hit_rate="
+          f"{fabric['prefix_hit_rate']*100:.0f}% "
+          f"block_hits={fabric['block_hits']} "
+          f"blocks_set={fabric['blocks_set']} | transport "
+          f"p50={fabric['transport_latency_s']['p50']*1e3:.1f}ms "
+          f"p99={fabric['transport_latency_s']['p99']*1e3:.1f}ms | "
+          f"experienced l2 wait {fabric['l2_wait_s']*1e3:.0f}ms (virtual) "
+          f"over {fabric['l2_fetch_waits']} fetches")
+    print(f"orbital rotation: {fabric['rotations']} steps during serving, "
+          f"{kvc.stats.migrations} server migrations "
+          f"(hits survive chunk migration)")
 
 
 if __name__ == "__main__":

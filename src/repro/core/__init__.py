@@ -21,8 +21,11 @@ from repro.core.mapping import Strategy, bounding_box_side, layout_grid, place_s
 from repro.core.migration import Move, migration_planes, plan_migration
 from repro.core.protocol import (
     ConstellationKVC,
+    ConstellationView,
     IslTransport,
     KVCManager,
+    SimClock,
+    TransportStats,
 )
 from repro.core.radix import BlockMeta, RadixBlockIndex
 from repro.core.simulator import (
@@ -63,8 +66,11 @@ __all__ = [
     "migration_planes",
     "plan_migration",
     "ConstellationKVC",
+    "ConstellationView",
     "IslTransport",
     "KVCManager",
+    "SimClock",
+    "TransportStats",
     "BlockMeta",
     "RadixBlockIndex",
     "MEMORY_HIERARCHY_S",

@@ -13,6 +13,7 @@ Coordinate convention (matches the paper's simulation section):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterator
 
@@ -167,28 +168,66 @@ class ConstellationSpec:
             self.inter_plane_distance_km()
         )
 
-    def isl_latency_s(self, src: Sat, dst: Sat, *, routed: bool = True) -> float:
-        d = (
-            self.isl_path_distance_km(src, dst)
-            if routed
-            else self.isl_distance_km(src, dst)
+    def path_latency_s(self, d_plane: int, d_slot: int) -> float:
+        """Latency along the greedy +GRID route for a signed torus offset.
+
+        THE single source of truth for routed ISL latency: per-hop
+        intra-/inter-plane latencies times hop counts.  ``IslTransport``,
+        the analytic simulator sweeps, and the serving router all price
+        hops through here (or through the two one-hop scalars below), so
+        a replica's hop-awareness score and the latency it later
+        experiences come from the same model.
+        """
+        return (
+            abs(d_slot) * self.intra_plane_latency_s()
+            + abs(d_plane) * self.inter_plane_latency_s()
         )
-        return d / C_KM_S
+
+    def isl_latency_s(self, src: Sat, dst: Sat, *, routed: bool = True) -> float:
+        if routed:
+            return self.path_latency_s(*self.torus_delta(src, dst))
+        return self.isl_distance_km(src, dst) / C_KM_S
 
     def slant_range_km(self, ground_offset_km: float) -> float:
         """Eq (4): ground-to-satellite distance for a sub-satellite-point
         offset of ``ground_offset_km`` from the observer."""
         return math.sqrt(ground_offset_km**2 + self.altitude_km**2)
 
+    def uplink_latency_s(self, ground_offset_km: float = 0.0) -> float:
+        """Ground-to-overhead-satellite latency (Eq 4 at the given
+        sub-satellite-point offset; 0 = directly underneath)."""
+        return self.slant_range_km(ground_offset_km) / C_KM_S
+
     def ground_latency_s(self, sat: Sat, center: Sat) -> float:
         """Latency of a direct ground link to ``sat`` when the observer sits
         under ``center`` (the closest / directly-overhead satellite)."""
         d = self.isl_distance_km(center, sat)  # ground-projected offset
-        return self.slant_range_km(d) / C_KM_S
+        return self.uplink_latency_s(d)
 
     def intra_plane_latency_s(self) -> float:
         """Paper Figs 1-2: one-hop intra-plane ISL latency."""
         return self.intra_plane_distance_km() / C_KM_S
+
+    def inter_plane_latency_s(self) -> float:
+        """One-hop inter-plane (east-west) ISL latency."""
+        return self.inter_plane_distance_km() / C_KM_S
+
+
+@functools.lru_cache(maxsize=4096)
+def one_hop_intra_plane_latency_s(
+    sats_per_plane: int, altitude_km: float
+) -> float:
+    """Figs 1-2 one-hop intra-plane latency for an (M, h) point.
+
+    The analytic sweeps (``core.simulator``) call this in tight loops;
+    caching here replaces the throwaway per-call ``ConstellationSpec``
+    they used to build and keeps the latency math in this module.
+    """
+    return ConstellationSpec(
+        num_planes=max(sats_per_plane, 2),
+        sats_per_plane=sats_per_plane,
+        altitude_km=altitude_km,
+    ).intra_plane_latency_s()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,6 +17,7 @@ takes), and a helper to run the periodic sweep policy.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Hashable, Iterable
 
@@ -38,10 +39,14 @@ class LRUClock:
     Keys are arbitrary hashables (block hashes for L2/radix, sequence
     keys for L1); the clock never dereferences them.  An unknown key has
     recency 0 -- older than anything ever touched.
+
+    Scale-out clusters stamp this clock from several replica threads at
+    once, so the tick is drawn from an ``itertools.count`` (atomic under
+    CPython) rather than a read-modify-write counter.
     """
 
     def __init__(self) -> None:
-        self._clock = 0
+        self._counter = itertools.count(1)
         self._stamp: dict[Hashable, int] = {}
 
     def __len__(self) -> int:
@@ -49,9 +54,9 @@ class LRUClock:
 
     def touch(self, key: Hashable) -> int:
         """Stamp an access; returns the new clock value."""
-        self._clock += 1
-        self._stamp[key] = self._clock
-        return self._clock
+        stamp = next(self._counter)
+        self._stamp[key] = stamp
+        return stamp
 
     def recency(self, key: Hashable) -> int:
         """Last access stamp (0 = never touched / forgotten)."""

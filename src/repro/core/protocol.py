@@ -6,17 +6,34 @@ virtual servers placed on satellites by a strategy (``mapping.py``).  All
 chunk operations of one block run in parallel, so the modeled latency of a
 block set/get is the *max* over its chunk operations (paper §4).
 
+Scale-out additions: a ``SimClock`` gives every Get/Set KVC op a
+*completion time* (``IslTransport.last_ready_at``), so serving layers can
+defer consuming a fetched payload until its simulated flight is over
+instead of treating the constellation as a zero-latency dict.
+``ConstellationKVC.view`` hands N serving replicas anchored handles on ONE
+shared store: same satellites, directory and eviction policy, but per-view
+transports (per-anchor hop costs) and per-view cache stats.
+
 ``KVCManager`` is the paper's §3.3 interface bound to a tokenizer and a
-KVC-producing model function, with the §3.10 local radix index in front.
+KVC-producing model function, with the §3.10 local radix index in front;
+``KVCManager.sibling`` binds additional replicas to the same radix index,
+recency policy, and lock.
 """
 from __future__ import annotations
 
+import random
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 from repro.core import migration as migration_mod
-from repro.core.chunking import chunk_server, join_chunks, split_chunks
+from repro.core.chunking import (
+    chunk_server,
+    join_chunks,
+    num_chunks,
+    split_chunks,
+)
 from repro.core.constellation import ConstellationSpec, LosWindow, Sat
 from repro.core.hashing import chain_hashes, split_token_blocks
 from repro.core.mapping import Strategy, place_servers
@@ -25,15 +42,98 @@ from repro.core.store import SatelliteStore
 
 
 # ---------------------------------------------------------------------------
+# Virtual serving clock.
+# ---------------------------------------------------------------------------
+
+class SimClock:
+    """The fabric's virtual clock: Get/Set completion times live on it.
+
+    Anchored to the host monotonic clock, so everything that takes real
+    time (decode steps, payload deserialization) advances it for free and
+    a transport op issued at ``now()`` with latency ``L`` completes at
+    ``now() + L``.  ``rate`` compresses virtual time -- at ``rate=10``,
+    ten virtual seconds pass per wall second, so tests can simulate long
+    ISL flights without sleeping through them.  ``wait_until`` blocks
+    (sleeps wall time) until the clock passes a completion time and
+    accounts the virtual time spent blocked -- the *experienced* part of
+    a fetch the caller could not hide behind useful work.
+    """
+
+    def __init__(self, rate: float = 1.0) -> None:
+        if rate <= 0.0:
+            raise ValueError("clock rate must be positive")
+        self.rate = rate
+        self._t0 = time.perf_counter()
+        self.waited_s = 0.0          # virtual seconds spent blocked
+        self.waits = 0
+        # one clock is shared by every replica thread of a cluster, so
+        # the wait accounting must not lose updates to interleaving
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        """Virtual seconds since the clock was created."""
+        return (time.perf_counter() - self._t0) * self.rate
+
+    def wait_until(self, t: float) -> float:
+        """Block until virtual time ``t``; returns virtual seconds waited
+        (0.0 when ``t`` already passed)."""
+        dt = t - self.now()
+        if dt <= 0.0:
+            return 0.0
+        time.sleep(dt / self.rate)
+        with self._lock:
+            self.waited_s += dt
+            self.waits += 1
+        return dt
+
+
+# ---------------------------------------------------------------------------
 # Transport cost model.
 # ---------------------------------------------------------------------------
 
 @dataclass
 class TransportStats:
+    """Bounded op-latency record.
+
+    ``op_latencies_s`` is a uniform reservoir over the whole run, capped
+    at ``reservoir_size`` samples so a long serving run cannot grow it
+    without bound.  Runs shorter than the cap keep every sample in
+    arrival order (the pre-reservoir behavior); ``last_latency_s`` /
+    ``max_latency_s`` are exact regardless of sampling, and
+    ``latency_percentiles`` summarizes the reservoir as p50/p95/p99.
+    """
+
     messages: int = 0
     bytes_moved: int = 0
     total_latency_s: float = 0.0
+    ops: int = 0
+    last_latency_s: float = 0.0
+    max_latency_s: float = 0.0
+    reservoir_size: int = 512
     op_latencies_s: list[float] = field(default_factory=list)
+    _rng: random.Random = field(
+        default_factory=lambda: random.Random(0x5EED), repr=False)
+
+    def record(self, latency_s: float) -> None:
+        self.ops += 1
+        self.total_latency_s += latency_s
+        self.last_latency_s = latency_s
+        if latency_s > self.max_latency_s:
+            self.max_latency_s = latency_s
+        if len(self.op_latencies_s) < self.reservoir_size:
+            self.op_latencies_s.append(latency_s)
+        else:
+            j = self._rng.randrange(self.ops)
+            if j < self.reservoir_size:
+                self.op_latencies_s[j] = latency_s
+
+    def latency_percentiles(self) -> dict[str, float]:
+        if not self.op_latencies_s:
+            return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+        xs = sorted(self.op_latencies_s)
+        n = len(xs)
+        pick = lambda q: xs[min(n - 1, int(q * (n - 1) + 0.5))]  # noqa: E731
+        return {"p50": pick(0.50), "p95": pick(0.95), "p99": pick(0.99)}
 
 
 @dataclass
@@ -44,33 +144,63 @@ class IslTransport:
     (one reliable uplink to the closest satellite, then ISL routing) --
     paper's rotation / rotation+hop scenario.  Otherwise the LLM is on board
     the center satellite (hop-aware scenario) and only ISL legs apply.
+
+    ``anchor``: the satellite this transport's ops originate from -- a
+    serving replica's attachment point on the torus.  ``None`` keeps the
+    single-engine behavior (ops originate at the LOS window center).
+
+    ``clock``: optional ``SimClock``.  When set, ``record_op`` stamps
+    ``last_ready_at = clock.now() + latency`` -- the op's completion time
+    -- so callers can defer consuming the result until the flight is over
+    (and overlap the flight with other work) instead of experiencing the
+    constellation as a free local dict.
     """
 
     spec: ConstellationSpec
     ground_hosted: bool = True
     chunk_processing_time_s: float = 0.0
     link_bandwidth_bytes_s: float | None = None
+    anchor: Sat | None = None
+    clock: SimClock | None = None
     stats: TransportStats = field(default_factory=TransportStats)
+    last_ready_at: float | None = field(default=None, repr=False)
 
-    def chunk_op_latency_s(
-        self, center: Sat, target: Sat, n_bytes: int, *, round_trip: bool
+    def src_for(self, center: Sat) -> Sat:
+        return self.anchor if self.anchor is not None else center
+
+    def op_latency_s(
+        self, src: Sat, target: Sat, n_bytes: int, *, round_trip: bool
     ) -> float:
+        """Pure cost model -- no accounting.  The serving router calls
+        this to *estimate* fetch costs from candidate anchors without
+        polluting transport stats."""
         lat = 0.0
         if self.ground_hosted:
-            lat += self.spec.slant_range_km(0.0) / 299_792.458  # up to center
-        lat += self.spec.isl_latency_s(center, target, routed=True)
+            lat += self.spec.uplink_latency_s()
+        lat += self.spec.isl_latency_s(src, target, routed=True)
         if round_trip:
             lat *= 2.0
         lat += self.chunk_processing_time_s
         if self.link_bandwidth_bytes_s:
             lat += n_bytes / self.link_bandwidth_bytes_s
+        return lat
+
+    def chunk_op_latency_s(
+        self, center: Sat, target: Sat, n_bytes: int, *, round_trip: bool
+    ) -> float:
+        lat = self.op_latency_s(
+            self.src_for(center), target, n_bytes, round_trip=round_trip)
         self.stats.messages += 1
         self.stats.bytes_moved += n_bytes
         return lat
 
-    def record_op(self, latency_s: float) -> None:
-        self.stats.total_latency_s += latency_s
-        self.stats.op_latencies_s.append(latency_s)
+    def record_op(self, latency_s: float) -> float | None:
+        """Account one block-level op; returns (and remembers) its
+        completion time on the clock, or None when unclocked."""
+        self.stats.record(latency_s)
+        self.last_ready_at = (
+            None if self.clock is None else self.clock.now() + latency_s)
+        return self.last_ready_at
 
 
 # ---------------------------------------------------------------------------
@@ -149,8 +279,59 @@ class ConstellationKVC:
     def center(self) -> Sat:
         return self.window.center
 
+    def view(self, anchor: Sat, *, clock: SimClock | None = None
+             ) -> "ConstellationView":
+        """A serving replica's anchored handle on this shared store.
+
+        The view shares every byte of storage state (chunk stores,
+        directory, server map, eviction policy) with the base, but its
+        ops originate from ``anchor`` through the view's own
+        ``IslTransport`` -- per-replica hop costs, per-replica transport
+        stats, per-replica ``CacheStats`` -- and complete on ``clock``
+        (defaulting to the base transport's clock)."""
+        base_t = self.transport
+        transport = IslTransport(
+            self.spec,
+            ground_hosted=base_t.ground_hosted,
+            chunk_processing_time_s=base_t.chunk_processing_time_s,
+            link_bandwidth_bytes_s=base_t.link_bandwidth_bytes_s,
+            anchor=self.spec.wrap(anchor),
+            clock=clock if clock is not None else base_t.clock,
+        )
+        return ConstellationView(self, transport)
+
+    def estimate_get_latency_s(
+        self,
+        anchor: Sat,
+        *,
+        payload_bytes: int | None = None,
+        transport: IslTransport | None = None,
+    ) -> float:
+        """Predicted Get KVC block latency from ``anchor``: the max
+        round-trip chunk op over the chunk servers a block of
+        ``payload_bytes`` (default: a full stripe) lands on.  Pure -- no
+        stats, no data movement -- this is the router's hop-awareness
+        signal, priced by the same transport model the fetch will
+        experience."""
+        tr = transport if transport is not None else self.transport
+        nb = (self.num_servers if payload_bytes is None
+              else num_chunks(payload_bytes, self.chunk_bytes))
+        servers = {chunk_server(cid, self.num_servers)
+                   for cid in range(min(nb, self.num_servers))}
+        anchor = self.spec.wrap(anchor)
+        return max(
+            tr.op_latency_s(anchor, self.server_sat(sid), self.chunk_bytes,
+                            round_trip=True)
+            for sid in servers
+        )
+
     # -- Set KVC (paper §3.8) ------------------------------------------
-    def set_block(self, block_hash: bytes, payload: bytes) -> BlockMeta:
+    def set_block(
+        self, block_hash: bytes, payload: bytes, *,
+        via: IslTransport | None = None, stats: CacheStats | None = None,
+    ) -> BlockMeta:
+        tr = via or self.transport
+        cs = stats or self.stats
         chunks = split_chunks(payload, self.chunk_bytes)
         worst = 0.0
         for cid, chunk in enumerate(chunks):
@@ -159,19 +340,22 @@ class ConstellationKVC:
             self.store_for(sat).set((block_hash, cid), chunk)
             worst = max(
                 worst,
-                self.transport.chunk_op_latency_s(
+                tr.chunk_op_latency_s(
                     self.center, sat, len(chunk), round_trip=False
                 ),
             )
-        self.transport.record_op(worst)
+        tr.record_op(worst)
         self.directory[block_hash] = len(chunks)
-        self.stats.blocks_set += 1
+        cs.blocks_set += 1
         return BlockMeta(
             n_chunks=len(chunks), set_time=time.time(), payload_bytes=len(payload)
         )
 
     # -- Get KVC (paper §3.8) ------------------------------------------
-    def has_block(self, block_hash: bytes) -> bool:
+    def has_block(
+        self, block_hash: bytes, *,
+        via: IslTransport | None = None, stats: CacheStats | None = None,
+    ) -> bool:
         """Probe chunk 0 at its server -- a missing first chunk means the
         block is absent (paper: lookups start at the nearest satellite).
 
@@ -179,10 +363,12 @@ class ConstellationKVC:
         check is a use (the caller is about to rely on the block), and
         leaving it unstamped made repeatedly-probed blocks look cold and
         get evicted first -- the staleness the shared policy fixed."""
-        self.stats.lookup_probes += 1
+        tr = via or self.transport
+        cs = stats or self.stats
+        cs.lookup_probes += 1
         sat = self.server_sat(chunk_server(0, self.num_servers))
-        self.transport.record_op(
-            self.transport.chunk_op_latency_s(self.center, sat, 0, round_trip=True)
+        tr.record_op(
+            tr.chunk_op_latency_s(self.center, sat, 0, round_trip=True)
         )
         store = self.store_for(sat)
         present = store.contains((block_hash, 0))
@@ -190,11 +376,16 @@ class ConstellationKVC:
             store.touch((block_hash, 0))
         return present
 
-    def get_block(self, block_hash: bytes, n_chunks: int | None = None) -> bytes | None:
+    def get_block(
+        self, block_hash: bytes, n_chunks: int | None = None, *,
+        via: IslTransport | None = None, stats: CacheStats | None = None,
+    ) -> bytes | None:
+        tr = via or self.transport
+        cs = stats or self.stats
         if n_chunks is None:
             n_chunks = self.directory.get(block_hash, 0)
             if n_chunks == 0:
-                self.stats.block_misses += 1
+                cs.block_misses += 1
                 return None
         chunks: list[bytes] = []
         worst = 0.0
@@ -204,21 +395,24 @@ class ConstellationKVC:
             chunk = self.store_for(sat).get((block_hash, cid))
             if chunk is None:
                 # A single missing chunk fails the block (§3.1); lazy-evict.
-                self.stats.block_misses += 1
+                cs.block_misses += 1
                 self.purge_block(block_hash)
                 return None
             worst = max(
                 worst,
-                self.transport.chunk_op_latency_s(
+                tr.chunk_op_latency_s(
                     self.center, sat, len(chunk), round_trip=True
                 ),
             )
             chunks.append(chunk)
-        self.transport.record_op(worst)
-        self.stats.block_hits += 1
+        tr.record_op(worst)
+        cs.block_hits += 1
         return join_chunks(chunks)
 
-    def lookup_longest(self, hashes: Sequence[bytes]) -> int:
+    def lookup_longest(
+        self, hashes: Sequence[bytes], *,
+        via: IslTransport | None = None, stats: CacheStats | None = None,
+    ) -> int:
         """Binary search for the furthest cached hash (Get steps 3-6).
 
         The chained-hash prefix property makes presence monotone in the block
@@ -228,7 +422,7 @@ class ConstellationKVC:
         lo, hi = 0, len(hashes)  # invariant: blocks < lo present
         while lo < hi:
             mid = (lo + hi) // 2
-            if self.has_block(hashes[mid]):
+            if self.has_block(hashes[mid], via=via, stats=stats):
                 lo = mid + 1
             else:
                 hi = mid
@@ -329,6 +523,111 @@ class ConstellationKVC:
 
 
 # ---------------------------------------------------------------------------
+# Per-replica anchored views over one shared constellation.
+# ---------------------------------------------------------------------------
+
+class ConstellationView:
+    """An anchored, per-replica facade over a shared ``ConstellationKVC``.
+
+    Storage state -- satellite chunk stores, the block directory, the
+    server map, the shared eviction policy -- belongs to the base and is
+    visible through every view, so N serving replicas share ONE orbital
+    cache.  What is private per view: the ``IslTransport`` (ops originate
+    from this view's ``anchor``, so hop costs, completion times, and
+    transport stats are the replica's own) and a ``CacheStats`` (per-
+    replica hit/miss accounting).  Mutating ops (rotation, purges) always
+    go through the base, so views can never diverge.
+    """
+
+    def __init__(self, base: ConstellationKVC,
+                 transport: IslTransport) -> None:
+        self.base = base
+        self.transport = transport
+        self.stats = CacheStats()
+
+    @property
+    def anchor(self) -> Sat:
+        return self.transport.src_for(self.base.center)
+
+    # -- shared-state passthrough --------------------------------------
+    @property
+    def spec(self) -> ConstellationSpec:
+        return self.base.spec
+
+    @property
+    def window(self) -> LosWindow:
+        return self.base.window
+
+    @property
+    def strategy(self) -> Strategy:
+        return self.base.strategy
+
+    @property
+    def num_servers(self) -> int:
+        return self.base.num_servers
+
+    @property
+    def chunk_bytes(self) -> int:
+        return self.base.chunk_bytes
+
+    @property
+    def directory(self) -> dict[bytes, int]:
+        return self.base.directory
+
+    @property
+    def policy(self):
+        return self.base.policy
+
+    def adopt_policy(self, policy) -> None:
+        self.base.adopt_policy(policy)
+
+    @property
+    def on_block_lost(self) -> Callable[[bytes], None] | None:
+        return self.base.on_block_lost
+
+    @on_block_lost.setter
+    def on_block_lost(self, cb: Callable[[bytes], None] | None) -> None:
+        self.base.on_block_lost = cb
+
+    def server_sat(self, server_id0: int) -> Sat:
+        return self.base.server_sat(server_id0)
+
+    def store_for(self, sat: Sat) -> SatelliteStore:
+        return self.base.store_for(sat)
+
+    def rotate(self, steps: int = 1) -> list[migration_mod.Move]:
+        return self.base.rotate(steps)
+
+    def purge_block(self, block_hash: bytes) -> int:
+        return self.base.purge_block(block_hash)
+
+    # -- anchored ops --------------------------------------------------
+    def set_block(self, block_hash: bytes, payload: bytes) -> BlockMeta:
+        return self.base.set_block(block_hash, payload,
+                                   via=self.transport, stats=self.stats)
+
+    def has_block(self, block_hash: bytes) -> bool:
+        return self.base.has_block(block_hash,
+                                   via=self.transport, stats=self.stats)
+
+    def get_block(self, block_hash: bytes,
+                  n_chunks: int | None = None) -> bytes | None:
+        return self.base.get_block(block_hash, n_chunks,
+                                   via=self.transport, stats=self.stats)
+
+    def lookup_longest(self, hashes: Sequence[bytes]) -> int:
+        return self.base.lookup_longest(hashes,
+                                        via=self.transport, stats=self.stats)
+
+    def estimate_get_latency_s(
+        self, *, payload_bytes: int | None = None
+    ) -> float:
+        return self.base.estimate_get_latency_s(
+            self.anchor, payload_bytes=payload_bytes,
+            transport=self.transport)
+
+
+# ---------------------------------------------------------------------------
 # Paper §3.3 interface.
 # ---------------------------------------------------------------------------
 
@@ -344,17 +643,27 @@ class KVCManager:
     layer (any model family: K/V lists or SSM state snapshots; the protocol
     only sees bytes).  The §3.10 radix tree indexes block hashes locally so
     lookups usually skip the constellation entirely.
+
+    Scale-out: ``sibling(cache_view)`` binds another serving replica to
+    the SAME radix index, recency policy, hash-chain map and lock -- one
+    prefix index over one shared constellation, N anchored entry points.
+    Every index-mutating / index-reading method takes the (reentrant)
+    ``lock``, so sibling replicas may call in concurrently from their own
+    threads.
     """
 
     def __init__(
         self,
         tokenize: Callable[[str], list[int]],
         kvc_fn: KvcFn,
-        cache: ConstellationKVC,
+        cache: "ConstellationKVC | ConstellationView",
         *,
         block_size: int = 128,
         use_radix: bool = True,
         policy=None,
+        index: RadixBlockIndex | None = None,
+        chain_map: dict[bytes, list[bytes]] | None = None,
+        lock: "threading.RLock | None" = None,
     ) -> None:
         self.tokenize = tokenize
         self.kvc_fn = kvc_fn
@@ -367,15 +676,33 @@ class KVCManager:
 
             policy = LRUClock()
         self.policy = policy
-        self.index = RadixBlockIndex(policy=policy)
+        self.index = index if index is not None else RadixBlockIndex(
+            policy=policy)
+        self.lock = lock if lock is not None else threading.RLock()
         cache.adopt_policy(policy)
         cache.on_block_lost = self._on_block_lost
-        self._hash_to_chain: dict[bytes, list[bytes]] = {}
+        self._hash_to_chain: dict[bytes, list[bytes]] = (
+            chain_map if chain_map is not None else {})
+
+    def sibling(self, cache: "ConstellationKVC | ConstellationView"
+                ) -> "KVCManager":
+        """A manager over the same radix index / policy / chain map /
+        lock, bound to a different cache handle (typically an anchored
+        ``ConstellationView``) -- the per-replica handle in a scale-out
+        cluster.  All siblings see one shared prefix index; only
+        transport anchoring and stats attribution differ."""
+        return KVCManager(
+            self.tokenize, self.kvc_fn, cache,
+            block_size=self.block_size, use_radix=self.use_radix,
+            policy=self.policy, index=self.index,
+            chain_map=self._hash_to_chain, lock=self.lock,
+        )
 
     def _on_block_lost(self, block_hash: bytes) -> None:
-        chain = self._hash_to_chain.pop(block_hash, None)
-        if chain is not None:
-            self.index.remove(chain)
+        with self.lock:
+            chain = self._hash_to_chain.pop(block_hash, None)
+            if chain is not None:
+                self.index.remove(chain)
 
     # ------------------------------------------------------------------
     def add_blocks(self, prompt: str) -> int:
@@ -384,34 +711,46 @@ class KVCManager:
 
     def add_blocks_tokens(self, tokens: Sequence[int]) -> int:
         """Token-level Set KVC (serving engines pass their exact, possibly
-        truncated token sequence so cache coverage matches what they run)."""
+        truncated token sequence so cache coverage matches what they run).
+
+        The lock is held for index reads and store writes only -- the
+        payload computation (one model forward per uncached block) runs
+        *outside* it, so sibling replicas keep looking up and writing
+        while this replica computes.  A concurrent duplicate therefore
+        really misses until the write-back lands (the race prefix-
+        affinity routing exists to win); if two replicas compute the same
+        block, the second insert overwrites it with identical bytes."""
         hashes = chain_hashes(tokens, self.block_size)
         if not hashes:
             return 0
         blocks = split_token_blocks(tokens, self.block_size)
-        n_cached, _ = (
-            self.index.longest_cached_prefix(hashes)
-            if self.use_radix
-            else (self.cache.lookup_longest(hashes), None)
-        )
-        past: bytes | None = None
-        if n_cached:
-            past = self.cache.get_block(hashes[n_cached - 1])
-            if past is None:  # lazily evicted under us - recompute all
-                n_cached = 0
-        added = 0
-        metas: list[BlockMeta | None] = [None] * len(hashes)
+        with self.lock:
+            n_cached, _ = (
+                self.index.longest_cached_prefix(hashes)
+                if self.use_radix
+                else (self.cache.lookup_longest(hashes), None)
+            )
+            past: bytes | None = None
+            if n_cached:
+                past = self.cache.get_block(hashes[n_cached - 1])
+                if past is None:  # lazily evicted under us - recompute all
+                    n_cached = 0
+        payloads: list[bytes] = []
         for i in range(n_cached, len(hashes)):
             block_tokens = [t for b in blocks[: i + 1] for t in b]
             payload = self.kvc_fn(block_tokens, past, i * self.block_size)
-            meta = self.cache.set_block(hashes[i], payload)
-            metas[i] = meta
-            self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
+            payloads.append(payload)
             past = payload
-            added += 1
-        if self.use_radix and added:
-            self.index.insert(hashes, metas)
-        return added
+        if not payloads:
+            return 0
+        with self.lock:
+            metas: list[BlockMeta | None] = [None] * len(hashes)
+            for i, payload in zip(range(n_cached, len(hashes)), payloads):
+                metas[i] = self.cache.set_block(hashes[i], payload)
+                self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
+            if self.use_radix:
+                self.index.insert(hashes, metas)
+        return len(payloads)
 
     def add_precomputed_blocks(
         self,
@@ -432,21 +771,22 @@ class KVCManager:
         hashes = chain_hashes(tokens, self.block_size)
         if not hashes:
             return 0
-        n_cached, _ = (
-            self.index.longest_cached_prefix(hashes)
-            if self.use_radix
-            else (self.cache.lookup_longest(hashes), None)
-        )
-        added = 0
-        metas: list[BlockMeta | None] = [None] * len(hashes)
-        for i in range(n_cached, len(hashes)):
-            payload = payload_for(i + 1)
-            metas[i] = self.cache.set_block(hashes[i], payload)
-            self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
-            added += 1
-        if self.use_radix and added:
-            self.index.insert(hashes, metas)
-        return added
+        with self.lock:
+            n_cached, _ = (
+                self.index.longest_cached_prefix(hashes)
+                if self.use_radix
+                else (self.cache.lookup_longest(hashes), None)
+            )
+            added = 0
+            metas: list[BlockMeta | None] = [None] * len(hashes)
+            for i in range(n_cached, len(hashes)):
+                payload = payload_for(i + 1)
+                metas[i] = self.cache.set_block(hashes[i], payload)
+                self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
+                added += 1
+            if self.use_radix and added:
+                self.index.insert(hashes, metas)
+            return added
 
     def get_cache(self, prompt: str) -> tuple[bytes | None, int]:
         """Longest-prefix KVC for ``prompt`` (Get KVC).
@@ -462,13 +802,14 @@ class KVCManager:
         hashes = chain_hashes(tokens, self.block_size)
         if not hashes:
             return None, 0
-        if self.use_radix:
-            n, _meta = self.index.longest_cached_prefix(hashes)
-        else:
-            n = self.cache.lookup_longest(hashes)
-        while n > 0:
-            payload = self.cache.get_block(hashes[n - 1])
-            if payload is not None:
-                return payload, n * self.block_size
-            n -= 1  # lazy eviction already pruned index; try shorter prefix
-        return None, 0
+        with self.lock:
+            if self.use_radix:
+                n, _meta = self.index.longest_cached_prefix(hashes)
+            else:
+                n = self.cache.lookup_longest(hashes)
+            while n > 0:
+                payload = self.cache.get_block(hashes[n - 1])
+                if payload is not None:
+                    return payload, n * self.block_size
+                n -= 1  # lazy eviction pruned the index; try shorter prefix
+            return None, 0

@@ -35,7 +35,12 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.constellation import C_KM_S, ConstellationSpec, LosWindow, Sat
+from repro.core.constellation import (
+    ConstellationSpec,
+    LosWindow,
+    Sat,
+    one_hop_intra_plane_latency_s,
+)
 from repro.core.mapping import Strategy, bounding_box_side, place_servers
 from repro.core.chunking import num_chunks as _num_chunks
 
@@ -105,7 +110,7 @@ def worst_case_latency(strategy: Strategy, cfg: SimConfig) -> SimResult:
     center = window.center
     chunks = _chunks_per_server(cfg)
     total = sum(chunks)
-    uplink_s = spec.slant_range_km(0.0) / C_KM_S
+    uplink_s = spec.uplink_latency_s()
 
     if strategy is Strategy.ROTATION:
         sats = place_servers(strategy, spec, window, cfg.num_servers)
@@ -119,24 +124,25 @@ def worst_case_latency(strategy: Strategy, cfg: SimConfig) -> SimResult:
 
     sats = place_servers(strategy, spec, window, cfg.num_servers)
     offsets = [spec.torus_delta(center, s) for s in sats]
-    dm = spec.intra_plane_distance_km()
-    dn = spec.inter_plane_distance_km()
+    # per-hop latencies from the spec -- the single ISL cost source shared
+    # with IslTransport / ConstellationSpec.path_latency_s
+    lat_m = spec.intra_plane_latency_s()
+    lat_n = spec.inter_plane_latency_s()
 
     if strategy is Strategy.ROTATION_HOP:
         phases = [0]  # per-step migration keeps rings anchored
     else:  # HOP: no migration -> drift over a full within-plane period
         phases = list(range(cfg.sats_per_plane))
 
-    # Vectorized phase sweep (the O(phases x servers) hot loop).  Elementwise
-    # float64 ops in the exact order of the original scalar code, and
-    # argmax's first-max tie-breaking matches the strict `>` scan, so the
-    # selected (tot, prop, proc) triples are bit-identical.
+    # Vectorized phase sweep (the O(phases x servers) hot loop); argmax's
+    # first-max tie-breaking matches the original strict `>` scan.
     dp = np.abs(np.array([o[0] for o in offsets], dtype=np.int64))
     ds = np.array([o[1] for o in offsets], dtype=np.int64)
     proc = np.array(chunks, dtype=np.int64) * cfg.chunk_processing_time_s
     phase_arr = np.array(phases, dtype=np.int64)
-    path_km = dp[None, :] * dn + np.abs(ds[None, :] - phase_arr[:, None]) * dm
-    prop_all = uplink_s + path_km / C_KM_S                  # [phases, servers]
+    path_s = (dp[None, :] * lat_n
+              + np.abs(ds[None, :] - phase_arr[:, None]) * lat_m)
+    prop_all = uplink_s + path_s                            # [phases, servers]
     tot_all = prop_all + proc[None, :]
     best = np.argmax(tot_all, axis=1)                       # [phases]
     rows = np.arange(len(phases))
@@ -185,12 +191,9 @@ def sweep(
 # ---------------------------------------------------------------------------
 
 def intra_plane_latency_s(sats_per_plane: int, altitude_km: float) -> float:
-    spec = ConstellationSpec(
-        num_planes=max(sats_per_plane, 2),
-        sats_per_plane=sats_per_plane,
-        altitude_km=altitude_km,
-    )
-    return spec.intra_plane_latency_s()
+    """One-hop intra-plane latency at an (M, h) point -- delegates to the
+    cached single-source helper in ``core.constellation``."""
+    return one_hop_intra_plane_latency_s(sats_per_plane, altitude_km)
 
 
 def isl_latency_grid(

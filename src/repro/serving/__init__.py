@@ -1,11 +1,50 @@
-"""Serving layer: a tiered-KV, continuously-batched SkyMemory runtime.
+"""Serving layer: a scale-out, tiered-KV SkyMemory runtime.
 
-Layering
-========
+Scale-out layering
+==================
 
-The stack is three explicit layers behind a thin ``Engine`` facade
-(``repro.serving.engine``), each separately importable and separately
-tested:
+The stack now serves from a **cluster of Engine replicas over one shared
+constellation fabric** (the paper's "Scale Out" axis):
+
+* **Router** (``repro.serving.router``) -- the cluster's front door.
+  Every request is scored per replica before any engine sees it:
+  *prefix affinity* (route duplicated contexts to the replica already
+  holding / writing their blocks, via a router-local block-hash memory
+  plus the shared radix index), *hop latency* (the estimated Get KVC
+  cost from the replica's anchor satellite to the blocks' home
+  satellites, priced by the same transport model the fetch later
+  experiences), and *load* (outstanding tokens; always the tie-break).
+  A seeded ``RandomRouter`` is the baseline every benchmark compares
+  against.
+* **Cluster** (``repro.serving.cluster``) -- ``EngineCluster`` wires N
+  replicas to ONE ``ConstellationKVC``: each replica is *anchored* at a
+  different satellite through ``ConstellationKVC.view`` (private
+  transport: per-anchor hop costs, per-replica cache/transport stats)
+  and bound to the shared §3.10 radix index through
+  ``KVCManager.sibling`` (one prefix index, one recency policy, one
+  lock, N entry points).  ``serve`` routes a stream, runs replicas on
+  concurrent threads, and merges results in request order;
+  ``rotate_every_s`` rotates the constellation on the serving clock
+  while requests are in flight (chunks migrate, prefix affinity
+  shifts).  ``EngineStats.merge`` folds per-replica stats into true
+  cluster-level TTFT/ITL percentiles and constellation hit rates.
+
+Constellation latency is **experienced, not just recorded**: with a
+``core.protocol.SimClock`` on the fabric, every Get KVC completes at a
+virtual time (``IslTransport.last_ready_at``).  The scheduler treats a
+fetched prefix as *in flight* until the clock passes that time --
+chunks that would consume it are deferred so the flight overlaps live
+decode steps (extending the fetch-ahead hook), and whatever cannot be
+hidden is waited out and accounted (``EngineStats.l2_wait_s`` /
+``l2_deferred_chunks``).  Unclocked fabrics keep the legacy
+instant-L2 behavior.
+
+Single-replica layering
+=======================
+
+Each replica is the three-layer engine behind a thin ``Engine`` facade
+(``repro.serving.engine``), each layer separately importable and
+separately tested:
 
 * **Scheduler** (``repro.serving.scheduler``) -- the host-side brain:
   request lifecycle (QUEUED -> PREFILLING -> RUNNING -> FINISHED, with
@@ -36,16 +75,17 @@ tested:
     hit restores bit-identical K/V including the non-block-aligned tail
     page, so a resumed sequence replays nothing.
   - **L2, the constellation** (``core.protocol`` Set/Get KVC through
-    ``SkyKVCAdapter``): the paper's LEO cache, now a real swap tier.
-    Host-cache overflow spills a victim's *block-aligned* prefix as
-    payloads built directly from its exported pages (no model
-    recompute), indexed in the same §3.10 radix tree as ordinary
-    write-backs; restores that miss L1 fetch the longest cached block
-    prefix and replay only the unaligned tail.
+    ``SkyKVCAdapter``): the paper's LEO cache as a real swap tier with
+    real (clocked) fetch latency.  Host-cache overflow spills a
+    victim's *block-aligned* prefix as payloads built directly from its
+    exported pages (no model recompute), indexed in the same radix tree
+    as ordinary write-backs; restores that miss L1 fetch the longest
+    cached block prefix -- experiencing the flight -- and replay only
+    the unaligned tail.
 
   One ``core.eviction.LRUClock`` stamps accesses across L1, L2, and the
-  radix index, so every tier's victim selection sees one recency
-  timeline.
+  radix index -- for every replica of a cluster -- so victim selection
+  anywhere sees one recency timeline.
 
 Preemption-by-offload
 =====================
@@ -74,26 +114,31 @@ chunked-prefill kernel, runtime offsets -- one compilation per buffer
 shape).  Chunks are FIFO across PREFILLING sequences; a sequence's
 SkyMemory lookup happens at chunk-head (after earlier write-backs, so
 duplicate contexts queued together still hit) and its payload->pages
-decode runs on the adapter's fetch-ahead thread overlapping a live
-decode step.  Cold-start waves prefill together as lockstep batched
-chunk steps.  MoE families keep stop-the-world admission
-(``chunk_tokens=0``): capacity routing is group-composition dependent,
-so chunk splits would change real tokens' routing.
+decode runs on the adapter's fetch-ahead thread -- now alongside the
+simulated ISL flight -- overlapping live decode steps.  Cold-start
+waves prefill together as lockstep batched chunk steps.  MoE families
+keep stop-the-world admission (``chunk_tokens=0``): capacity routing is
+group-composition dependent, so chunk splits would change real tokens'
+routing.
 
 The decode loop launches ONE jitted program per step and performs ONE
 host sync: reading the sampled token ids (a finishing chunk's first
 token rides the same vector as row ``B``).  Sampling params are stacked
 into [B] arrays and re-uploaded only when slot membership changes.
 ``EngineStats`` records TTFT / inter-token-latency samples (plus the
-during-admission ITL subset) for p50/p95/p99 reporting, and the swap
+during-admission ITL subset) for p50/p95/p99 reporting, the swap
 counters (``preemptions``, ``restores``, ``offloaded_pages``,
-``spilled_blocks``, ``replayed_tokens``).
+``spilled_blocks``, ``replayed_tokens``), and the experienced-L2
+counters (``l2_wait_s``, ``l2_fetch_waits``, ``l2_deferred_chunks``);
+``TransportStats`` keeps a bounded latency reservoir with its own
+p50/p95/p99 alongside.
 
 Non-paged families (MLA latent, SSM state, hybrid, encoder-decoder)
 keep a dense batched cache (``DenseRuntime``) but share the vectorized
 sampler and the one-sync-per-step loop; paging their decode state is
 future work.
 """
+from repro.serving.cluster import EngineCluster, spread_anchors
 from repro.serving.engine import Engine
 from repro.serving.executor import DenseRuntime, PagedExecutor
 from repro.serving.kv_manager import HostPageCache, TieredKVManager
@@ -102,6 +147,14 @@ from repro.serving.request import (
     GenerationResult,
     Request,
     SeqState,
+)
+from repro.serving.router import (
+    PrefixAffinityRouter,
+    RandomRouter,
+    ReplicaHandle,
+    RouteDecision,
+    Router,
+    make_router,
 )
 from repro.serving.sampler import (
     SamplingParams,
@@ -116,10 +169,16 @@ from repro.serving.tokenizer import ByteTokenizer
 
 __all__ = [
     "Engine",
+    "EngineCluster",
     "EngineStats",
     "FinishReason",
     "GenerationResult",
+    "PrefixAffinityRouter",
+    "RandomRouter",
+    "ReplicaHandle",
     "Request",
+    "RouteDecision",
+    "Router",
     "SamplingParams",
     "SeqState",
     "Scheduler",
@@ -129,8 +188,10 @@ __all__ = [
     "HostPageCache",
     "chunk_spans",
     "head_span",
+    "make_router",
     "sample",
     "sample_batch",
+    "spread_anchors",
     "stack_sampling",
     "SkyKVCAdapter",
     "ByteTokenizer",

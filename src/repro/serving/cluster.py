@@ -1,0 +1,290 @@
+"""Scale-out serving: N Engine replicas over ONE shared constellation.
+
+``EngineCluster`` is the paper's "Scale Out" axis made concrete:
+
+* one ``ConstellationKVC`` -- the orbital cache, its satellite stores,
+  block directory and eviction policy -- shared by every replica;
+* N ``Engine`` replicas, each *anchored* at a different satellite
+  through ``ConstellationKVC.view`` (per-replica hop costs + transport
+  stats on the fabric's ``SimClock``) and bound to the shared §3.10
+  radix index through ``KVCManager.sibling`` (one prefix index, N entry
+  points, one lock);
+* a router (``serving.router``) in front: requests are scored per
+  replica by prefix affinity, anchor-to-home-satellite hop latency, and
+  load before any engine sees them.
+
+``serve`` routes a request stream, runs each replica's share on its own
+thread (replicas really do compute concurrently -- the shared fabric is
+lock-protected, and the ``SimClock`` makes every replica *experience*
+its anchor's fetch latency), and returns results in request order.
+``rotate_every_s`` starts an orbital ticker for the rotation-during-
+serving scenario: the constellation rotates on the same clock while
+requests are in flight, migrating chunks and shifting prefix affinity
+under the live cluster.
+
+Cluster-level reporting: ``merged_stats`` folds per-replica
+``EngineStats`` (true cluster percentiles, not averaged ones), and
+``fabric_stats`` aggregates per-view constellation hit/miss counters and
+transport latency percentiles next to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Sequence
+
+from repro.core.constellation import Sat
+from repro.core.protocol import (
+    CacheStats,
+    ConstellationKVC,
+    KVCManager,
+    SimClock,
+    TransportStats,
+)
+from repro.models.model import Model
+from repro.serving.engine import Engine
+from repro.serving.request import GenerationResult, Request
+from repro.serving.router import (
+    ReplicaHandle,
+    RouteDecision,
+    Router,
+    make_router,
+)
+from repro.serving.skycache import SkyKVCAdapter
+from repro.serving.stats import EngineStats
+from repro.serving.tokenizer import ByteTokenizer, truncate_prompt
+
+
+def spread_anchors(kvc: ConstellationKVC, n: int) -> list[Sat]:
+    """Evenly spaced anchor satellites over the LOS window (row-major):
+    replicas attach across the window instead of piling on the center,
+    so their hop costs to the chunk servers genuinely differ."""
+    sats = kvc.window.sats(kvc.spec)
+    return [sats[(i * len(sats)) // n] for i in range(n)]
+
+
+class EngineCluster:
+    """Router -> N Engine replicas -> one shared constellation fabric."""
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        kvc: ConstellationKVC,
+        *,
+        num_replicas: int = 2,
+        anchors: Sequence[Sat] | None = None,
+        policy: str = "prefix_affinity",
+        router: Router | None = None,
+        router_seed: int = 0,
+        clock: SimClock | None = None,
+        rotate_every_s: float | None = None,
+        block_size: int = 128,
+        max_seq_len: int = 512,
+        max_batch: int = 8,
+        seed: int = 0,
+        **engine_kwargs,
+    ) -> None:
+        if anchors is not None:
+            num_replicas = len(anchors)
+        if num_replicas < 1:
+            raise ValueError("cluster needs at least one replica")
+        self.kvc = kvc
+        self.clock = clock if clock is not None else kvc.transport.clock
+        self.max_seq_len = max_seq_len
+        self.rotate_every_s = rotate_every_s
+        self.rotations = 0
+        self.tokenizer = ByteTokenizer(model.cfg.vocab_size)
+        adapter = SkyKVCAdapter(model, params)
+        # the shared fabric handle: one radix index + recency policy +
+        # lock, adopted by the base store and every sibling below
+        self.manager = KVCManager(
+            self.tokenizer.encode, adapter.kvc_fn, kvc,
+            block_size=block_size,
+        )
+        self.anchors = list(
+            anchors if anchors is not None
+            else spread_anchors(kvc, num_replicas))
+        self.views = [kvc.view(a, clock=self.clock) for a in self.anchors]
+        self.engines = [
+            Engine(model, params, manager=self.manager.sibling(view),
+                   block_size=block_size, max_seq_len=max_seq_len,
+                   max_batch=max_batch, seed=seed + i, **engine_kwargs)
+            for i, view in enumerate(self.views)
+        ]
+        self.handles = [ReplicaHandle(i, view)
+                        for i, view in enumerate(self.views)]
+        self.router = router if router is not None else make_router(
+            policy, self.handles, manager=self.manager, seed=router_seed)
+        self.decisions: list[RouteDecision] = []   # last serve's verdicts
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.engines)
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: list[Request], *,
+              parallel: bool = True) -> list[GenerationResult]:
+        """Route the stream, run every replica's share, and return
+        results in request order.  ``parallel=False`` runs replicas
+        sequentially (deterministic -- the test mode)."""
+        if not requests:
+            return []
+        self.decisions = []
+        buckets: dict[int, list[tuple[int, Request]]] = {}
+        for i, req in enumerate(requests):
+            # route on the exact tokens the engine will serve (same
+            # truncation rule as the schedulers), so the router's
+            # affinity memory matches what gets cached
+            toks = truncate_prompt(self.tokenizer.encode(req.prompt),
+                                   self.max_seq_len)
+            d = self.router.route(
+                toks, est_new_tokens=req.sampling.max_new_tokens)
+            self.decisions.append(d)
+            buckets.setdefault(d.replica, []).append((i, req))
+
+        results: list[GenerationResult | None] = [None] * len(requests)
+        errors: list[BaseException] = []
+
+        def run_replica(ridx: int, items: list[tuple[int, Request]]) -> None:
+            try:
+                out = self.engines[ridx].generate([r for _, r in items])
+                for (i, _), res in zip(items, out):
+                    results[i] = res
+            except BaseException as e:  # surfaced after join
+                errors.append(e)
+
+        ticker = self._start_rotation_ticker()
+        try:
+            if parallel and len(buckets) > 1:
+                threads = [
+                    threading.Thread(target=run_replica, args=(r, items),
+                                     name=f"replica-{r}")
+                    for r, items in buckets.items()
+                ]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+            else:
+                for r, items in sorted(buckets.items()):
+                    run_replica(r, items)
+        finally:
+            if ticker is not None:
+                ticker()
+            # the batch is over (finished or failed): return its tokens
+            # to the load accounting so the tie-break on later serves
+            # compares in-flight work, not all-time totals
+            for d in self.decisions:
+                self.router.release(d.replica, d.committed_tokens)
+        if errors:
+            raise errors[0]
+        return results  # type: ignore[return-value]
+
+    def _start_rotation_ticker(self):
+        """Orbital rotation on the serving clock: while requests are in
+        flight the LOS window keeps drifting, chunks migrate, and prefix
+        affinity shifts.  Returns a stop() callable (None if disabled)."""
+        if not self.rotate_every_s:
+            return None
+        rate = self.clock.rate if self.clock is not None else 1.0
+        stop = threading.Event()
+
+        def tick() -> None:
+            while not stop.wait(self.rotate_every_s / rate):
+                with self.manager.lock:
+                    self.kvc.rotate(1)
+                    self.rotations += 1
+
+        thread = threading.Thread(target=tick, name="orbital-rotation",
+                                  daemon=True)
+        thread.start()
+
+        def stopper() -> None:
+            stop.set()
+            thread.join()
+
+        return stopper
+
+    # ------------------------------------------------------------------
+    # cluster-level stats
+    # ------------------------------------------------------------------
+    def merged_stats(self) -> EngineStats:
+        """One cluster-level EngineStats: counters summed, TTFT/ITL
+        sample lists concatenated (percentiles over the union)."""
+        return EngineStats.merged(e.stats for e in self.engines)
+
+    def replica_stats(self) -> list[dict]:
+        """Per-replica serving + constellation view of the last runs."""
+        out = []
+        for i, (eng, view) in enumerate(zip(self.engines, self.views)):
+            s = eng.stats
+            out.append({
+                "replica": i,
+                "anchor": (view.anchor.plane, view.anchor.slot),
+                "requests": s.requests,
+                "cached_tokens": s.cached_tokens,
+                "prefilled_tokens": s.prefilled_tokens,
+                "decoded_tokens": s.decoded_tokens,
+                "l2_wait_s": s.l2_wait_s,
+                "latency_percentiles": s.latency_percentiles(),
+                "constellation": dataclasses.asdict(view.stats),
+                "transport_latency_s":
+                    view.transport.stats.latency_percentiles(),
+            })
+        return out
+
+    def fabric_stats(self) -> dict:
+        """Shared-fabric aggregates: view cache stats folded together,
+        transport percentiles over every replica's ops, hit rates."""
+        cache = CacheStats()
+        for view in self.views:
+            for f in dataclasses.fields(CacheStats):
+                setattr(cache, f.name,
+                        getattr(cache, f.name) + getattr(view.stats, f.name))
+        merged = self.merged_stats()
+        prefix_total = merged.cached_tokens + merged.prefilled_tokens
+        # ops-weighted merge of the per-view latency reservoirs: each
+        # view's reservoir stands for that view's TOTAL op count, so draw
+        # quantile-spaced picks proportional to ops (concatenating raw
+        # reservoirs would overweight idle anchors once any busy view's
+        # reservoir saturates); the percentile rule itself is
+        # TransportStats' -- one implementation, not a copy
+        merged_t = TransportStats()
+        total_ops = sum(v.transport.stats.ops for v in self.views)
+        for view in self.views:
+            st = view.transport.stats
+            xs = sorted(st.op_latencies_s)
+            if not xs or not total_ops:
+                continue
+            k = max(1, round(st.reservoir_size * st.ops / total_ops))
+            if k == 1:
+                merged_t.op_latencies_s.append(xs[len(xs) // 2])
+            else:
+                merged_t.op_latencies_s.extend(
+                    xs[round(j * (len(xs) - 1) / (k - 1))]
+                    for j in range(k))
+        return {
+            "block_hits": cache.block_hits,
+            "block_misses": cache.block_misses,
+            "blocks_set": cache.blocks_set,
+            "block_hit_rate": cache.block_hits / max(
+                cache.block_hits + cache.block_misses, 1),
+            "prefix_hit_rate": merged.cached_tokens / max(prefix_total, 1),
+            "rotations": self.rotations,
+            "transport_latency_s": merged_t.latency_percentiles(),
+            "l2_wait_s": merged.l2_wait_s,
+            "l2_fetch_waits": merged.l2_fetch_waits,
+        }
+
+    def reset_stats(self) -> None:
+        """Fresh per-replica EngineStats + view cache/transport stats and
+        router assignment state (benchmarks call this between the warmup
+        and the timed run)."""
+        for eng in self.engines:
+            eng.stats = EngineStats()
+        for view in self.views:
+            view.stats = CacheStats()
+            view.transport.stats = TransportStats()
+        self.router.reset()
+        self.rotations = 0

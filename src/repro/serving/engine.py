@@ -47,6 +47,7 @@ class Engine:
         params,
         *,
         kvc: ConstellationKVC | None = None,
+        manager: KVCManager | None = None,
         block_size: int = 128,
         max_seq_len: int = 512,
         max_batch: int = 8,
@@ -64,12 +65,23 @@ class Engine:
         self.max_batch = max_batch
         self.block_size = block_size
         self.adapter = SkyKVCAdapter(model, params)
-        self.manager: KVCManager | None = None
-        if kvc is not None:
+        # a cluster replica receives a pre-built KVCManager (a sibling
+        # over the shared radix index, bound to this replica's anchored
+        # constellation view); a standalone engine builds its own from
+        # ``kvc``
+        if manager is not None:
+            if manager.block_size != block_size:
+                raise ValueError(
+                    f"manager block_size {manager.block_size} != engine "
+                    f"block_size {block_size}")
+            self.manager: KVCManager | None = manager
+        elif kvc is not None:
             self.manager = KVCManager(
                 self.tokenizer.encode, self.adapter.kvc_fn, kvc,
                 block_size=block_size,
             )
+        else:
+            self.manager = None
         self.paged = model.supports_paged_decode
         if self.paged:
             # page size == SkyMemory block size: fetched blocks are pages

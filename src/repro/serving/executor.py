@@ -23,6 +23,7 @@ import numpy as np
 from repro.serving.request import Seq, SeqState, seq_finished, seq_result
 from repro.serving.sampler import SamplingParams, sample_batch, stack_sampling
 from repro.serving.stats import EngineStats
+from repro.serving.tokenizer import truncate_prompt
 
 
 class PagedExecutor:
@@ -241,7 +242,8 @@ class DenseRuntime:
         return results
 
     def _make_seq(self, req) -> Seq:
-        tokens = self.tokenizer.encode(req.prompt)[: self.max_seq_len - 64]
+        tokens = truncate_prompt(self.tokenizer.encode(req.prompt),
+                                 self.max_seq_len)
         return Seq(request=req, tokens=tokens, enqueue_t=time.perf_counter())
 
     def _prefill_one(self, req) -> Seq:

@@ -17,7 +17,12 @@
   A restore that misses L1 runs Get KVC on the sequence's exact token
   chain, drops fetched blocks into pool pages, and leaves only the
   unaligned tail for the scheduler to replay through the chunked-prefill
-  path.
+  path.  On a *clocked* fabric (``core.protocol.SimClock`` on the
+  transport) every Get completes at a virtual time: ``lookup_prefix``
+  hands the scheduler a ``ready_at`` so it can defer consuming the
+  payload (overlapping the ISL flight with decode steps), and
+  ``wait_fetch`` settles -- and accounts, as ``EngineStats.l2_wait_s``
+  -- whatever flight time could not be hidden.
 
 One ``LRUClock`` (``core.eviction``) stamps accesses across all three
 levels plus the radix index, so "least recently used" is one timeline,
@@ -138,6 +143,11 @@ class TieredKVManager:
         self.host = HostPageCache(host_cache_pages, self.policy,
                                   spill=self._spill_to_l2)
         self._wb_future = None           # in-flight async Set KVC
+        # clocked fabric: L2 Gets complete at a virtual time on the
+        # constellation transport's SimClock (None = legacy instant L2)
+        self._transport = (None if manager is None
+                           else getattr(manager.cache, "transport", None))
+        self.clock = None if self._transport is None else self._transport.clock
 
     # -- L0: lazy page accounting --------------------------------------
     def can_admit_tokens(self, n_tokens: int) -> bool:
@@ -209,9 +219,16 @@ class TieredKVManager:
         if self.manager is None:
             return 0
         self.drain_write_back()
+        if self._transport is not None:
+            self._transport.last_ready_at = None
         payload, cached = self.manager.get_cache_tokens(tokens)
         if payload is None or not cached:
             return 0
+        # a restore is already a stall point: experience the Get's flight
+        # time here rather than deferring (nothing else can run for this
+        # slot until its pages are back)
+        if self._transport is not None:
+            self.wait_fetch(self._transport.last_ready_at)
         cached = min(cached, len(tokens))
         k_blocks, v_blocks = self.adapter.payload_to_pages(
             payload, cached, self.pool.page_size)
@@ -236,14 +253,48 @@ class TieredKVManager:
         self.stats.spilled_blocks += added
 
     # -- L2: SkyMemory prefix lookups / write-back ----------------------
-    def lookup_prefix(self, tokens: list[int]) -> tuple[bytes | None, int]:
+    def lookup_prefix(
+        self, tokens: list[int]
+    ) -> tuple[bytes | None, int, float | None]:
         """Get KVC for the longest cached prefix, draining any in-flight
         write-back first so duplicate contexts queued together still hit
-        (the paper's repeated-context workload)."""
+        (the paper's repeated-context workload).
+
+        Returns ``(payload, n_cached_tokens, ready_at)``.  ``ready_at``
+        is the Get's completion time on the fabric clock (None when the
+        fabric is unclocked or nothing was fetched): the payload bytes
+        are in hand, but the scheduler must not *use* them before the
+        clock passes ``ready_at`` -- it defers the consuming chunk to
+        overlap the flight with decode steps, and ``wait_fetch`` settles
+        whatever could not be hidden."""
         if self.manager is None:
-            return None, 0
+            return None, 0, None
         self.drain_write_back()
-        return self.manager.get_cache_tokens(tokens)
+        if self._transport is not None:
+            self._transport.last_ready_at = None
+        payload, cached = self.manager.get_cache_tokens(tokens)
+        ready_at = None
+        if (payload is not None and self._transport is not None
+                and self.clock is not None):
+            ready_at = self._transport.last_ready_at
+        return payload, cached, ready_at
+
+    def fetch_pending(self, ready_at: float | None) -> bool:
+        """True while a fetched payload is still in simulated flight."""
+        return (ready_at is not None and self.clock is not None
+                and self.clock.now() < ready_at)
+
+    def wait_fetch(self, ready_at: float | None) -> float:
+        """Block until the clock passes ``ready_at`` -- the experienced
+        part of an L2 flight the scheduler could not hide behind decode
+        steps.  Returns virtual seconds waited."""
+        if ready_at is None or self.clock is None:
+            return 0.0
+        waited = self.clock.wait_until(ready_at)
+        if waited > 0.0:
+            self.stats.l2_wait_s += waited
+            self.stats.l2_fetch_waits += 1
+        return waited
 
     def pages_async(self, payload: bytes, n_tokens: int):
         """Fetch-ahead payload -> pages decode on the adapter worker."""

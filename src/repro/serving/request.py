@@ -76,6 +76,9 @@ class Seq:
     cursor: int = 0                   # next prompt token to prefill
     looked_up: bool = False           # SkyMemory lookup done for this seq
     pages_future: object | None = None   # in-flight payload -> pages decode
+    # clocked fabric: virtual completion time of this seq's L2 Get -- the
+    # fetched payload may not be consumed before the clock passes it
+    fetch_ready_at: float | None = None
     dev_ops: tuple | None = None      # per-admission device operands
     admit_seq: int = 0                # admission order (preemption tiebreak)
     # preemption/restore state: while PREEMPTED, ``replay_tokens`` is the

@@ -49,6 +49,7 @@ from repro.serving.request import (
 )
 from repro.serving.sampler import SamplingParams, stack_sampling
 from repro.serving.stats import EngineStats
+from repro.serving.tokenizer import truncate_prompt
 
 
 def head_span(n_tokens: int, cursor: int, budget: int) -> tuple[int, int]:
@@ -201,13 +202,9 @@ class Scheduler:
                 # (row b of the synced vector); a resumed sequence's next
                 # token is already known, so that sample is discarded
                 self._prefilling.pop(slot_c)
-                if (s_c.replay_next is None and self.kv.write_back
-                        and self.kv.manager is not None):
-                    # Set KVC on the worker thread; the next sequence's
-                    # lookup drains it, so duplicate contexts queued
-                    # together still hit without the payload computation
-                    # stalling running decodes
-                    self.kv.write_back_async(s_c.tokens)
+                # (Set KVC for this sequence was already submitted at
+                # lookup time by _lookup_and_prefetch, so any duplicate
+                # context's later lookup drains it and hits)
                 self._finish_prefill(s_c, slot_c, int(nxt_h[b]), now)
                 if s_c.done:
                     self._release(s_c, slot_c)
@@ -323,6 +320,7 @@ class Scheduler:
         s.cursor = cached
         s.looked_up = True
         s.pages_future = None
+        s.fetch_ready_at = None
         s.dev_ops = None
 
     def _resume_active(self, s: Seq, slot: int, now: float) -> None:
@@ -393,6 +391,8 @@ class Scheduler:
             if s.pages_future is not None:
                 # a fetched prefix is still in flight: land it first so
                 # the export below covers everything the cursor claims
+                self.kv.wait_fetch(s.fetch_ready_at)
+                s.fetch_ready_at = None
                 k_blocks, v_blocks = s.pages_future.result()
                 s.pages_future = None
                 self.kv.pool.write_pages(slot, 0, k_blocks, v_blocks)
@@ -402,6 +402,7 @@ class Scheduler:
             self._prefilling.pop(slot)
             s.cursor = 0
             s.looked_up = False
+            s.fetch_ready_at = None
             s.dev_ops = None
             # a resumed sequence caught mid-replay keeps its PREEMPTED
             # identity (replay state intact); a fresh prefill re-queues
@@ -430,27 +431,58 @@ class Scheduler:
         The head sequence's SkyMemory lookup happens lazily here -- after
         any earlier sequence's write-back, so duplicate contexts queued
         together still hit -- and its payload->pages decode runs on the
-        adapter's fetch-ahead thread: when other sequences are decoding,
-        the chunk is deferred one step so the deserialization overlaps
-        that step's device compute instead of stalling the loop.
+        adapter's fetch-ahead thread alongside any simulated ISL flight:
+        while the head's fetch is pending and other sequences are
+        decoding, its chunk is deferred so the flight/deserialization
+        overlaps device compute, and the *next* prefilling sequence's
+        chunks run instead of head-of-line blocking behind the flight.
         Returns ``(seq, slot, start, n_valid, device_operands)`` or None.
         """
         if not self.chunked or not self._prefilling:
             return None
-        slot = next(iter(self._prefilling))
-        s = self._prefilling[slot]
-        toks = s.prefill_tokens
-        n = len(toks)
-        if not s.looked_up:
-            t0 = time.perf_counter()
-            self._lookup_and_prefetch(s)
-            self.stats.prefill_time_s += time.perf_counter() - t0
+        # FIFO over prefilling sequences, but a head whose fetched prefix
+        # is still pending (payload decoding, or ISL flight on the fabric
+        # clock) must not head-of-line-block the others for the whole
+        # flight: skip past it and plan the first ready sequence.  Later
+        # candidates are only looked up inside such a window, so in the
+        # common (no-pending-head) case lookup order stays strictly FIFO.
+        deferred: tuple[int, Seq] | None = None
+        chosen: tuple[int, Seq] | None = None
+        saw_flight = False
+        for slot, s in list(self._prefilling.items()):
+            if not s.looked_up:
+                t0 = time.perf_counter()
+                self._lookup_and_prefetch(s)
+                self.stats.prefill_time_s += time.perf_counter() - t0
+            if s.pages_future is not None and (
+                    self.kv.fetch_pending(s.fetch_ready_at)
+                    or not s.pages_future.done()):
+                saw_flight |= self.kv.fetch_pending(s.fetch_ready_at)
+                if deferred is None:
+                    deferred = (slot, s)
+                continue
+            chosen = (slot, s)
+            break
+        if chosen is None:
+            if self._active or deferred is None:
+                # every candidate is in flight: this step's chunk slot is
+                # spent overlapping the flight(s); the chunks retry next
+                # step
+                if saw_flight:
+                    self.stats.l2_deferred_chunks += 1
+                return None
+            # nothing is decoding and nothing is ready: experience the
+            # first pending sequence's remaining flight
+            chosen = deferred
+        slot, s = chosen
         if s.pages_future is not None:
-            if self._active and not s.pages_future.done():
-                return None       # overlap payload decode with this step
+            self.kv.wait_fetch(s.fetch_ready_at)
+            s.fetch_ready_at = None
             k_blocks, v_blocks = s.pages_future.result()
             s.pages_future = None
             self.kv.pool.write_pages(slot, 0, k_blocks, v_blocks)
+        toks = s.prefill_tokens
+        n = len(toks)
         start, v = head_span(n, s.cursor, self.chunk_tokens)
         self.kv.pool.note_span(slot, start, v)
         self.chunk_log.append((slot, start, v))
@@ -493,11 +525,16 @@ class Scheduler:
             s.state = SeqState.PREFILLING
             if s.replay_next is not None:
                 continue          # restore already repopulated its pages
+            # lookup submits this member's Set KVC too, so the NEXT
+            # member's lookup drains it and same-wave duplicates hit
             self._lookup_and_prefetch(s)
-            if self.kv.write_back and self.kv.manager is not None:
-                self.kv.write_back_async(s.tokens)
         for s, slot in admitted:
             if s.pages_future is not None:
+                # cold start: nothing is decoding, so the fetch flights
+                # cannot hide -- wait them out (clock is monotone, so the
+                # wave's total wait is the max remaining flight)
+                self.kv.wait_fetch(s.fetch_ready_at)
+                s.fetch_ready_at = None
                 k_blocks, v_blocks = s.pages_future.result()
                 s.pages_future = None
                 self.kv.pool.write_pages(slot, 0, k_blocks, v_blocks)
@@ -597,11 +634,10 @@ class Scheduler:
                 fresh.append((s, slot))
                 last_logits.append(None)
                 sampled.append((s, slot))
-            if self.kv.write_back and self.kv.manager is not None:
-                # Set KVC now, before the NEXT wave member's lookup, so
-                # duplicate contexts within one admission wave still hit
-                # (the paper's repeated-context workload)
-                self.kv.write_back_sync(s.tokens)
+            # (Set KVC was submitted inside _lookup_and_prefetch, before
+            # the NEXT wave member's lookup drains it, so duplicate
+            # contexts within one admission wave still hit -- the
+            # paper's repeated-context workload)
 
         if fresh:
             # one batched forward per length bucket; causal masking makes
@@ -672,6 +708,8 @@ class Scheduler:
         block and replays only the final token (the chunk machinery
         handles the one-token, unaligned-start span)."""
         n = len(s.tokens)
+        self.kv.wait_fetch(s.fetch_ready_at)
+        s.fetch_ready_at = None
         k_blocks, v_blocks = s.pages_future.result()
         s.pages_future = None
         self.kv.pool.write_pages(slot, 0, k_blocks, v_blocks)
@@ -710,8 +748,11 @@ class Scheduler:
         (a whole-prompt hit keeps every restored block and replays only
         the final token as a one-token chunk) and submit the
         payload->pages decode to the adapter's fetch-ahead thread.  Any
-        in-flight Set KVC write-back is drained first, so duplicate
-        contexts queued together still hit."""
+        in-flight Set KVC write-back is drained first, and this
+        sequence's OWN write-back is submitted here -- at lookup time,
+        not at prefill completion -- so a duplicate context looked up any
+        time after this one (even while this one is still prefilling, as
+        the skip-ahead chunk planner allows) drains it and hits."""
         s.looked_up = True
         entry = self.kv.take_host(s.request.request_id)
         if entry is not None:
@@ -719,15 +760,20 @@ class Scheduler:
             fut = Future()
             fut.set_result((entry.k, entry.v))
             s.pages_future = fut
-            return
-        payload, cached = self.kv.lookup_prefix(s.tokens)
-        if payload is not None and cached:
-            restore = cached
-            if cached >= len(s.tokens):
-                cached = len(s.tokens) - 1
-            s.cached = cached
-            s.cursor = cached
-            s.pages_future = self.kv.pages_async(payload, restore)
+        else:
+            payload, cached, ready_at = self.kv.lookup_prefix(s.tokens)
+            if payload is not None and cached:
+                restore = cached
+                if cached >= len(s.tokens):
+                    cached = len(s.tokens) - 1
+                s.cached = cached
+                s.cursor = cached
+                s.fetch_ready_at = ready_at
+                s.pages_future = self.kv.pages_async(payload, restore)
+        if self.kv.write_back and self.kv.manager is not None:
+            # Set KVC for uncached blocks on the worker thread (a no-op
+            # radix probe when the lookup fully hit)
+            self.kv.write_back_async(s.tokens)
 
     def _finish_prefill(self, s: Seq, slot: int, tid: int,
                         now: float) -> None:
@@ -751,7 +797,8 @@ class Scheduler:
             self._samp[slot] = s.request.sampling
 
     def _make_seq(self, req: Request) -> Seq:
-        tokens = self.tokenizer.encode(req.prompt)[: self.max_seq_len - 64]
+        tokens = truncate_prompt(self.tokenizer.encode(req.prompt),
+                                 self.max_seq_len)
         return Seq(request=req, tokens=tokens,
                    enqueue_t=time.perf_counter())
 

@@ -2,11 +2,17 @@
 
 One ``EngineStats`` object is shared by the facade, the scheduler, and
 the executor-side runtimes; benchmarks reset it between timed runs by
-assigning a fresh instance to ``Engine.stats``.
+assigning a fresh instance to ``Engine.stats``.  A scale-out cluster
+keeps one instance per replica and folds them with ``EngineStats.merge``
+/ ``EngineStats.merged`` -- counters add and the raw TTFT/ITL sample
+lists concatenate, so ``latency_percentiles`` on the merged object are
+true cluster-level percentiles, not averages of per-replica percentiles.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
+from typing import Iterable
 
 import numpy as np
 
@@ -35,6 +41,13 @@ class EngineStats:
     offloaded_pages: int = 0          # pool pages exported to the host tier
     spilled_blocks: int = 0           # host-tier blocks spilled to L2
     replayed_tokens: int = 0          # tail tokens recomputed at restore
+    # experienced constellation latency (clocked fabrics only): an L2 Get
+    # completes at a virtual time; chunks are deferred to overlap the
+    # flight with decode steps, and whatever cannot be hidden is waited
+    # out -- the nonzero cost that makes the orbital tier real
+    l2_wait_s: float = 0.0            # virtual seconds blocked on fetches
+    l2_fetch_waits: int = 0           # fetches with un-hidden flight time
+    l2_deferred_chunks: int = 0       # chunk slots spent overlapping flights
     ttft_s: list[float] = field(default_factory=list)   # per request
     itl_s: list[float] = field(default_factory=list)    # per decoded token
     # the subset of itl_s observed by running sequences while an
@@ -49,3 +62,23 @@ class EngineStats:
         return {"ttft_s": _percentiles(self.ttft_s),
                 "itl_s": _percentiles(self.itl_s),
                 "itl_admission_s": _percentiles(self.itl_admission_s)}
+
+    # ------------------------------------------------------------------
+    def merge(self, other: "EngineStats") -> "EngineStats":
+        """Fold ``other`` into this object (cluster aggregation): numeric
+        counters add, sample lists concatenate.  Returns self."""
+        for f in dataclasses.fields(self):
+            mine, theirs = getattr(self, f.name), getattr(other, f.name)
+            if isinstance(mine, list):
+                mine.extend(theirs)
+            else:
+                setattr(self, f.name, mine + theirs)
+        return self
+
+    @classmethod
+    def merged(cls, parts: Iterable["EngineStats"]) -> "EngineStats":
+        """Cluster-level stats from per-replica parts (parts unchanged)."""
+        out = cls()
+        for p in parts:
+            out.merge(p)
+        return out

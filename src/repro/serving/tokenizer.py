@@ -12,6 +12,17 @@ from dataclasses import dataclass
 PAD_ID, BOS_ID, EOS_ID = 0, 1, 2
 _OFFSET = 3
 
+# decode headroom reserved past the prompt when admitting a request
+PROMPT_HEADROOM = 64
+
+
+def truncate_prompt(tokens: list[int], max_seq_len: int) -> list[int]:
+    """THE prompt-truncation rule, shared by the schedulers (paged and
+    dense) and the cluster router: the router must hash exactly the
+    token prefix the engine will serve and cache, or affinity memory
+    keys on the wrong block chain."""
+    return tokens[: max_seq_len - PROMPT_HEADROOM]
+
 
 @dataclass(frozen=True)
 class ByteTokenizer:

@@ -1,0 +1,484 @@
+"""Scale-out cluster: SimClock / anchored views / deferred fetches vs
+rotation, router scoring, stats merging, and the EngineCluster itself.
+
+The deterministic contract under test:
+
+* a clocked fabric gives every Get KVC a completion time; payloads
+  captured at issue survive rotation between issue and completion, and a
+  purge between lookup and Get is a *clean* miss;
+* the prefix-affinity router keeps duplicated-prefix groups on one
+  replica, prefers near anchors for constellation-cached prefixes, and
+  breaks ties by load -- while the random baseline spreads groups;
+* cluster serving over N replicas returns every result in request order
+  with true merged percentiles, and *experiences* nonzero L2 wait.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import (
+    ConstellationKVC,
+    ConstellationSpec,
+    ConstellationView,
+    IslTransport,
+    KVCManager,
+    LosWindow,
+    Sat,
+    SimClock,
+    Strategy,
+    chain_hashes,
+)
+from repro.core.chunking import arrays_to_bytes
+from repro.core.protocol import TransportStats
+from repro.models.model import Model
+from repro.serving import (
+    EngineCluster,
+    EngineStats,
+    PrefixAffinityRouter,
+    RandomRouter,
+    ReplicaHandle,
+    Request,
+    SamplingParams,
+)
+
+SPEC = ConstellationSpec(15, 15, 550.0)
+
+
+def make_kvc(clock=None, **kw):
+    transport = IslTransport(SPEC, clock=clock,
+                             chunk_processing_time_s=1e-4)
+    return ConstellationKVC(
+        SPEC, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+        num_servers=10, chunk_bytes=1024, transport=transport, **kw,
+    )
+
+
+def _tokenize(prompt: str) -> list[int]:
+    return [ord(c) % 96 for c in prompt]
+
+
+def _fake_kvc_fn(tokens, past, past_len):
+    return arrays_to_bytes([np.cumsum(np.asarray(tokens, np.int64))])
+
+
+# ---------------------------------------------------------------------------
+# SimClock + bounded transport stats
+# ---------------------------------------------------------------------------
+
+def test_sim_clock_monotone_and_waits():
+    clock = SimClock(rate=100.0)
+    t0 = clock.now()
+    assert clock.wait_until(t0 - 1.0) == 0.0          # past: no wait
+    waited = clock.wait_until(clock.now() + 0.5)      # 0.5 virtual = 5ms wall
+    assert waited > 0.0
+    assert clock.waits == 1 and clock.waited_s == pytest.approx(waited)
+    assert clock.now() >= t0 + 0.5
+
+
+def test_sim_clock_rejects_bad_rate():
+    with pytest.raises(ValueError):
+        SimClock(rate=0.0)
+
+
+def test_transport_stats_reservoir_bounded():
+    ts = TransportStats(reservoir_size=64)
+    for i in range(5000):
+        ts.record((i + 1) * 1e-6)
+    assert len(ts.op_latencies_s) == 64               # bounded
+    assert ts.ops == 5000
+    assert ts.last_latency_s == 5000e-6               # exact extremes
+    assert ts.max_latency_s == 5000e-6
+    pct = ts.latency_percentiles()
+    assert 0 < pct["p50"] < pct["p95"] <= pct["p99"] <= 5000e-6
+    # short runs keep every sample in arrival order (legacy probes)
+    short = TransportStats()
+    for lat in (3e-3, 1e-3, 2e-3):
+        short.record(lat)
+    assert short.op_latencies_s == [3e-3, 1e-3, 2e-3]
+
+
+def test_transport_op_completion_time_on_clock():
+    clock = SimClock(rate=1000.0)
+    t = IslTransport(SPEC, clock=clock)
+    ready = t.record_op(0.25)
+    assert ready is not None and ready > clock.now()
+    assert t.last_ready_at == ready
+    unclocked = IslTransport(SPEC)
+    assert unclocked.record_op(0.25) is None
+
+
+# ---------------------------------------------------------------------------
+# anchored views over one shared store
+# ---------------------------------------------------------------------------
+
+def test_views_share_storage_but_not_transport():
+    kvc = make_kvc()
+    near = kvc.view(Sat(7, 7))       # the window center
+    far = kvc.view(Sat(0, 0))        # across the torus
+    assert isinstance(near, ConstellationView)
+    h = chain_hashes(list(range(8)), 8)[0]
+    near.set_block(h, b"x" * 4096)
+    # storage is shared: the far view reads what the near view wrote
+    assert far.get_block(h) == b"x" * 4096
+    assert kvc.get_block(h) == b"x" * 4096
+    # hop costs are not: the far anchor pays more for the same block
+    assert (far.transport.stats.last_latency_s
+            > near.transport.stats.last_latency_s)
+    assert far.estimate_get_latency_s() > near.estimate_get_latency_s()
+    # stats attribution is per view (set on near, get on far + base)
+    assert near.stats.blocks_set == 1 and far.stats.blocks_set == 0
+    assert far.stats.block_hits == 1 and near.stats.block_hits == 0
+    assert kvc.stats.block_hits == 1 and kvc.stats.blocks_set == 0
+
+
+def test_view_purge_and_rotate_delegate_to_base():
+    kvc = make_kvc()
+    view = kvc.view(Sat(3, 3))
+    h = chain_hashes(list(range(8)), 8)[0]
+    view.set_block(h, b"y" * 2048)
+    moves = view.rotate(1)
+    assert view.window.center == kvc.window.center    # one shared window
+    assert view.get_block(h) == b"y" * 2048           # survived migration
+    assert isinstance(moves, list)
+    view.purge_block(h)
+    assert kvc.get_block(h) is None
+
+
+# ---------------------------------------------------------------------------
+# deferred fetches vs rotation / purge (satellite: in-flight semantics)
+# ---------------------------------------------------------------------------
+
+def test_deferred_get_survives_rotation_between_issue_and_completion():
+    """A block that migrates between Get issue and completion must still
+    deliver its payload: the Get captured the chunks at issue time, and
+    rotation is copy-then-delete, so the flight is unaffected."""
+    clock = SimClock(rate=1000.0)
+    kvc = make_kvc(clock=clock)
+    mgr = KVCManager(_tokenize, _fake_kvc_fn, kvc, block_size=8)
+    tokens = _tokenize("rotate me around the torus!!")
+    mgr.add_blocks_tokens(tokens)
+
+    view = kvc.view(Sat(5, 5))
+    sib = mgr.sibling(view)
+    view.transport.last_ready_at = None
+    payload, cached = sib.get_cache_tokens(tokens)    # Get issued here
+    ready_at = view.transport.last_ready_at
+    assert payload is not None and cached >= 8
+    assert ready_at is not None and ready_at > clock.now()
+    kvc.rotate(3)                                     # block moves in flight
+    clock.wait_until(ready_at)                        # flight completes
+    again, cached2 = sib.get_cache_tokens(tokens)     # post-rotation Get
+    assert again == payload and cached2 == cached
+
+
+def test_deferred_get_cleanly_misses_when_block_purged_in_flight():
+    """Losing the block between lookup and a later Get must degrade to a
+    clean (shorter or empty) result, never a corrupt payload."""
+    clock = SimClock(rate=1000.0)
+    kvc = make_kvc(clock=clock)
+    mgr = KVCManager(_tokenize, _fake_kvc_fn, kvc, block_size=8)
+    tokens = _tokenize("purge the tail block under me")
+    mgr.add_blocks_tokens(tokens)
+    hashes = chain_hashes(tokens, 8)
+    payload, cached = mgr.get_cache_tokens(tokens)
+    assert cached == len(hashes) * 8
+    kvc.purge_block(hashes[-1])                       # lost mid-flight
+    payload2, cached2 = mgr.get_cache_tokens(tokens)
+    assert cached2 == (len(hashes) - 1) * 8           # clean shorter prefix
+    assert payload2 is not None
+    for h in hashes:
+        kvc.purge_block(h)
+    assert mgr.get_cache_tokens(tokens) == (None, 0)  # clean full miss
+
+
+def test_sibling_managers_share_index_and_lock():
+    kvc = make_kvc()
+    mgr = KVCManager(_tokenize, _fake_kvc_fn, kvc, block_size=8)
+    view = kvc.view(Sat(0, 0))
+    sib = mgr.sibling(view)
+    assert sib.index is mgr.index
+    assert sib.policy is mgr.policy
+    assert sib.lock is mgr.lock
+    tokens = _tokenize("shared radix index across replicas")
+    mgr.add_blocks_tokens(tokens)
+    # the sibling sees the insert through the shared index...
+    payload, cached = sib.get_cache_tokens(tokens)
+    assert payload is not None and cached > 0
+    # ...and concurrent sibling writers do not corrupt it
+    def writer(m, salt):
+        for i in range(12):
+            m.add_blocks_tokens(_tokenize(f"writer {salt} row {i} " * 3))
+    threads = [threading.Thread(target=writer, args=(m, s))
+               for m, s in ((mgr, "a"), (sib, "b"))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    p2, c2 = sib.get_cache_tokens(tokens)
+    assert p2 == payload and c2 == cached
+
+
+# ---------------------------------------------------------------------------
+# router scoring
+# ---------------------------------------------------------------------------
+
+def _handles(n, views=None):
+    views = views or [None] * n
+    return [ReplicaHandle(i, v) for i, v in enumerate(views)]
+
+
+def test_affinity_router_keeps_duplicate_groups_together():
+    router = PrefixAffinityRouter(_handles(4), block_size=8)
+    groups = {g: _tokenize(f"group {g} shared context " * 4)
+              for g in range(6)}
+    # interleave group members the way a shared stream would
+    assigned: dict[int, set[int]] = {g: set() for g in groups}
+    for _round in range(3):
+        for g, toks in groups.items():
+            assigned[g].add(router.route(toks).replica)
+    for g, replicas in assigned.items():
+        assert len(replicas) == 1, f"group {g} split across {replicas}"
+    # ...and the 6 groups spread over the 4 replicas via the load
+    # tie-break instead of piling on replica 0
+    used = {next(iter(r)) for r in assigned.values()}
+    assert len(used) == 4
+
+
+def test_random_router_spreads_duplicate_groups():
+    router = RandomRouter(_handles(4), block_size=8, seed=0)
+    toks = _tokenize("one duplicated context " * 4)
+    replicas = {router.route(toks).replica for _ in range(16)}
+    assert len(replicas) > 1          # the baseline has no affinity
+
+
+def test_affinity_router_ties_broken_by_load():
+    handles = _handles(3)
+    handles[0].load_tokens = 100
+    handles[1].load_tokens = 10      # emptiest
+    handles[2].load_tokens = 50
+    router = PrefixAffinityRouter(handles, block_size=8)
+    d = router.route(_tokenize("fresh request, no affinity anywhere"))
+    assert d.replica == 1
+    assert d.load_tokens == 10
+
+
+def test_affinity_router_is_hop_aware():
+    """Equal affinity + constellation-cached prefix: the replica whose
+    anchor is nearer the blocks' home satellites wins."""
+    kvc = make_kvc()
+    mgr = KVCManager(_tokenize, _fake_kvc_fn, kvc, block_size=8)
+    tokens = _tokenize("hop aware routing over the torus " * 2)
+    mgr.add_blocks_tokens(tokens)     # prefix is in the shared index
+    far, near = kvc.view(Sat(0, 0)), kvc.view(Sat(7, 7))
+    router = PrefixAffinityRouter(_handles(2, [far, near]), manager=mgr)
+    d = router.route(tokens)
+    assert d.cached_blocks > 0
+    assert d.replica == 1             # near anchor despite higher index
+    # the hop signal prices the Get the hit will actually issue: the
+    # cached prefix's cumulative payload, not a full stripe
+    pb = mgr.index.longest_cached_prefix(
+        chain_hashes(tokens, 8))[1].payload_bytes
+    assert d.hop_latency_s == near.estimate_get_latency_s(payload_bytes=pb)
+    assert d.hop_latency_s > 0.0
+    # without a cached prefix the hop term vanishes -> load tie-break
+    d2 = router.route(_tokenize("never seen before, fresh tokens"))
+    assert d2.replica == 0
+    assert d2.hop_latency_s == 0.0
+
+
+def test_router_release_and_reset():
+    router = PrefixAffinityRouter(_handles(2), block_size=8)
+    toks = _tokenize("bookkeeping " * 4)
+    d = router.route(toks, est_new_tokens=16)
+    h = router.handles[d.replica]
+    assert d.committed_tokens == len(toks) + 16
+    assert h.load_tokens == d.committed_tokens
+    router.release(d.replica, d.committed_tokens)
+    assert h.load_tokens == 0
+    router.route(toks)
+    router.reset()
+    assert all(not h.seen_blocks and h.load_tokens == 0
+               for h in router.handles)
+
+
+def test_router_affinity_memory_is_bounded():
+    """A long-lived router must not accrete every hash it ever routed:
+    seen_blocks is FIFO-bounded and old entries stop matching."""
+    router = PrefixAffinityRouter(_handles(1), block_size=8,
+                                  max_seen_blocks=32)
+    first = _tokenize("the very first routed context " * 2)
+    router.route(first)
+    for i in range(50):
+        router.route(_tokenize(f"unique filler stream row {i:03d} " * 2))
+    h = router.handles[0]
+    assert len(h.seen_blocks) <= 32
+    assert h.affinity_blocks(chain_hashes(first, 8)) == 0  # aged out
+
+
+# ---------------------------------------------------------------------------
+# stats merging
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_merge_counters_and_samples():
+    a = EngineStats(requests=2, decoded_tokens=10, l2_wait_s=0.5,
+                    ttft_s=[0.1, 0.2], itl_s=[0.01])
+    b = EngineStats(requests=3, decoded_tokens=5, l2_fetch_waits=2,
+                    ttft_s=[0.3], itl_s=[0.02, 0.03])
+    m = EngineStats.merged([a, b])
+    assert m.requests == 5 and m.decoded_tokens == 15
+    assert m.l2_wait_s == 0.5 and m.l2_fetch_waits == 2
+    assert sorted(m.ttft_s) == [0.1, 0.2, 0.3]
+    assert m.latency_percentiles()["ttft_s"]["p50"] == pytest.approx(0.2)
+    # parts unchanged
+    assert a.ttft_s == [0.1, 0.2] and b.requests == 3
+
+
+# ---------------------------------------------------------------------------
+# EngineCluster end-to-end (tiny model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _cluster(model, params, *, clock=None, policy="prefix_affinity",
+             num_replicas=2, rotate_every_s=None):
+    kvc = make_kvc(clock=clock)
+    return EngineCluster(
+        model, params, kvc, num_replicas=num_replicas, policy=policy,
+        block_size=16, max_seq_len=256, max_batch=4,
+        rotate_every_s=rotate_every_s,
+    )
+
+
+def _reqs(n=8, dup_groups=2):
+    base = "SkyMemory routes repeated contexts to one replica. "
+    return [Request(prompt=base * 2 + f"question {i % dup_groups}",
+                    sampling=SamplingParams(max_new_tokens=6))
+            for i in range(n)]
+
+
+def test_cluster_serves_in_request_order(dense_setup):
+    _, model, params = dense_setup
+    cluster = _cluster(model, params)
+    reqs = _reqs()
+    out = cluster.serve(reqs, parallel=False)
+    assert len(out) == len(reqs)
+    for req, res in zip(reqs, out):
+        assert res.request_id == req.request_id
+        assert len(res.token_ids) > 0
+    merged = cluster.merged_stats()
+    assert merged.requests == len(reqs)
+    assert merged.requests == sum(e.stats.requests for e in cluster.engines)
+    # duplicated contexts hit the shared constellation
+    assert merged.cached_tokens > 0
+    fabric = cluster.fabric_stats()
+    assert fabric["block_hits"] > 0
+    assert 0.0 < fabric["prefix_hit_rate"] < 1.0
+    assert fabric["transport_latency_s"]["p50"] > 0.0
+    # the finished batch's tokens were released back to the router
+    assert all(h.load_tokens == 0 for h in cluster.handles)
+
+
+def test_cluster_parallel_replicas_complete(dense_setup):
+    _, model, params = dense_setup
+    cluster = _cluster(model, params, policy="random")
+    reqs = _reqs(n=6, dup_groups=3)
+    out = cluster.serve(reqs, parallel=True)
+    assert all(r is not None and len(r.token_ids) > 0 for r in out)
+    assert cluster.merged_stats().requests == len(reqs)
+    # the seeded random baseline used more than one replica
+    assert sum(1 for e in cluster.engines if e.stats.requests) > 1
+
+
+def test_cluster_experiences_l2_latency(dense_setup):
+    """The acceptance-bar behavior: with a clocked fabric, restored
+    prefixes have flight time, and whatever the scheduler cannot hide
+    behind decode steps shows up as nonzero waited time."""
+    _, model, params = dense_setup
+    # rate 5: flights compress 5x (wall waits stay ~ms) but remain far
+    # longer than the host-side gap between Get issue and consumption,
+    # so un-hidden flight time is guaranteed to exist
+    clock = SimClock(rate=5.0)
+    cluster = _cluster(model, params, clock=clock, num_replicas=1)
+    reqs = _reqs(n=4, dup_groups=1)
+    cluster.serve(reqs, parallel=False)       # populate the cache
+    cluster.reset_stats()
+    cluster.serve(reqs, parallel=False)       # warm pass fetches blocks
+    merged = cluster.merged_stats()
+    assert merged.cached_tokens > 0
+    assert merged.l2_wait_s > 0.0
+    assert merged.l2_fetch_waits > 0
+    assert cluster.fabric_stats()["l2_wait_s"] == merged.l2_wait_s
+
+
+def test_scheduler_overlaps_l2_flight_with_decode(dense_setup):
+    """A prefix fetched mid-decode stays in flight for many decode steps
+    (the ISL flight is long at rate 1): the scheduler must keep decoding
+    and defer the consuming chunk instead of stalling -- visible as
+    ``l2_deferred_chunks`` -- and the admitted request still completes."""
+    from repro.serving import Engine
+
+    _, model, params = dense_setup
+    clock = SimClock(rate=1.0)
+    kvc = make_kvc(clock=clock)
+    eng = Engine(model, params, kvc=kvc, block_size=16,
+                 max_seq_len=256, max_batch=2)
+    cached_prompt = "overlap this fetched prefix with live decode " * 3
+    eng.generate([Request(prompt=cached_prompt,
+                          sampling=SamplingParams(max_new_tokens=2))])
+    eng.stats = EngineStats()
+    # slot 0 frees after 2 tokens while slot 1 keeps decoding; the queued
+    # duplicate then admits mid-decode and its SkyMemory hit's flight
+    # overlaps the running decode steps
+    out = eng.generate([
+        Request(prompt="short warm request",
+                sampling=SamplingParams(max_new_tokens=2)),
+        Request(prompt="long running decode " * 4,
+                sampling=SamplingParams(max_new_tokens=48)),
+        Request(prompt=cached_prompt,
+                sampling=SamplingParams(max_new_tokens=4)),
+    ])
+    assert all(len(r.token_ids) > 0 for r in out)
+    assert out[2].cached_tokens > 0           # the hit really restored
+    assert eng.stats.mid_decode_admissions >= 1
+    assert eng.stats.l2_deferred_chunks > 0   # flight overlapped decode
+
+
+def test_cluster_rotation_during_serving(dense_setup):
+    """The rotation-during-serving scenario: the constellation rotates on
+    the serving clock while requests are in flight; chunks migrate and
+    the stream still completes with prefix hits."""
+    _, model, params = dense_setup
+    cluster = _cluster(model, params, rotate_every_s=0.05)
+    reqs = _reqs(n=8, dup_groups=2)
+    out = cluster.serve(reqs, parallel=False)
+    assert all(len(r.token_ids) > 0 for r in out)
+    # the ticker really rotated under the live run (8 requests on a CPU
+    # engine take far longer than 50ms)
+    assert cluster.rotations > 0
+    assert cluster.kvc.stats.migrations > 0
+    # post-rotation lookups still hit the migrated blocks
+    cluster.reset_stats()
+    out2 = cluster.serve(_reqs(n=2, dup_groups=2), parallel=False)
+    assert cluster.merged_stats().cached_tokens > 0
+    assert all(len(r.token_ids) > 0 for r in out2)
+
+
+def test_cluster_affinity_vs_random_hit_rate(dense_setup):
+    """Prefix affinity must not lose to random routing on a duplicated-
+    prefix stream (sequential mode keeps this deterministic)."""
+    _, model, params = dense_setup
+    rates = {}
+    for policy in ("prefix_affinity", "random"):
+        cluster = _cluster(model, params, policy=policy)
+        cluster.serve(_reqs(n=8, dup_groups=2), parallel=False)
+        rates[policy] = cluster.fabric_stats()["prefix_hit_rate"]
+    assert rates["prefix_affinity"] >= rates["random"]
