@@ -21,7 +21,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                             with experienced -- clocked -- Get KVC
                             latency; hop-aware prefix-affinity routing vs
                             the random baseline on aggregate tokens/s and
-                            constellation hit rate); also writes
+                            constellation hit rate), and the faulty_fabric
+                            scenario (seeded satellite kills mid-serve:
+                            k=2 chunk replication holds the prefix hit
+                            rate that k=1 loses, all requests complete
+                            with byte-identical outputs); also writes
                             BENCH_serving.json for trend tracking
 
 Run: PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
@@ -399,6 +403,9 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
     cl_rows, cl_record = _cluster_scale_out(model, params, smoke=smoke)
     rows.extend(cl_rows)
     record["cluster_scale_out"] = cl_record
+    ff_rows, ff_record = _faulty_fabric(model, params, smoke=smoke)
+    rows.extend(ff_rows)
+    record["faulty_fabric"] = ff_record
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)
@@ -410,6 +417,9 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
     acc = record["cluster_scale_out"]["acceptance"]
     if not all(acc.values()):
         raise SystemExit(f"cluster_scale_out acceptance failed: {acc}")
+    facc = record["faulty_fabric"]["acceptance"]
+    if not all(facc.values()):
+        raise SystemExit(f"faulty_fabric acceptance failed: {facc}")
     return rows
 
 
@@ -747,6 +757,162 @@ def _cluster_scale_out(model, params, *, smoke: bool):
     }
     rows.append(("cluster_scale_out[acceptance]", 0.0,
                  " ".join(f"{k}={v}" for k, v in record["acceptance"].items())))
+    return rows, record
+
+
+def _faulty_fabric(model, params, *, smoke: bool):
+    """Fault-tolerant fabric: the PR-4 bursty duplicated-prefix stream
+    served by a 2-replica cluster over a warmed, clocked constellation
+    while a seeded ``FaultInjector`` kills chunk-server satellites with
+    requests in flight.  Every block stripes over every chunk server, so
+    with k=1 replication any kill zaps every cached block and the prefix
+    hit rate collapses; with k=2 (plane-diverse replica homes chosen so
+    the kill schedule never completes a home pair) degraded reads fall
+    through the dead replicas and the hit rate must hold >= 80% of the
+    unfaulted baseline.  Either way every request completes with tokens
+    byte-identical to the fault-free run -- churn costs hit rate and
+    latency, never answers.  After the serve, outstanding heals drain
+    and a repair pass re-replicates what the crashes orphaned."""
+    from repro.core import (
+        ConstellationKVC, ConstellationSpec, FaultInjector, FaultPlan,
+        IslTransport, LosWindow, Sat, SimClock, Strategy,
+        plan_survivable_kills,
+    )
+    from repro.serving import EngineCluster, Request, SamplingParams
+
+    max_seq_len = 512
+    block = 128
+    groups = 5
+    dup = 4
+    n_kills = 3
+    gen_new = 4 if smoke else 8
+    filler = ("SkyMemory replicates every KVC chunk across plane-diverse "
+              "satellites so the orbital cache keeps answering while the "
+              "constellation churns underneath the serving cluster. ")
+
+    def stream(rep: int):
+        # the cluster_scale_out burst shape: `groups` distinct contexts,
+        # `dup` members each, arriving in bursts; `rep` namespaces the
+        # warm pass away from the measured pass
+        return [
+            Request(prompt=f"[ff rep {rep} doc {i // dup}] " + filler * 2,
+                    sampling=SamplingParams(max_new_tokens=gen_new))
+            for i in range(groups * dup)
+        ]
+
+    def build(k: int):
+        spec = ConstellationSpec(15, 15, 550.0)
+        clock = SimClock(rate=5.0)
+        kvc = ConstellationKVC(
+            spec, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+            num_servers=10, chunk_bytes=6 * 1024, replication=k,
+            transport=IslTransport(spec, clock=clock,
+                                   chunk_processing_time_s=2e-4),
+        )
+        cluster = EngineCluster(
+            model, params, kvc, num_replicas=2, policy="prefix_affinity",
+            router_seed=0, block_size=block, max_seq_len=max_seq_len,
+            max_batch=4,
+        )
+        for i, eng in enumerate(cluster.engines):   # warm compiles
+            eng.generate([Request(prompt=f"[ff warm {i}] " + filler,
+                                  sampling=SamplingParams(max_new_tokens=2))])
+        # warm the orbital cache: the measured pass serves a hot fabric
+        cluster.serve(stream(0))
+        cluster.reset_stats()
+        return cluster, kvc
+
+    def measure(k: int, faulted: bool) -> dict:
+        cluster, kvc = build(k)
+        inj = None
+        if faulted:
+            # the same seed (and identical server maps) gives k=1 and
+            # k=2 the same kill schedule; survivability is computed at
+            # k=2 geometry so k=2 is *meant* to survive it and k=1 to
+            # collapse (every block stripes over every server)
+            probe = kvc if k > 1 else build_probe()
+            plan = FaultPlan.outages(
+                plan_survivable_kills(probe, n_kills, seed=5),
+                kill_at_s=0.0, stagger_s=0.1, downtime_s=1e9)
+            inj = FaultInjector(kvc, plan)
+            inj.arm()
+        t0 = time.perf_counter()
+        out = cluster.serve(stream(1))
+        wall = time.perf_counter() - t0
+        merged = cluster.merged_stats()
+        fabric = cluster.fabric_stats()
+        run = {
+            "tokens_per_s": sum(len(r.token_ids) for r in out) / wall,
+            "requests": len(out),
+            "completed": sum(1 for r in out if len(r.token_ids) > 0),
+            "prefix_hit_rate": fabric["prefix_hit_rate"],
+            "cached_tokens": merged.cached_tokens,
+            "degraded_reads": fabric["degraded_reads"],
+            "lost_blocks": fabric["lost_blocks"],
+            "engine_lost_block_lookups": merged.lost_blocks,
+            "l2_wait_s": merged.l2_wait_s,
+            "token_ids": [list(r.token_ids) for r in out],
+        }
+        if inj is not None:
+            run["sat_kills"] = inj.stats.sat_kills
+            run["chunks_dropped"] = inj.stats.chunks_dropped
+            inj.drain()                      # outstanding heals land
+            run["repaired_chunks"] = kvc.repair()
+        return run
+
+    def build_probe():
+        # a throwaway k=2 store with the same geometry, to derive the
+        # shared kill schedule for the k=1 run
+        spec = ConstellationSpec(15, 15, 550.0)
+        return ConstellationKVC(
+            spec, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+            num_servers=10, chunk_bytes=6 * 1024, replication=2,
+        )
+
+    baseline = measure(2, faulted=False)
+    faulted = {k: measure(k, faulted=True) for k in (2, 1)}
+
+    base_hit = baseline["prefix_hit_rate"]
+    k2, k1 = faulted[2], faulted[1]
+    n_reqs = groups * dup
+    identical = all(
+        run["token_ids"] == baseline["token_ids"] for run in (k2, k1))
+    acceptance = {
+        "k2_holds_80pct_of_unfaulted_hit_rate":
+            k2["prefix_hit_rate"] >= 0.8 * base_hit,
+        "k1_hit_rate_collapses":
+            k1["prefix_hit_rate"] < 0.8 * base_hit
+            and k1["prefix_hit_rate"] < k2["prefix_hit_rate"],
+        "all_requests_complete": all(
+            run["completed"] == n_reqs
+            for run in (baseline, k2, k1)),
+        "outputs_byte_identical_to_fault_free": identical,
+        "degraded_reads_nonzero": k2["degraded_reads"] > 0,
+        "repaired_chunks_nonzero": k2["repaired_chunks"] > 0,
+    }
+    record = {
+        "groups": groups, "dup_per_group": dup, "replicas": 2,
+        "sat_kills": n_kills,
+        "unfaulted_prefix_hit_rate": base_hit,
+        "unfaulted": {k: v for k, v in baseline.items()
+                      if k != "token_ids"},
+        "faulted_k2": {k: v for k, v in k2.items() if k != "token_ids"},
+        "faulted_k1": {k: v for k, v in k1.items() if k != "token_ids"},
+        "acceptance": acceptance,
+    }
+    rows = [(
+        "faulty_fabric", 0.0,
+        f"unfaulted hit={base_hit*100:.0f}% | k=2 under {n_kills} kills: "
+        f"hit={k2['prefix_hit_rate']*100:.0f}% "
+        f"degraded={k2['degraded_reads']} repaired={k2['repaired_chunks']} "
+        f"| k=1: hit={k1['prefix_hit_rate']*100:.0f}% "
+        f"lost={k1['engine_lost_block_lookups']} | "
+        f"complete={k2['completed']}+{k1['completed']}/{2*n_reqs} "
+        f"identical={identical}",
+    ), (
+        "faulty_fabric[acceptance]", 0.0,
+        " ".join(f"{k}={v}" for k, v in acceptance.items()),
+    )]
     return rows, record
 
 

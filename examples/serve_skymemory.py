@@ -20,9 +20,16 @@ depth by default so the demo runs in ~a minute on CPU) from an
 * **Rotation during serving** -- the constellation rotates on the same
   clock while requests are in flight: chunks migrate and prefix
   affinity shifts under the live cluster.
+* **Fault tolerance** -- ``--replication k`` stores every chunk on k
+  plane-diverse satellites, and ``--outages N`` arms a seeded
+  ``FaultInjector`` that kills N chunk servers while requests are in
+  flight: reads fall through the dead replicas (``degraded_reads``),
+  unrecoverable blocks recompute instead of failing (``lost_blocks``),
+  and the post-run repair pass re-replicates (``repaired_chunks``).
 
 Run: PYTHONPATH=src python examples/serve_skymemory.py
      [--full] [--replicas N] [--requests N] [--policy random]
+     [--replication K] [--outages N]
 """
 import argparse
 import sys
@@ -36,11 +43,14 @@ from repro.configs import get_config  # noqa: E402
 from repro.core import (  # noqa: E402
     ConstellationKVC,
     ConstellationSpec,
+    FaultInjector,
+    FaultPlan,
     IslTransport,
     LosWindow,
     Sat,
     SimClock,
     Strategy,
+    plan_survivable_kills,
 )
 from repro.models.model import Model  # noqa: E402
 from repro.serving import (  # noqa: E402
@@ -66,6 +76,10 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--policy", default="prefix_affinity",
                     choices=["prefix_affinity", "random"])
+    ap.add_argument("--replication", type=int, default=2,
+                    help="copies of every chunk (plane-diverse homes)")
+    ap.add_argument("--outages", type=int, default=0,
+                    help="chunk-server satellites killed mid-serve")
     args = ap.parse_args()
 
     cfg = get_config("skymemory-tinyllama")
@@ -85,17 +99,23 @@ def main() -> None:
     kvc = ConstellationKVC(
         spec, LosWindow(Sat(2, 9), 5, 5), Strategy.ROTATION_HOP,
         num_servers=10, chunk_bytes=6 * 1024,
+        replication=args.replication,
         transport=IslTransport(spec, clock=clock,
                                chunk_processing_time_s=2e-4),
     )
     # block_size doubles as each replica's L0 page size, so blocks
     # fetched from the shared constellation drop straight into pool
     # pages; the orbital rotation ticker rotates the LOS window every 2
-    # virtual seconds while requests are in flight
+    # virtual seconds while requests are in flight.  With --outages the
+    # ticker stays off: plan_survivable_kills guarantees "k=2 survives
+    # this" against the *current* replica homes, and rotation would
+    # migrate homes into never-healing dead satellites (dropping copies
+    # in transit) out from under that guarantee -- one failure mode per
+    # demo.
     cluster = EngineCluster(
         model, params, kvc, num_replicas=args.replicas,
         policy=args.policy, block_size=128, max_seq_len=512, max_batch=4,
-        rotate_every_s=2.0,
+        rotate_every_s=None if args.outages else 2.0,
     )
     print(f"cluster: {cluster.num_replicas} replicas anchored at "
           f"{[(a.plane, a.slot) for a in cluster.anchors]} | "
@@ -111,6 +131,15 @@ def main() -> None:
                 sampling=sp)
         for i in range(args.requests)
     ]
+    injector = None
+    if args.outages:
+        kills = plan_survivable_kills(kvc, args.outages, seed=5)
+        injector = FaultInjector(kvc, FaultPlan.outages(
+            kills, kill_at_s=0.5, stagger_s=0.5, downtime_s=1e9))
+        injector.arm()
+        print(f"fault plan armed: killing {len(kills)} chunk servers "
+              f"mid-serve at {[(s.plane, s.slot) for s in kills]}")
+
     t0 = time.perf_counter()
     results = cluster.serve(reqs)
     wall = time.perf_counter() - t0
@@ -160,6 +189,19 @@ def main() -> None:
     print(f"orbital rotation: {fabric['rotations']} steps during serving, "
           f"{kvc.stats.migrations} server migrations "
           f"(hits survive chunk migration)")
+    if injector is not None:
+        injector.drain()            # outstanding heals land
+        repaired = kvc.repair()     # re-replicate what the crashes lost
+    else:
+        repaired = 0
+    fabric = cluster.fabric_stats()
+    print(f"fault tolerance: replication={kvc.replication} | "
+          f"kills={0 if injector is None else injector.stats.sat_kills} "
+          f"(dropped {0 if injector is None else injector.stats.chunks_dropped}"
+          f" chunks) | degraded_reads={fabric['degraded_reads']} "
+          f"lost_blocks={fabric['lost_blocks']} "
+          f"repaired_chunks={fabric['repaired_chunks']} total "
+          f"(of which {repaired} by the final repair pass)")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,15 @@ from repro.core.chunking import (
     join_chunks,
     num_chunks,
     quantized_to_bytes,
+    replica_delta,
     split_chunks,
+)
+from repro.core.faults import (
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    FaultState,
+    plan_survivable_kills,
 )
 from repro.core.mapping import Strategy, bounding_box_side, layout_grid, place_servers
 from repro.core.migration import Move, migration_planes, plan_migration
@@ -57,7 +65,13 @@ __all__ = [
     "join_chunks",
     "num_chunks",
     "quantized_to_bytes",
+    "replica_delta",
     "split_chunks",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultState",
+    "plan_survivable_kills",
     "Strategy",
     "bounding_box_side",
     "layout_grid",

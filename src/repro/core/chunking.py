@@ -38,8 +38,38 @@ def join_chunks(chunks: list[bytes]) -> bytes:
 
 
 def chunk_server(chunk_id: int, num_servers: int) -> int:
-    """Virtual server (0-based) for a chunk: chunk_id mod n (paper §3.1)."""
+    """Virtual server (0-based) for a chunk: chunk_id mod n (paper §3.1).
+
+    This is *replica 0*'s placement.  Under k-replica placement the
+    other copies keep the same virtual server but live on satellites
+    offset from its home by ``replica_delta`` -- replication changes
+    where copies sit on the torus, never which server owns a chunk.
+    """
     return chunk_id % num_servers
+
+
+def replica_delta(
+    replica: int, num_planes: int, sats_per_plane: int
+) -> tuple[int, int]:
+    """Torus offset ``(d_plane, d_slot)`` of replica ``replica``'s home
+    satellite from the chunk's base (replica-0) server satellite.
+
+    Replicas walk plane-first: replica ``r`` sits ``r`` planes east of
+    the base until the planes are exhausted, then spills one slot south
+    and keeps walking planes.  Consequences, both load-bearing for fault
+    tolerance:
+
+    * **plane diversity** whenever ``k <= num_planes`` -- every replica
+      of a chunk is in a *different orbital plane*, so a whole-plane
+      outage (the correlated failure mode: one launch batch, one plane)
+      never takes out more than one copy;
+    * **distinct satellites** whenever ``k <= num_planes *
+      sats_per_plane`` -- no two replicas of a chunk ever share a
+      satellite (the placement property the chaos tests check).
+    """
+    if replica < 0:
+        raise ValueError("replica index must be >= 0")
+    return replica % num_planes, replica // num_planes
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,339 @@
+"""Constellation fault model: satellite churn and ISL outages.
+
+The paper's protocol assumes a cooperative constellation -- every chunk
+lives exactly where placement put it and every ISL leg is up.  A
+production LEO cache lives with churn: satellites reboot or die, optical
+links drop, and the cache must keep serving (degraded) and re-replicate
+(repair) without a request ever failing.  This module is the fault
+*source*; the degraded-read / repair behavior lives in
+``core.protocol.ConstellationKVC``.
+
+Three pieces:
+
+* ``FaultState`` -- the live fault view the data plane consults on every
+  chunk op: which satellites are dead, which ISL links are down, and
+  whether a greedy +GRID route from ``src`` to ``dst`` is currently
+  usable.  Mutation is copy-on-write over frozensets so serving threads
+  read without taking a lock.
+* ``FaultPlan`` -- a deterministic schedule of kill/heal events with
+  times *relative to arming*, on the fabric's virtual clock
+  (``core.protocol.SimClock``).  ``seeded_churn`` builds a reproducible
+  random outage schedule: the same seed always yields the same kills at
+  the same virtual times.
+* ``FaultInjector`` -- binds a plan to a ``ConstellationKVC``: ``arm()``
+  anchors the plan at the current clock reading, and ``advance()``
+  (called by the store at the top of every chunk op, so no extra thread
+  is needed) applies every event whose time has passed.  Killing a
+  satellite drops its chunk store -- the data is *gone*, not hidden --
+  while the block directory keeps its entries so degraded reads can fall
+  through to surviving replicas and a repair pass can re-replicate.
+"""
+from __future__ import annotations
+
+import math
+import random
+import threading
+from dataclasses import dataclass, field
+
+from repro.core.constellation import ConstellationSpec, Sat
+
+Link = frozenset  # {Sat, Sat} -- ISL links are undirected
+
+
+def link_key(a: Sat, b: Sat) -> frozenset:
+    return frozenset((a, b))
+
+
+class FaultState:
+    """Current dead satellites / ISL links, readable without a lock.
+
+    The sets are replaced wholesale on every mutation (copy-on-write),
+    so a serving thread's membership check sees either the old or the
+    new frozenset, never a half-updated one.  ``reachable`` walks the
+    same greedy +GRID route the transport model prices, so "the link on
+    my route is down" and "my chunk op fails" agree by construction; a
+    per-state route cache keeps the walk off the hot path.
+    """
+
+    def __init__(self) -> None:
+        self.dead_sats: frozenset = frozenset()
+        self.dead_links: frozenset = frozenset()
+        self._reach_cache: dict = {}
+
+    @property
+    def clean(self) -> bool:
+        return not self.dead_sats and not self.dead_links
+
+    # -- mutation (copy-on-write; callers serialize via the injector) ---
+    def kill_sat(self, sat: Sat) -> None:
+        self.dead_sats = self.dead_sats | {sat}
+        self._reach_cache = {}
+
+    def heal_sat(self, sat: Sat) -> None:
+        self.dead_sats = self.dead_sats - {sat}
+        self._reach_cache = {}
+
+    def kill_link(self, a: Sat, b: Sat) -> None:
+        self.dead_links = self.dead_links | {link_key(a, b)}
+        self._reach_cache = {}
+
+    def heal_link(self, a: Sat, b: Sat) -> None:
+        self.dead_links = self.dead_links - {link_key(a, b)}
+        self._reach_cache = {}
+
+    # -- queries --------------------------------------------------------
+    def sat_alive(self, sat: Sat) -> bool:
+        return sat not in self.dead_sats
+
+    def link_alive(self, a: Sat, b: Sat) -> bool:
+        return link_key(a, b) not in self.dead_links
+
+    def reachable(self, spec: ConstellationSpec, src: Sat, dst: Sat) -> bool:
+        """Can a chunk op from ``src`` reach ``dst`` right now?
+
+        The target must be alive, and no explicitly-killed ISL link may
+        sit on the greedy +GRID route.  Two deliberate asymmetries:
+
+        * a dead satellite blocks only as an *endpoint* -- the +GRID
+          torus always has a one-hop detour around a dead transit node,
+          so transit is assumed rerouted at negligible cost (what
+          Celestial-style LEO routing actually does).  Its *data* is
+          still gone: that is what degraded reads fall through.
+        * a killed link fails ops whose deterministic greedy route
+          crosses it -- the priced path and the usable path stay the
+          same model, so "the link on my route is down" and "my chunk op
+          fails" agree by construction.
+
+        ``src`` itself is exempt: it is the op's origin (a serving
+        replica's anchor or the ground host's uplink satellite), whose
+        failure is the serving layer's problem, not the fabric's.
+        """
+        if dst in self.dead_sats:
+            return False
+        if not self.dead_links:
+            return True
+        cache, key = self._reach_cache, (src, dst)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+        path = spec.greedy_route(src, dst)
+        ok = all(link_key(a, b) not in self.dead_links
+                 for a, b in zip(path, path[1:]))
+        cache[key] = ok
+        return ok
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault transition, ``at_s`` relative to ``arm()``."""
+
+    at_s: float
+    action: str               # "kill" | "heal"
+    sat: Sat | None = None
+    link: tuple[Sat, Sat] | None = None
+
+    def __post_init__(self) -> None:
+        if self.action not in ("kill", "heal"):
+            raise ValueError(f"unknown fault action {self.action!r}")
+        if (self.sat is None) == (self.link is None):
+            raise ValueError("a fault event targets a sat XOR a link")
+
+
+@dataclass
+class FaultPlan:
+    """A deterministic, time-ordered schedule of fault events."""
+
+    events: list[FaultEvent] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.events = sorted(self.events, key=lambda e: e.at_s)
+
+    @classmethod
+    def outages(
+        cls,
+        sats: list[Sat],
+        *,
+        kill_at_s: float = 0.0,
+        stagger_s: float = 0.0,
+        downtime_s: float | None = None,
+    ) -> "FaultPlan":
+        """Kill ``sats`` starting at ``kill_at_s`` (each ``stagger_s``
+        after the previous), healing each ``downtime_s`` after its kill
+        (``None`` = never)."""
+        events = []
+        for i, sat in enumerate(sats):
+            t = kill_at_s + i * stagger_s
+            events.append(FaultEvent(at_s=t, action="kill", sat=sat))
+            if downtime_s is not None:
+                events.append(
+                    FaultEvent(at_s=t + downtime_s, action="heal", sat=sat))
+        return cls(events)
+
+    @classmethod
+    def seeded_churn(
+        cls,
+        sats: list[Sat],
+        *,
+        seed: int,
+        n_outages: int,
+        start_s: float = 0.0,
+        window_s: float = 1.0,
+        downtime_s: float | None = None,
+        links: list[tuple[Sat, Sat]] = (),
+        n_link_outages: int = 0,
+    ) -> "FaultPlan":
+        """Reproducible random churn: ``n_outages`` distinct satellites
+        from ``sats`` (and ``n_link_outages`` links from ``links``) are
+        killed at seeded-uniform times in ``[start_s, start_s+window_s)``
+        and healed ``downtime_s`` later.  Same seed, same schedule."""
+        rng = random.Random(seed)
+        events = []
+        for sat in rng.sample(list(sats), min(n_outages, len(sats))):
+            t = start_s + rng.random() * window_s
+            events.append(FaultEvent(at_s=t, action="kill", sat=sat))
+            if downtime_s is not None:
+                events.append(
+                    FaultEvent(at_s=t + downtime_s, action="heal", sat=sat))
+        for link in rng.sample(list(links),
+                               min(n_link_outages, len(links))):
+            t = start_s + rng.random() * window_s
+            events.append(FaultEvent(at_s=t, action="kill", link=link))
+            if downtime_s is not None:
+                events.append(
+                    FaultEvent(at_s=t + downtime_s, action="heal", link=link))
+        return cls(events)
+
+
+@dataclass
+class FaultInjectorStats:
+    sat_kills: int = 0
+    sat_heals: int = 0
+    link_kills: int = 0
+    link_heals: int = 0
+    chunks_dropped: int = 0   # store entries destroyed by satellite deaths
+
+    @property
+    def events_applied(self) -> int:
+        return (self.sat_kills + self.sat_heals
+                + self.link_kills + self.link_heals)
+
+
+class FaultInjector:
+    """Applies a ``FaultPlan`` to a ``ConstellationKVC`` on its clock.
+
+    ``arm()`` anchors the plan's relative event times at the current
+    clock reading; ``advance()`` -- called by the store at the top of
+    every chunk op, and manually from tests -- applies every due event
+    under one lock, so concurrent serving threads each see a consistent
+    prefix of the plan.  With no clock (unclocked fabric) only events at
+    ``at_s <= 0`` fire on advance; ``drain()`` force-applies the rest.
+    """
+
+    def __init__(self, kvc, plan: FaultPlan, *,
+                 repair_on_heal: bool = False) -> None:
+        # views delegate storage to their base; faults live on the base
+        self.kvc = getattr(kvc, "base", kvc)
+        self.plan = plan
+        self.repair_on_heal = repair_on_heal
+        self.state = FaultState()
+        self.stats = FaultInjectorStats()
+        self._idx = 0
+        self._t0: float | None = None
+        self._lock = threading.Lock()
+        self.kvc.attach_faults(self)
+
+    @property
+    def clock(self):
+        return self.kvc.transport.clock
+
+    def _now(self) -> float:
+        return 0.0 if self.clock is None else self.clock.now()
+
+    def arm(self) -> None:
+        """Anchor the plan at the current clock reading and rewind it."""
+        with self._lock:
+            self._t0 = self._now()
+            self._idx = 0
+
+    def advance(self) -> int:
+        """Apply every event whose (relative) time has passed; returns
+        how many fired.  No-op until ``arm()``."""
+        if self._t0 is None or self._idx >= len(self.plan.events):
+            return 0
+        rel = self._now() - self._t0
+        return self._apply_until(rel)
+
+    def drain(self) -> int:
+        """Force-apply every remaining event (end-of-scenario settling:
+        outstanding heals land regardless of the clock)."""
+        if self._t0 is None:
+            self._t0 = self._now()
+        return self._apply_until(math.inf)
+
+    def _apply_until(self, rel: float) -> int:
+        fired = 0
+        healed = False
+        with self._lock:
+            while (self._idx < len(self.plan.events)
+                   and self.plan.events[self._idx].at_s <= rel):
+                healed |= self._apply(self.plan.events[self._idx])
+                self._idx += 1
+                fired += 1
+        if healed and self.repair_on_heal:
+            # OUTSIDE the injector lock: repair purges unrecoverable
+            # blocks, whose ``on_block_lost`` takes the serving-side
+            # KVCManager lock -- while serving threads holding that lock
+            # tick this injector from inside chunk ops.  Repairing under
+            # ``self._lock`` would invert that order (ABBA deadlock).
+            self.kvc.repair()
+        return fired
+
+    def _apply(self, ev: FaultEvent) -> bool:
+        """Apply one event; returns True when it healed a satellite."""
+        if ev.sat is not None:
+            sat = self.kvc.spec.wrap(ev.sat)
+            if ev.action == "kill":
+                self.state.kill_sat(sat)
+                self.stats.sat_kills += 1
+                self.stats.chunks_dropped += self.kvc.drop_satellite(sat)
+            else:
+                self.state.heal_sat(sat)
+                self.stats.sat_heals += 1
+                return True
+        else:
+            a, b = ev.link
+            a, b = self.kvc.spec.wrap(a), self.kvc.spec.wrap(b)
+            if ev.action == "kill":
+                self.state.kill_link(a, b)
+                self.stats.link_kills += 1
+            else:
+                self.state.heal_link(a, b)
+                self.stats.link_heals += 1
+        return False
+
+
+def plan_survivable_kills(kvc, n_kills: int, *, seed: int = 0) -> list[Sat]:
+    """Pick up to ``n_kills`` chunk-server satellites to kill such that,
+    at the store's replication factor, no chunk loses its *entire*
+    replica home set -- the benchmark's "replication survives this"
+    schedule (with ``replication == 1`` nothing is survivable, so any
+    servers may be picked; that is the collapse baseline).  Seeded and
+    deterministic for a given store geometry."""
+    rng = random.Random(seed)
+    home_sets = [
+        {kvc.replica_sat(sid, r) for r in range(kvc.replication)}
+        for sid in range(kvc.num_servers)
+    ]
+    cands = list(dict.fromkeys(kvc.server_map))
+    rng.shuffle(cands)
+    killed: set[Sat] = set()
+    out: list[Sat] = []
+    for sat in cands:
+        if len(out) >= n_kills:
+            break
+        if kvc.replication > 1 and any(
+                homes <= killed | {sat} for homes in home_sets):
+            continue
+        killed.add(sat)
+        out.append(sat)
+    return out

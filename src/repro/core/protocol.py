@@ -32,6 +32,7 @@ from repro.core.chunking import (
     chunk_server,
     join_chunks,
     num_chunks,
+    replica_delta,
     split_chunks,
 )
 from repro.core.constellation import ConstellationSpec, LosWindow, Sat
@@ -215,10 +216,25 @@ class CacheStats:
     blocks_purged: int = 0
     migrations: int = 0
     lookup_probes: int = 0
+    # fault tolerance (k-replica placement + churn):
+    degraded_reads: int = 0   # ops served only after dead-replica fallthrough
+    lost_blocks: int = 0      # blocks with an unrecoverable chunk (purged)
+    repaired_chunks: int = 0  # chunk copies re-replicated by repair passes
 
 
 class ConstellationKVC:
-    """Chunk store striped over the constellation with rotation migration."""
+    """Chunk store striped over the constellation with rotation migration.
+
+    ``replication`` stores ``k`` copies of every chunk: replica 0 on the
+    chunk's server satellite, replica ``r`` offset by
+    ``chunking.replica_delta`` (plane-diverse while ``k <= num_planes``,
+    always a distinct satellite).  Reads fall through dead replicas
+    (``degraded_reads``), charging the experienced latency of every
+    failed attempt; ``repair`` re-replicates surviving copies after
+    churn.  Fault sources attach via ``attach_faults`` (see
+    ``core.faults.FaultInjector``); with none attached every path is
+    byte-identical to the fault-free protocol.
+    """
 
     def __init__(
         self,
@@ -230,6 +246,7 @@ class ConstellationKVC:
         chunk_bytes: int = 6 * 1024,
         per_sat_capacity_bytes: int | None = None,
         transport: IslTransport | None = None,
+        replication: int = 1,
     ) -> None:
         self.spec = spec
         self.window = window
@@ -238,6 +255,11 @@ class ConstellationKVC:
         self.chunk_bytes = chunk_bytes
         self.transport = transport or IslTransport(spec)
         self.stats = CacheStats()
+        if not 1 <= replication <= spec.num_sats:
+            raise ValueError(
+                f"replication must be in [1, {spec.num_sats}] "
+                f"(got {replication})")
+        self.replication = replication
         self.server_map: list[Sat] = place_servers(
             strategy, spec, window, self.num_servers
         )
@@ -247,6 +269,8 @@ class ConstellationKVC:
         # block hash -> n_chunks for blocks believed stored (server-side dir).
         self.directory: dict[bytes, int] = {}
         self.on_block_lost: Callable[[bytes], None] | None = None
+        self.injector = None  # core.faults.FaultInjector, via attach_faults
+        self._repaired_at_event = -1   # rotate-repair gating
 
     # -- plumbing ------------------------------------------------------
     def adopt_policy(self, policy) -> None:
@@ -274,6 +298,52 @@ class ConstellationKVC:
 
     def server_sat(self, server_id0: int) -> Sat:
         return self.server_map[server_id0]
+
+    def _offset_sat(self, base: Sat, replica: int) -> Sat:
+        if replica == 0:
+            return base
+        dp, ds = replica_delta(
+            replica, self.spec.num_planes, self.spec.sats_per_plane)
+        return self.spec.wrap(Sat(base.plane + dp, base.slot + ds))
+
+    def replica_sat(self, server_id0: int, replica: int = 0) -> Sat:
+        """Home satellite of replica ``replica`` of server
+        ``server_id0``'s chunks (replica 0 = the server's own satellite).
+        Derived from the live ``server_map``, so rotation migration moves
+        every replica's home along with its server."""
+        return self._offset_sat(self.server_map[server_id0], replica)
+
+    # -- fault plumbing ------------------------------------------------
+    def attach_faults(self, injector) -> None:
+        """Bind a ``core.faults.FaultInjector``: its ``FaultState`` gates
+        reachability on every chunk op, and ops tick it so scheduled
+        kills/heals land at their clock times without a poller thread."""
+        self.injector = injector
+
+    @property
+    def faults(self):
+        return None if self.injector is None else self.injector.state
+
+    def _tick_faults(self) -> None:
+        if self.injector is not None:
+            self.injector.advance()
+
+    def _reachable(self, src: Sat, sat: Sat) -> bool:
+        f = self.faults
+        return f is None or f.reachable(self.spec, src, sat)
+
+    def drop_satellite(self, sat: Sat) -> int:
+        """A satellite died: its chunk store's contents are destroyed.
+
+        Not an eviction -- no ``on_evict`` gossip, and the directory
+        keeps its block entries -- because the data *may* survive
+        elsewhere: degraded reads fall through to the other replicas and
+        ``repair`` re-replicates (or finally purges) what the crash
+        orphaned.  Returns the number of chunks destroyed."""
+        store = self._stores.get(self.spec.wrap(sat))
+        if store is None:
+            return 0
+        return len(store.pop_all())
 
     @property
     def center(self) -> Sat:
@@ -312,43 +382,85 @@ class ConstellationKVC:
         ``payload_bytes`` (default: a full stripe) lands on.  Pure -- no
         stats, no data movement -- this is the router's hop-awareness
         signal, priced by the same transport model the fetch will
-        experience."""
+        experience: under faults each server is priced as the degraded
+        read would run it -- failed probes of dead replicas first, then
+        the first live replica -- so dead-replica detours show up in
+        routing scores before any engine experiences them."""
+        self._tick_faults()   # due kills/heals land before pricing
         tr = transport if transport is not None else self.transport
         nb = (self.num_servers if payload_bytes is None
               else num_chunks(payload_bytes, self.chunk_bytes))
         servers = {chunk_server(cid, self.num_servers)
                    for cid in range(min(nb, self.num_servers))}
         anchor = self.spec.wrap(anchor)
-        return max(
-            tr.op_latency_s(anchor, self.server_sat(sid), self.chunk_bytes,
-                            round_trip=True)
-            for sid in servers
-        )
+        worst = 0.0
+        for sid in servers:
+            lat = 0.0
+            for r in range(self.replication):
+                sat = self.replica_sat(sid, r)
+                if self._reachable(anchor, sat):
+                    lat += tr.op_latency_s(anchor, sat, self.chunk_bytes,
+                                           round_trip=True)
+                    break
+                # a dead replica costs its timed-out probe round trip
+                lat += tr.op_latency_s(anchor, sat, 0, round_trip=True)
+            worst = max(worst, lat)
+        return worst
 
     # -- Set KVC (paper §3.8) ------------------------------------------
     def set_block(
         self, block_hash: bytes, payload: bytes, *,
         via: IslTransport | None = None, stats: CacheStats | None = None,
     ) -> BlockMeta:
+        """Store (all ``replication`` copies of) every chunk; the block
+        latency is the max over the parallel per-copy writes.  Replicas
+        whose home is currently dead/unreachable are simply skipped --
+        the next ``repair`` pass back-fills them from a surviving copy."""
         tr = via or self.transport
         cs = stats or self.stats
+        self._tick_faults()
         chunks = split_chunks(payload, self.chunk_bytes)
+        src = tr.src_for(self.center)
         worst = 0.0
+        complete = True   # every chunk landed at least one copy
         for cid, chunk in enumerate(chunks):
             sid = chunk_server(cid, self.num_servers)
-            sat = self.server_sat(sid)
-            self.store_for(sat).set((block_hash, cid), chunk)
-            worst = max(
-                worst,
-                tr.chunk_op_latency_s(
-                    self.center, sat, len(chunk), round_trip=False
-                ),
-            )
+            stored = 0
+            for r in range(self.replication):
+                sat = self.replica_sat(sid, r)
+                if not self._reachable(src, sat):
+                    continue
+                self.store_for(sat).set((block_hash, cid), chunk)
+                stored += 1
+                worst = max(
+                    worst,
+                    tr.chunk_op_latency_s(
+                        self.center, sat, len(chunk), round_trip=False
+                    ),
+                )
+            complete &= stored > 0
         tr.record_op(worst)
-        self.directory[block_hash] = len(chunks)
-        cs.blocks_set += 1
+        if complete:
+            # a chunk with zero landed copies makes the write a failure:
+            # registering it would make the directory (and through it the
+            # metrics) claim a block that never existed.  A pre-existing
+            # entry for the same hash stays -- content addressing makes
+            # the old bytes identical to what this write carried.
+            self.directory[block_hash] = len(chunks)
+            cs.blocks_set += 1
+        elif block_hash not in self.directory:
+            # failed fresh write: drop the partial chunks that did land,
+            # or they would linger as orphans no sweep walks (the sweep
+            # and repair passes scan the directory, which never learned
+            # of this block)
+            for cid in range(len(chunks)):
+                sid = chunk_server(cid, self.num_servers)
+                for r in range(self.replication):
+                    self.store_for(self.replica_sat(sid, r)).delete(
+                        (block_hash, cid))
         return BlockMeta(
-            n_chunks=len(chunks), set_time=time.time(), payload_bytes=len(payload)
+            n_chunks=len(chunks), set_time=time.time(),
+            payload_bytes=len(payload), stored=complete,
         )
 
     # -- Get KVC (paper §3.8) ------------------------------------------
@@ -362,51 +474,111 @@ class ConstellationKVC:
         A positive probe *touches* the chunk's LRU clock: a presence
         check is a use (the caller is about to rely on the block), and
         leaving it unstamped made repeatedly-probed blocks look cold and
-        get evicted first -- the staleness the shared policy fixed."""
+        get evicted first -- the staleness the shared policy fixed.
+
+        Degraded probes: a dead or empty replica falls through to the
+        next copy, each failed attempt charging its (timed-out) round
+        trip -- absent means absent from *every* replica home."""
         tr = via or self.transport
         cs = stats or self.stats
+        self._tick_faults()
         cs.lookup_probes += 1
-        sat = self.server_sat(chunk_server(0, self.num_servers))
-        tr.record_op(
-            tr.chunk_op_latency_s(self.center, sat, 0, round_trip=True)
-        )
-        store = self.store_for(sat)
-        present = store.contains((block_hash, 0))
-        if present:
-            store.touch((block_hash, 0))
+        sid = chunk_server(0, self.num_servers)
+        src = tr.src_for(self.center)
+        lat = 0.0
+        present = False
+        fell_through = False
+        for r in range(self.replication):
+            sat = self.replica_sat(sid, r)
+            if not self._reachable(src, sat):
+                lat += tr.chunk_op_latency_s(self.center, sat, 0,
+                                             round_trip=True)
+                fell_through = True
+                continue
+            lat += tr.chunk_op_latency_s(self.center, sat, 0,
+                                         round_trip=True)
+            store = self.store_for(sat)
+            if store.contains((block_hash, 0)):
+                store.touch((block_hash, 0))
+                present = True
+                break
+            fell_through = True
+        tr.record_op(lat)
+        if present and fell_through:
+            cs.degraded_reads += 1
         return present
 
     def get_block(
         self, block_hash: bytes, n_chunks: int | None = None, *,
         via: IslTransport | None = None, stats: CacheStats | None = None,
     ) -> bytes | None:
+        """Fetch a block's chunks (all chunks in parallel, so the block
+        latency is the max over per-chunk fetch sequences).
+
+        Degraded reads: per chunk, replicas are tried in placement order
+        and every failed attempt -- a dead/unreachable home, or a live
+        home that lost the copy -- charges its round trip *before* the
+        next replica is tried, so the experienced latency of a degraded
+        fetch really contains the detours.  A chunk with no live copy
+        fails the block (§3.1): a clean miss, never an exception.  The
+        block is lazily purged only when every replica home answered and
+        none had the data (it is *gone*); while a home is merely
+        unreachable the directory keeps the entry -- the data may still
+        be there when the fault heals."""
         tr = via or self.transport
         cs = stats or self.stats
+        self._tick_faults()
         if n_chunks is None:
             n_chunks = self.directory.get(block_hash, 0)
             if n_chunks == 0:
                 cs.block_misses += 1
                 return None
+        src = tr.src_for(self.center)
         chunks: list[bytes] = []
         worst = 0.0
+        degraded = False
         for cid in range(n_chunks):
             sid = chunk_server(cid, self.num_servers)
-            sat = self.server_sat(sid)
-            chunk = self.store_for(sat).get((block_hash, cid))
+            attempt_s = 0.0
+            chunk = None
+            unreachable = False
+            for r in range(self.replication):
+                sat = self.replica_sat(sid, r)
+                if not self._reachable(src, sat):
+                    # failed attempt: the timed-out probe's round trip
+                    attempt_s += tr.chunk_op_latency_s(
+                        self.center, sat, 0, round_trip=True)
+                    unreachable = True
+                    degraded = True
+                    continue
+                got = self.store_for(sat).get((block_hash, cid))
+                if got is None:
+                    if r + 1 < self.replication:
+                        # empty live replica: charge the probe and fall
+                        # through (the copy may have died with a crash
+                        # this home has since healed from)
+                        attempt_s += tr.chunk_op_latency_s(
+                            self.center, sat, 0, round_trip=True)
+                        degraded = True
+                    continue
+                attempt_s += tr.chunk_op_latency_s(
+                    self.center, sat, len(got), round_trip=True)
+                chunk = got
+                break
             if chunk is None:
-                # A single missing chunk fails the block (§3.1); lazy-evict.
+                # A chunk with no live copy fails the block (§3.1).
                 cs.block_misses += 1
-                self.purge_block(block_hash)
+                if not unreachable:
+                    # every home answered and none had it: unrecoverable
+                    self.purge_block(block_hash)
+                    cs.lost_blocks += 1
                 return None
-            worst = max(
-                worst,
-                tr.chunk_op_latency_s(
-                    self.center, sat, len(chunk), round_trip=True
-                ),
-            )
+            worst = max(worst, attempt_s)
             chunks.append(chunk)
         tr.record_op(worst)
         cs.block_hits += 1
+        if degraded:
+            cs.degraded_reads += 1
         return join_chunks(chunks)
 
     def lookup_longest(
@@ -444,19 +616,71 @@ class ConstellationKVC:
         return removed
 
     def sweep_incomplete(self) -> int:
-        """Periodic cleanup: purge blocks with missing chunks (§3.9)."""
+        """Periodic cleanup: purge blocks with missing chunks (§3.9) --
+        under replication, missing means *no replica home* has a copy."""
         purged = 0
         for block_hash, n_chunks in list(self.directory.items()):
             ok = all(
-                self.store_for(
-                    self.server_sat(chunk_server(cid, self.num_servers))
-                ).contains((block_hash, cid))
+                any(
+                    self.store_for(
+                        self.replica_sat(chunk_server(cid, self.num_servers),
+                                         r)
+                    ).contains((block_hash, cid))
+                    for r in range(self.replication)
+                )
                 for cid in range(n_chunks)
             )
             if not ok:
                 self.purge_block(block_hash)
                 purged += 1
         return purged
+
+    # -- repair (fault tolerance) -----------------------------------------
+    def repair(self) -> int:
+        """Re-replication pass: restore every directory block to its full
+        replica set by copying a surviving chunk copy onto each live
+        replica home that lost (or never received) its own.  A chunk with
+        no surviving copy on a live satellite is unrecoverable and loses
+        the whole block -- purged, ``on_block_lost`` fired so the radix
+        index prunes, counted in ``stats.lost_blocks``.  Runs on
+        ``rotate()`` when a fault source is attached, on heal events
+        (``FaultInjector(repair_on_heal=True)``), or explicitly.
+
+        Unlike the data-plane ops this is control-plane work: it only
+        requires the source and destination satellites to be *alive*
+        (background traffic can route around dead ISLs), not the serving
+        path's greedy route.  Returns the number of chunk copies
+        re-replicated (also accumulated in ``stats.repaired_chunks``)."""
+        f = self.faults
+        repaired = 0
+        for block_hash, n_chunks in list(self.directory.items()):
+            lost = False
+            for cid in range(n_chunks):
+                sid = chunk_server(cid, self.num_servers)
+                live = [self.replica_sat(sid, r)
+                        for r in range(self.replication)
+                        if f is None or f.sat_alive(
+                            self.replica_sat(sid, r))]
+                holders = [sat for sat in live
+                           if self.store_for(sat).contains(
+                               (block_hash, cid))]
+                if not holders:
+                    lost = True
+                    break
+                missing = [sat for sat in live if sat not in holders]
+                if not missing:
+                    continue   # full replica set: no read, no LRU touch
+                chunk = self.store_for(holders[0]).peek((block_hash, cid))
+                for sat in missing:
+                    self.store_for(sat).set((block_hash, cid), chunk)
+                    self.transport.stats.messages += 1
+                    self.transport.stats.bytes_moved += len(chunk)
+                    repaired += 1
+            if lost:
+                self.purge_block(block_hash)
+                self.stats.lost_blocks += 1
+        self.stats.repaired_chunks += repaired
+        return repaired
 
     # -- predictive prefetch (§3.7, closing remark) -----------------------
     def prefetch_for_rotation(self, block_hash: bytes, steps: int) -> int:
@@ -496,9 +720,61 @@ class ConstellationKVC:
         return copied
 
     # -- rotation (§3.4) --------------------------------------------------
+    def execute_move(self, mv: migration_mod.Move) -> None:
+        """Apply one planned migration: move the server's chunks -- every
+        replica copy from its old home to the new one -- and repoint the
+        server map.  With ``replication == 1`` a server's base home
+        cannot cohabit with other servers' data, so the store drains
+        wholesale (the seed fast path); replica homes *can* land on other
+        servers' satellites, so under replication only this server's
+        chunks (``chunk_server(cid) == sid``) are moved."""
+        sid0 = mv.server_id - 1
+        f = self.faults
+        for r in range(self.replication):
+            src_store = self.store_for(self._offset_sat(mv.src, r))
+            dst = self._offset_sat(mv.dst, r)
+            if self.replication == 1:
+                items = src_store.pop_all()
+            else:
+                # peek, not get: migration is data shuffling, not use --
+                # promoting every moved chunk on the shared LRU would
+                # evict genuinely hot blocks in its place (the k=1
+                # pop_all path touches nothing either)
+                items = [
+                    (key, src_store.peek(key))
+                    for key in src_store.keys()
+                    if chunk_server(key[1], self.num_servers) == sid0
+                ]
+                for key, _ in items:
+                    src_store.delete(key)
+            if f is not None and not f.sat_alive(dst):
+                # a dead destination cannot receive the migration: the
+                # copies are lost in transit (degraded reads fall through
+                # to the other replicas; repair re-replicates once the
+                # home -- old or new -- is alive again).  Writing them
+                # anyway would "resurrect" data on heal that the dead
+                # satellite could never have held.
+                continue
+            dst_store = self.store_for(dst)
+            for key, value in items:
+                dst_store.set(key, value)
+                self.transport.stats.messages += 1
+                self.transport.stats.bytes_moved += len(value)
+        self.server_map[sid0] = mv.dst
+        self.stats.migrations += 1
+
     def rotate(self, steps: int = 1) -> list[migration_mod.Move]:
         """Advance the LOS window ``steps`` within-plane positions and
-        migrate chunks of exiting satellites (no-op for HOP: on-board)."""
+        migrate chunks of exiting satellites (no-op for HOP: on-board).
+        A step ends with a ``repair`` pass when the attached fault
+        source has applied events since the last pass or still has live
+        faults (active outages let migrations drop copies in transit):
+        churn losses are re-replicated as part of the orbital
+        housekeeping the window shift already is.  Over a clean fabric
+        partial replica sets cannot arise -- set writes every home and
+        purges sweep them all -- so the scan is skipped rather than paid
+        under the serving lock."""
+        self._tick_faults()
         all_moves: list[migration_mod.Move] = []
         for _ in range(steps):
             new_window = self.window.shifted(self.spec, d_slot=1)
@@ -509,16 +785,21 @@ class ConstellationKVC:
                 self.spec, self.window, new_window, self.server_map
             )
             for mv in moves:
-                src_store = self.store_for(mv.src)
-                dst_store = self.store_for(mv.dst)
-                for key, value in src_store.pop_all():
-                    dst_store.set(key, value)
-                    self.transport.stats.messages += 1
-                    self.transport.stats.bytes_moved += len(value)
-                self.server_map[mv.server_id - 1] = mv.dst
-                self.stats.migrations += 1
+                self.execute_move(mv)
             self.window = new_window
             all_moves.extend(moves)
+            if self.injector is not None and (
+                    not self.injector.state.clean
+                    or self.injector.stats.events_applied
+                    != self._repaired_at_event):
+                # partial replica sets only arise from fault events (or,
+                # while faults are ACTIVE, from migrations whose dead
+                # destinations drop copies in transit) -- an armed-but-
+                # quiet injector over a clean fabric has nothing to
+                # repair, so skip the directory scan on those steps
+                self.repair()
+                self._repaired_at_event = (
+                    self.injector.stats.events_applied)
         return all_moves
 
 
@@ -569,6 +850,17 @@ class ConstellationView:
     @property
     def chunk_bytes(self) -> int:
         return self.base.chunk_bytes
+
+    @property
+    def replication(self) -> int:
+        return self.base.replication
+
+    @property
+    def faults(self):
+        return self.base.faults
+
+    def repair(self) -> int:
+        return self.base.repair()
 
     @property
     def directory(self) -> dict[bytes, int]:
@@ -745,12 +1037,23 @@ class KVCManager:
             return 0
         with self.lock:
             metas: list[BlockMeta | None] = [None] * len(hashes)
+            stored_upto = len(hashes)
             for i, payload in zip(range(n_cached, len(hashes)), payloads):
-                metas[i] = self.cache.set_block(hashes[i], payload)
+                meta = self.cache.set_block(hashes[i], payload)
+                if not meta.stored:
+                    # the fabric could not land a single copy of some
+                    # chunk (total outage on a stripe member): indexing
+                    # the hash would create a phantom entry the
+                    # directory knows nothing about and no repair pass
+                    # could ever prune.  Later blocks of the chain are
+                    # unreachable through the radix walk anyway; stop.
+                    stored_upto = i
+                    break
+                metas[i] = meta
                 self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
-            if self.use_radix:
-                self.index.insert(hashes, metas)
-        return len(payloads)
+            if self.use_radix and stored_upto:
+                self.index.insert(hashes[:stored_upto], metas[:stored_upto])
+        return min(len(payloads), max(0, stored_upto - n_cached))
 
     def add_precomputed_blocks(
         self,
@@ -779,13 +1082,18 @@ class KVCManager:
             )
             added = 0
             metas: list[BlockMeta | None] = [None] * len(hashes)
+            stored_upto = len(hashes)
             for i in range(n_cached, len(hashes)):
                 payload = payload_for(i + 1)
-                metas[i] = self.cache.set_block(hashes[i], payload)
+                meta = self.cache.set_block(hashes[i], payload)
+                if not meta.stored:       # see add_blocks_tokens
+                    stored_upto = i
+                    break
+                metas[i] = meta
                 self._hash_to_chain[hashes[i]] = list(hashes[: i + 1])
                 added += 1
             if self.use_radix and added:
-                self.index.insert(hashes, metas)
+                self.index.insert(hashes[:stored_upto], metas[:stored_upto])
             return added
 
     def get_cache(self, prompt: str) -> tuple[bytes | None, int]:

@@ -13,11 +13,18 @@ from typing import Any, Sequence
 
 @dataclass
 class BlockMeta:
-    """Metadata stored for one cached block (paper §3.10)."""
+    """Metadata stored for one cached block (paper §3.10).
+
+    ``stored=False`` marks a Set KVC that failed to land a single copy
+    of some chunk (total outage on a stripe member): the write is NOT in
+    the constellation directory, and callers must not index the hash --
+    a phantom index entry would re-probe a block that never existed for
+    as long as the outage lasts."""
 
     n_chunks: int
     set_time: float
     payload_bytes: int = 0
+    stored: bool = True
     extra: dict[str, Any] = field(default_factory=dict)
 
 

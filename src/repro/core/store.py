@@ -73,6 +73,14 @@ class SatelliteStore:
     def contains(self, key: ChunkKey) -> bool:
         return key in self._data
 
+    def peek(self, key: ChunkKey) -> bytes | None:
+        """Read without side effects: no LRU promotion, no policy stamp,
+        no hit/miss accounting.  Control-plane movers (rotation
+        migration, repair) use this so shuffling a cold chunk between
+        satellites does not make it look recently *used* and scramble
+        eviction order."""
+        return self._data.get(key)
+
     def touch(self, key: ChunkKey) -> None:
         """Stamp ``key`` as used without reading it.  Presence probes
         (``has_block``'s chunk-0 check) go through ``contains``, which --

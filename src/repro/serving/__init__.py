@@ -39,6 +39,41 @@ hidden is waited out and accounted (``EngineStats.l2_wait_s`` /
 ``l2_deferred_chunks``).  Unclocked fabrics keep the legacy
 instant-L2 behavior.
 
+Fault model
+===========
+
+Constellation *failures* are experienced end-to-end too -- satellites
+crash and ISL links drop (``core.faults``: seeded ``FaultPlan`` applied
+by a ``FaultInjector`` on the fabric clock), and the serving stack keeps
+answering:
+
+* **k-replica placement** (``ConstellationKVC(replication=k)``): every
+  chunk is stored ``k`` times -- replica 0 on its server's satellite,
+  replica ``r`` offset by ``core.chunking.replica_delta``, which walks
+  plane-first so copies are plane-diverse whenever ``k <= num_planes``
+  and never share a satellite.  Rotation migrates every replica's home
+  along with its server.
+* **Degraded reads**: Get KVC / presence probes fall through dead
+  replicas in placement order, charging each failed attempt's timed-out
+  round trip on the same clock the successful fetch completes on -- a
+  degraded fetch *feels* slower, and the router's
+  ``estimate_get_latency_s`` prices the same detours, so routing sees
+  failures before engines do.  A chunk with no live copy is a clean
+  miss: the ``TieredKVManager`` shortens the restored prefix to the
+  longest still-servable boundary and the scheduler recomputes the
+  rest -- churn degrades hit rate, never a request.
+* **Repair**: ``ConstellationKVC.repair()`` re-replicates surviving
+  copies onto live replica homes (run on ``rotate()`` while an attached
+  fault source has live or freshly-applied faults, on heal events, or
+  explicitly); blocks with an unrecoverable chunk are purged and pruned
+  from the radix index.
+* **Accounting**: ``CacheStats.degraded_reads`` / ``lost_blocks`` /
+  ``repaired_chunks`` on the fabric, ``EngineStats.degraded_reads`` /
+  ``lost_blocks`` per replica, all folded by ``EngineCluster.
+  fabric_stats`` and exercised by the ``faulty_fabric`` benchmark (k=2
+  holds the prefix hit rate through mid-serve satellite kills that
+  collapse k=1, with zero failed requests in either case).
+
 Single-replica layering
 =======================
 

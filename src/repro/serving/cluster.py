@@ -264,6 +264,9 @@ class EngineCluster:
                 merged_t.op_latencies_s.extend(
                     xs[round(j * (len(xs) - 1) / (k - 1))]
                     for j in range(k))
+        # fault counters fold in the BASE store's too: repair passes and
+        # purge-at-loss run through the base, not any replica's view
+        base = self.kvc.stats
         return {
             "block_hits": cache.block_hits,
             "block_misses": cache.block_misses,
@@ -275,16 +278,23 @@ class EngineCluster:
             "transport_latency_s": merged_t.latency_percentiles(),
             "l2_wait_s": merged.l2_wait_s,
             "l2_fetch_waits": merged.l2_fetch_waits,
+            "degraded_reads": cache.degraded_reads + base.degraded_reads,
+            "lost_blocks": cache.lost_blocks + base.lost_blocks,
+            "repaired_chunks": cache.repaired_chunks + base.repaired_chunks,
         }
 
     def reset_stats(self) -> None:
-        """Fresh per-replica EngineStats + view cache/transport stats and
-        router assignment state (benchmarks call this between the warmup
-        and the timed run)."""
+        """Fresh per-replica EngineStats + view cache/transport stats,
+        the BASE store's CacheStats (fabric_stats folds its fault
+        counters -- repair passes and loss purges land there, and a
+        faulted warmup must not inflate the measured run), and router
+        assignment state (benchmarks call this between the warmup and
+        the timed run)."""
         for eng in self.engines:
             eng.stats = EngineStats()
         for view in self.views:
             view.stats = CacheStats()
             view.transport.stats = TransportStats()
+        self.kvc.stats = CacheStats()
         self.router.reset()
         self.rotations = 0

@@ -32,6 +32,7 @@ victim and the fabric absorbs it.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -221,7 +222,8 @@ class TieredKVManager:
         self.drain_write_back()
         if self._transport is not None:
             self._transport.last_ready_at = None
-        payload, cached = self.manager.get_cache_tokens(tokens)
+        with self._observe_l2():
+            payload, cached = self.manager.get_cache_tokens(tokens)
         if payload is None or not cached:
             return 0
         # a restore is already a stall point: experience the Get's flight
@@ -253,6 +255,30 @@ class TieredKVManager:
         self.stats.spilled_blocks += added
 
     # -- L2: SkyMemory prefix lookups / write-back ----------------------
+    @contextmanager
+    def _observe_l2(self):
+        """Attribute the fabric's fault counters to this replica: any
+        degraded reads (dead-replica fallthrough) the wrapped L2 call
+        experienced land in ``EngineStats.degraded_reads``, and a
+        block-miss delta -- the radix index pointed at blocks the
+        constellation could no longer serve, so (part of) the prefix
+        falls back to recompute, never an exception -- bumps
+        ``EngineStats.lost_blocks``."""
+        # resolved per call: benchmarks re-point a view's CacheStats
+        # between the warmup and the timed run
+        cs = (None if self.manager is None
+              else getattr(self.manager.cache, "stats", None))
+        if cs is None:
+            yield
+            return
+        degraded0, misses0 = cs.degraded_reads, cs.block_misses
+        try:
+            yield
+        finally:
+            self.stats.degraded_reads += cs.degraded_reads - degraded0
+            if cs.block_misses > misses0:
+                self.stats.lost_blocks += 1
+
     def lookup_prefix(
         self, tokens: list[int]
     ) -> tuple[bytes | None, int, float | None]:
@@ -266,13 +292,20 @@ class TieredKVManager:
         are in hand, but the scheduler must not *use* them before the
         clock passes ``ready_at`` -- it defers the consuming chunk to
         overlap the flight with decode steps, and ``wait_fetch`` settles
-        whatever could not be hidden."""
+        whatever could not be hidden.
+
+        Under constellation faults an unrecoverable block simply
+        shortens (or zeroes) the returned prefix: the KVC manager walks
+        back to the longest still-servable boundary, and the scheduler
+        recomputes the rest -- churn degrades the hit rate, never a
+        request."""
         if self.manager is None:
             return None, 0, None
         self.drain_write_back()
         if self._transport is not None:
             self._transport.last_ready_at = None
-        payload, cached = self.manager.get_cache_tokens(tokens)
+        with self._observe_l2():
+            payload, cached = self.manager.get_cache_tokens(tokens)
         ready_at = None
         if (payload is not None and self._transport is not None
                 and self.clock is not None):

@@ -48,6 +48,13 @@ class EngineStats:
     l2_wait_s: float = 0.0            # virtual seconds blocked on fetches
     l2_fetch_waits: int = 0           # fetches with un-hidden flight time
     l2_deferred_chunks: int = 0       # chunk slots spent overlapping flights
+    # fault tolerance (k-replica constellation under churn): degraded
+    # reads served this replica after falling through dead replicas;
+    # lost_blocks counts L2 lookups/restores where the index pointed at
+    # blocks the constellation could no longer serve (the prefix --
+    # or part of it -- was recomputed instead of crashing)
+    degraded_reads: int = 0
+    lost_blocks: int = 0
     ttft_s: list[float] = field(default_factory=list)   # per request
     itl_s: list[float] = field(default_factory=list)    # per decoded token
     # the subset of itl_s observed by running sequences while an

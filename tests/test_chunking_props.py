@@ -1,0 +1,128 @@
+"""Property tests for ``core.chunking``: split/join, serialization, and
+k-replica placement (hypothesis; each has the seed-level example inline
+so the file still exercises the contract when hypothesis is stubbed)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.chunking import (
+    arrays_to_bytes,
+    bytes_to_arrays,
+    bytes_to_dequantized,
+    chunk_server,
+    dequantize_int8,
+    join_chunks,
+    num_chunks,
+    quantize_int8,
+    quantized_to_bytes,
+    replica_delta,
+    split_chunks,
+)
+
+
+@given(data=st.binary(max_size=8192), chunk=st.integers(1, 1024))
+@settings(max_examples=100, deadline=None)
+def test_split_join_roundtrip(data, chunk):
+    chunks = split_chunks(data, chunk)
+    assert join_chunks(chunks) == data
+    assert all(len(c) <= chunk for c in chunks)
+    # only the final chunk may be ragged (empty payloads keep one
+    # sentinel chunk so the block still exists on a server)
+    assert all(len(c) == chunk for c in chunks[:-1])
+    assert len(chunks) >= 1
+
+
+@given(data=st.binary(max_size=8192), chunk=st.integers(1, 1024))
+@settings(max_examples=100, deadline=None)
+def test_num_chunks_consistent_with_split(data, chunk):
+    assert num_chunks(len(data), chunk) == len(split_chunks(data, chunk))
+
+
+def _arrays(draw_f32=True):
+    """Strategy for lists of small arrays with mixed shapes/dtypes."""
+    dtypes = [np.float32, np.int32] if not draw_f32 else [np.float32]
+    return st.lists(
+        st.tuples(
+            st.sampled_from(dtypes),
+            st.lists(st.integers(0, 5), min_size=0, max_size=3),
+            st.integers(0, 2**32 - 1),
+        ),
+        min_size=0, max_size=4,
+    )
+
+
+def _build(specs):
+    out = []
+    for dt, shape, seed in specs:
+        rng = np.random.default_rng(seed)
+        n = int(np.prod(shape)) if shape else 1
+        a = rng.standard_normal(n).astype(np.float32) * 100
+        out.append(a.astype(dt).reshape(shape))
+    return out
+
+
+@given(specs=_arrays(draw_f32=False))
+@settings(max_examples=60, deadline=None)
+def test_serialize_roundtrip(specs):
+    arrays = _build(specs)
+    back = bytes_to_arrays(arrays_to_bytes(arrays))
+    assert len(back) == len(arrays)
+    for a, b in zip(arrays, back):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(a, b)
+
+
+@given(specs=_arrays())
+@settings(max_examples=60, deadline=None)
+def test_quantized_serialize_roundtrip(specs):
+    """Serialization adds zero error on top of int8 quantization: the
+    wire round trip equals quantize->dequantize applied in memory."""
+    arrays = _build(specs)
+    back = bytes_to_dequantized(quantized_to_bytes(arrays))
+    assert len(back) == len(arrays)
+    for a, b in zip(arrays, back):
+        direct = dequantize_int8(quantize_int8(a))
+        assert np.array_equal(direct, b)
+        # quantization error itself is bounded by one step per channel
+        if a.size:
+            step = np.abs(a).max() / 127.0
+            assert np.abs(direct - np.asarray(a, np.float32)).max() <= (
+                step + 1e-6)
+
+
+@given(
+    num_planes=st.integers(1, 24),
+    sats_per_plane=st.integers(1, 24),
+    k=st.integers(1, 32),
+    base_plane=st.integers(0, 23),
+    base_slot=st.integers(0, 23),
+)
+@settings(max_examples=200, deadline=None)
+def test_replica_placement_never_shares_a_satellite(
+        num_planes, sats_per_plane, k, base_plane, base_slot):
+    """No two replicas of a chunk on the same satellite (while the
+    constellation has enough satellites), and plane-diversity while
+    k <= planes -- for ANY base placement, because the offsets compose
+    with the base modulo the torus."""
+    k = min(k, num_planes * sats_per_plane)
+    homes = set()
+    planes = set()
+    for r in range(k):
+        dp, ds = replica_delta(r, num_planes, sats_per_plane)
+        sat = ((base_plane + dp) % num_planes,
+               (base_slot + ds) % sats_per_plane)
+        homes.add(sat)
+        planes.add(sat[0])
+    assert len(homes) == k
+    if k <= num_planes:
+        assert len(planes) == k
+    # replica 0 is always the base server satellite itself
+    assert replica_delta(0, num_planes, sats_per_plane) == (0, 0)
+
+
+@given(cid=st.integers(0, 10**6), n=st.integers(1, 512))
+@settings(max_examples=60, deadline=None)
+def test_chunk_server_is_base_striping(cid, n):
+    sid = chunk_server(cid, n)
+    assert 0 <= sid < n
+    assert sid == cid % n

@@ -1,0 +1,537 @@
+"""Chaos suite: k-replica placement, churn/outage injection, degraded
+reads, repair, and serving under failure.
+
+The fault-tolerance contract under test:
+
+* replica homes are distinct, plane-diverse satellites; reads fall
+  through dead replicas (charging the failed attempts) and a chunk with
+  no live copy is a *clean* miss -- never an exception, at any layer;
+* a seeded ``FaultPlan`` is deterministic: the same seed produces the
+  same schedule and the same serve results;
+* ``repair`` re-replicates surviving copies, purges unrecoverable
+  blocks (pruning the radix index), and interleaves safely with
+  rotation migration;
+* an ``EngineCluster`` under churn completes every request, in order.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import (
+    ConstellationKVC,
+    ConstellationSpec,
+    FaultInjector,
+    FaultPlan,
+    KVCManager,
+    LosWindow,
+    Sat,
+    SimClock,
+    Strategy,
+    IslTransport,
+    chain_hashes,
+    plan_survivable_kills,
+)
+from repro.core.chunking import arrays_to_bytes
+from repro.core.faults import FaultEvent, FaultState
+from repro.models.model import Model
+from repro.serving import Engine, EngineCluster, Request, SamplingParams
+
+SPEC = ConstellationSpec(15, 15, 550.0)
+
+
+def make_kvc(clock=None, replication=1, **kw):
+    transport = IslTransport(SPEC, clock=clock,
+                             chunk_processing_time_s=1e-4)
+    return ConstellationKVC(
+        SPEC, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+        num_servers=10, chunk_bytes=64, transport=transport,
+        replication=replication, **kw,
+    )
+
+
+def kill_now(kvc, sats):
+    """An armed injector with every kill due -- and applied -- now."""
+    inj = FaultInjector(kvc, FaultPlan.outages(list(sats)))
+    inj.arm()
+    inj.advance()
+    return inj
+
+
+H = b"h" * 32
+PAYLOAD = b"x" * 640          # 10 chunks of 64B: a full server stripe
+
+
+# ---------------------------------------------------------------------------
+# replica placement
+# ---------------------------------------------------------------------------
+
+def test_replica_homes_distinct_and_plane_diverse():
+    kvc = make_kvc(replication=3)
+    for sid in range(kvc.num_servers):
+        homes = [kvc.replica_sat(sid, r) for r in range(3)]
+        assert len(set(homes)) == 3
+        assert len({s.plane for s in homes}) == 3   # k <= planes
+        assert homes[0] == kvc.server_sat(sid)      # replica 0 = base
+
+
+def test_replicated_set_stores_k_copies():
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    assert kvc.get_block(H) == PAYLOAD
+    for cid in range(kvc.directory[H]):
+        sid = cid % kvc.num_servers
+        copies = sum(
+            kvc.store_for(kvc.replica_sat(sid, r)).contains((H, cid))
+            for r in range(2))
+        assert copies == 2
+    assert kvc.stats.degraded_reads == 0            # clean fabric
+
+
+def test_replication_bounds_validated():
+    with pytest.raises(ValueError):
+        make_kvc(replication=0)
+    with pytest.raises(ValueError):
+        make_kvc(replication=SPEC.num_sats + 1)
+
+
+# ---------------------------------------------------------------------------
+# degraded reads / clean misses
+# ---------------------------------------------------------------------------
+
+def test_sat_death_k1_is_clean_miss():
+    kvc = make_kvc(replication=1)
+    kvc.set_block(H, PAYLOAD)
+    inj = kill_now(kvc, [kvc.server_sat(3)])
+    assert kvc.get_block(H) is None                 # no exception
+    assert kvc.stats.block_misses == 1
+    assert inj.stats.chunks_dropped == 1
+    # the home is merely dead, not proven empty: directory keeps the
+    # entry for a possible (it will not come) recovery
+    assert H in kvc.directory
+    assert kvc.stats.lost_blocks == 0
+    # chunk-0 server death makes presence probes miss cleanly too
+    kill_now(kvc, [kvc.server_sat(0)])
+    assert kvc.has_block(H) is False
+    assert kvc.lookup_longest([H]) == 0
+
+
+def test_sat_death_k2_degraded_read_charges_detour():
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    kvc.get_block(H)
+    clean_lat = kvc.transport.stats.last_latency_s
+    kill_now(kvc, [kvc.server_sat(3)])
+    assert kvc.get_block(H) == PAYLOAD              # replica 1 serves
+    assert kvc.stats.degraded_reads == 1
+    # the failed attempt's timed-out round trip is experienced
+    assert kvc.transport.stats.last_latency_s > clean_lat
+    # presence probes degrade the same way when chunk 0's server dies
+    kill_now(kvc, [kvc.server_sat(0)])
+    d0 = kvc.stats.degraded_reads
+    assert kvc.has_block(H) is True
+    assert kvc.stats.degraded_reads == d0 + 1
+
+
+def test_estimate_get_latency_prices_dead_replica_detours():
+    kvc = make_kvc(replication=2)
+    anchor = kvc.center
+    # the estimate is a max over chunk servers, so kill the dominant one:
+    # its degraded path (timed-out probe + replica-1 fetch) must raise it
+    worst_sid = max(
+        range(kvc.num_servers),
+        key=lambda sid: kvc.transport.op_latency_s(
+            anchor, kvc.server_sat(sid), kvc.chunk_bytes, round_trip=True))
+    before = kvc.estimate_get_latency_s(anchor)
+    kill_now(kvc, [kvc.server_sat(worst_sid)])
+    assert kvc.estimate_get_latency_s(anchor) > before
+
+
+def test_get_in_flight_when_serving_sat_dies_mid_get():
+    """A Get's payload is captured at issue; the flight completes on the
+    clock.  Killing the serving satellite between issue and completion
+    must not corrupt the in-flight payload, and the *next* Get falls
+    through to the surviving replica (k=2) or misses cleanly (k=1)."""
+    for k, expect in ((2, PAYLOAD), (1, None)):
+        clock = SimClock(rate=200.0)
+        kvc = make_kvc(clock=clock, replication=k)
+        kvc.set_block(H, PAYLOAD)
+        payload = kvc.get_block(H)                  # issued; in flight
+        ready_at = kvc.transport.last_ready_at
+        assert ready_at is not None and ready_at > clock.now()
+        kill_now(kvc, [kvc.server_sat(3)])          # dies mid-flight
+        clock.wait_until(ready_at)
+        assert payload == PAYLOAD                   # flight unaffected
+        assert kvc.get_block(H) == expect           # next Get degrades
+
+
+def test_link_outage_blocks_route_then_heals():
+    kvc = make_kvc(replication=1)
+    kvc.set_block(H, PAYLOAD)
+    # sever the last greedy hop into chunk 3's server: the op's route is
+    # down but the satellite (and its data) is alive
+    target = kvc.server_sat(3)
+    path = SPEC.greedy_route(kvc.center, target)
+    inj = FaultInjector(kvc, FaultPlan(
+        [FaultEvent(at_s=0.0, action="kill", link=(path[-2], path[-1]))]))
+    inj.arm()
+    assert kvc.get_block(H) is None                 # unreachable: miss
+    assert H in kvc.directory                       # ...but NOT purged
+    inj.state.heal_link(path[-2], path[-1])
+    assert kvc.get_block(H) == PAYLOAD              # data survived
+
+
+def test_failed_set_indexes_no_phantom_and_leaves_no_orphans():
+    """When a Set cannot land one copy of some chunk, the KVC manager
+    must not index the hash (a phantom entry no repair pass could ever
+    prune -- the directory never learned of the block) and the chunks
+    that did land must not linger as unindexed orphans."""
+    kvc = make_kvc(replication=1)
+    mgr = KVCManager(lambda p: [ord(c) % 96 for c in p],
+                     lambda t, p, n: arrays_to_bytes(
+                         [np.cumsum(np.asarray(t, np.int64))]),
+                     kvc, block_size=4)
+    kill_now(kvc, [kvc.server_sat(0)])      # chunk 0's home: all Sets fail
+    assert mgr.add_blocks("abcdefgh") == 0
+    hashes = chain_hashes(mgr.tokenize("abcdefgh"), 4)
+    assert mgr.index.longest_cached_prefix(hashes)[0] == 0
+    assert kvc.directory == {}
+    assert all(len(store) == 0 for store in kvc._stores.values())
+    assert mgr.get_cache("abcdefgh") == (None, 0)
+
+
+def test_repair_on_heal_rereplicates_via_op_tick():
+    """``repair_on_heal``: the heal event, applied from inside a chunk
+    op's fault tick, triggers a repair pass (outside the injector lock)
+    that refills the healed home."""
+    clock = SimClock(rate=500.0)
+    kvc = make_kvc(clock=clock, replication=2)
+    kvc.set_block(H, PAYLOAD)
+    inj = FaultInjector(
+        kvc,
+        FaultPlan.outages([kvc.server_sat(3)], kill_at_s=0.0,
+                          downtime_s=0.2),
+        repair_on_heal=True)
+    inj.arm()
+    inj.advance()
+    assert kvc.get_block(H) == PAYLOAD      # degraded meanwhile
+    clock.wait_until(clock.now() + 0.3)
+    assert kvc.get_block(H) == PAYLOAD      # this op ticks the heal in
+    assert inj.stats.sat_heals == 1
+    assert kvc.stats.repaired_chunks >= 1
+    assert kvc.store_for(kvc.server_sat(3)).contains((H, 3))
+
+
+def test_set_block_with_no_landing_copy_is_not_registered():
+    """A Set whose chunk could not land a single copy must not register
+    the block: the directory would otherwise claim data that never
+    existed (and repair would later count it as 'lost')."""
+    kvc = make_kvc(replication=1)
+    kill_now(kvc, [kvc.server_sat(4)])      # one stripe member dead
+    kvc.set_block(H, PAYLOAD)
+    assert H not in kvc.directory
+    assert kvc.stats.blocks_set == 0
+    assert kvc.get_block(H) is None
+    # with k=2 the same outage still lands every chunk somewhere
+    kvc = make_kvc(replication=2)
+    kill_now(kvc, [kvc.server_sat(4)])
+    kvc.set_block(H, PAYLOAD)
+    assert kvc.directory[H] == 10
+    assert kvc.get_block(H) == PAYLOAD
+
+
+# ---------------------------------------------------------------------------
+# repair / rotation interleavings
+# ---------------------------------------------------------------------------
+
+def test_migration_into_dead_destination_does_not_resurrect():
+    """A migration whose destination is dead drops the copies in transit
+    -- writing them would make data appear on heal that the dead
+    satellite could never have received.  Surviving replicas keep the
+    block readable and repair restores the full set afterwards."""
+    from repro.core import plan_migration
+
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    new = kvc.window
+    for _ in range(5):
+        new = new.shifted(SPEC, d_slot=1)
+    moves = plan_migration(SPEC, kvc.window, new, kvc.server_map)
+    assert moves
+    mv = moves[0]
+    inj = kill_now(kvc, [mv.dst])
+    kvc.execute_move(mv)
+    assert len(kvc.store_for(mv.dst)) == 0  # nothing written while dead
+    inj.state.heal_sat(mv.dst)
+    assert len(kvc.store_for(mv.dst)) == 0  # and nothing resurrected
+    assert kvc.get_block(H) == PAYLOAD      # replica homes still serve
+    assert kvc.stats.degraded_reads >= 1
+    assert kvc.repair() >= 1                # healed home is refilled
+    assert len(kvc.store_for(mv.dst)) > 0
+
+
+def test_repair_is_readonly_when_replica_sets_are_full():
+    """A repair pass over a healthy replicated fabric copies nothing and
+    -- crucially for the shared LRU -- reads nothing: it must not stamp
+    every block hot and scramble eviction recency."""
+    kvc = make_kvc(replication=2)
+    from repro.core.eviction import LRUClock
+
+    policy = LRUClock()
+    kvc.adopt_policy(policy)
+    kvc.set_block(H, PAYLOAD)
+    before = policy.recency(H)
+    assert kvc.repair() == 0
+    assert policy.recency(H) == before
+
+def test_repair_restores_full_replica_set():
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    inj = kill_now(kvc, [kvc.server_sat(3)])
+    assert kvc.get_block(H) == PAYLOAD              # degraded
+    inj.state.heal_sat(kvc.server_sat(3))           # back, but empty
+    repaired = kvc.repair()
+    assert repaired >= 1
+    assert kvc.stats.repaired_chunks == repaired
+    d0 = kvc.stats.degraded_reads
+    assert kvc.get_block(H) == PAYLOAD
+    assert kvc.stats.degraded_reads == d0           # clean again
+    assert kvc.sweep_incomplete() == 0
+
+
+def test_repair_purges_unrecoverable_and_prunes_index():
+    kvc = make_kvc(replication=1)
+    mgr = KVCManager(lambda p: [ord(c) % 96 for c in p],
+                     lambda t, p, n: arrays_to_bytes(
+                         [np.cumsum(np.asarray(t, np.int64))]),
+                     kvc, block_size=4)
+    mgr.add_blocks("abcdefgh")                      # 2 blocks
+    hashes = chain_hashes(mgr.tokenize("abcdefgh"), 4)
+    assert mgr.index.longest_cached_prefix(hashes)[0] == 2
+    kill_now(kvc, list(kvc.server_map))             # total loss
+    assert kvc.repair() == 0
+    assert kvc.stats.lost_blocks == 2
+    assert kvc.directory == {}
+    # the radix index was pruned through on_block_lost: a lookup is a
+    # clean miss, and re-adding recomputes without tripping over state
+    assert mgr.get_cache("abcdefgh") == (None, 0)
+    assert mgr.index.longest_cached_prefix(hashes)[0] == 0
+
+
+def test_repair_then_rotate_interleavings():
+    """Repair and rotation migration compose in any order: blocks stay
+    readable, the directory stays consistent, and a rotation step itself
+    repairs churn losses (replica homes follow their servers)."""
+    # (a) kill -> heal -> repair -> rotate
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    inj = kill_now(kvc, [kvc.server_sat(2)])
+    inj.state.heal_sat(kvc.server_sat(2))
+    assert kvc.repair() >= 1
+    kvc.rotate(3)
+    assert kvc.get_block(H) == PAYLOAD
+    assert kvc.sweep_incomplete() == 0
+
+    # (b) kill -> rotate while dead: migration drains the (empty) dead
+    # store; once the server's new home is alive, rotate's own repair
+    # pass re-replicates from the surviving copies
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    dead = kvc.server_sat(2)
+    kill_now(kvc, [dead])
+    kvc.rotate(6)                                   # server leaves `dead`
+    assert kvc.server_sat(2) != dead
+    assert kvc.get_block(H) == PAYLOAD
+    assert kvc.stats.repaired_chunks >= 1
+    assert kvc.sweep_incomplete() == 0
+
+    # (c) a purge racing the repair/rotate machinery stays consistent
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    h2 = b"i" * 32
+    kvc.set_block(h2, b"y" * 320)
+    kvc.purge_block(h2)
+    kvc.rotate(2)
+    assert kvc.repair() == 0
+    assert h2 not in kvc.directory
+    assert kvc.get_block(H) == PAYLOAD
+    assert kvc.get_block(h2) is None
+
+
+# ---------------------------------------------------------------------------
+# fault plans / injector determinism
+# ---------------------------------------------------------------------------
+
+def test_seeded_churn_is_deterministic():
+    sats = list(SPEC.all_sats())[:40]
+    mk = lambda seed: FaultPlan.seeded_churn(  # noqa: E731
+        sats, seed=seed, n_outages=5, window_s=2.0, downtime_s=1.0)
+    assert mk(7).events == mk(7).events
+    assert mk(7).events != mk(8).events
+    plan = mk(7)
+    assert [e.at_s for e in plan.events] == sorted(
+        e.at_s for e in plan.events)
+    assert sum(e.action == "kill" for e in plan.events) == 5
+    assert sum(e.action == "heal" for e in plan.events) == 5
+
+
+def test_injector_fires_on_the_fabric_clock():
+    clock = SimClock(rate=500.0)
+    kvc = make_kvc(clock=clock, replication=1)
+    kvc.set_block(H, PAYLOAD)
+    inj = FaultInjector(kvc, FaultPlan.outages(
+        [kvc.server_sat(3)], kill_at_s=0.5))
+    inj.arm()
+    t0 = clock.now()
+    assert kvc.get_block(H) == PAYLOAD              # not yet due
+    clock.wait_until(t0 + 0.6)
+    assert kvc.get_block(H) is None                 # op ticked the plan
+    assert inj.stats.sat_kills == 1
+
+
+def test_injector_drain_applies_outstanding_heals():
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    inj = FaultInjector(kvc, FaultPlan.outages(
+        [kvc.server_sat(1)], kill_at_s=0.0, downtime_s=1e9))
+    inj.arm()
+    kvc.get_block(H)
+    assert not inj.state.sat_alive(kvc.server_sat(1))
+    inj.drain()
+    assert inj.state.sat_alive(kvc.server_sat(1))
+    assert kvc.repair() >= 1
+
+
+def test_survivable_kills_never_complete_a_home_set():
+    kvc = make_kvc(replication=2)
+    kills = set(plan_survivable_kills(kvc, 4, seed=3))
+    assert len(kills) >= 1
+    for sid in range(kvc.num_servers):
+        homes = {kvc.replica_sat(sid, r) for r in range(2)}
+        assert not homes <= kills
+    assert plan_survivable_kills(kvc, 4, seed=3) == plan_survivable_kills(
+        kvc, 4, seed=3)
+
+
+def test_fault_state_copy_on_write_reads():
+    st = FaultState()
+    a, b = Sat(0, 0), Sat(0, 1)
+    st.kill_link(a, b)
+    assert not st.link_alive(a, b) and st.link_alive(b, Sat(0, 2))
+    snapshot = st.dead_sats
+    st.kill_sat(a)
+    assert snapshot == frozenset()                  # old view unchanged
+    assert not st.sat_alive(a)
+    st.heal_sat(a)
+    st.heal_link(a, b)
+    assert st.clean
+
+
+# ---------------------------------------------------------------------------
+# serving under churn (tiny model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, kvc):
+    return Engine(model, params, kvc=kvc, block_size=16,
+                  max_seq_len=256, max_batch=2)
+
+
+def _reqs(n=4, groups=2, max_new=5):
+    base = "fault tolerant constellation keeps serving under churn. "
+    return [Request(prompt=f"[doc {i % groups}] " + base * 2,
+                    sampling=SamplingParams(max_new_tokens=max_new))
+            for i in range(n)]
+
+
+def test_engine_recomputes_lost_blocks_never_crashes(dense_setup):
+    """k=1 total loss between two serves of the same prompt: the second
+    serve must recompute (cached_tokens == 0), complete, and emit the
+    same tokens as an unfaulted engine."""
+    _, model, params = dense_setup
+    eng_ref = _engine(model, params, make_kvc(replication=1))
+    ref = [eng_ref.generate(_reqs(n=2, groups=1)) for _ in range(2)][1]
+
+    kvc = make_kvc(replication=1)
+    eng = _engine(model, params, kvc)
+    eng.generate(_reqs(n=2, groups=1))              # populate + compile
+    kill_now(kvc, list(kvc.server_map))
+    out = eng.generate(_reqs(n=2, groups=1))
+    assert all(len(r.token_ids) > 0 for r in out)
+    assert all(r.cached_tokens == 0 for r in out)
+    assert eng.stats.lost_blocks >= 1
+    assert [r.token_ids for r in out] == [r.token_ids for r in ref]
+
+
+def test_engine_degraded_hits_under_partial_outage(dense_setup):
+    """k=2 with a few chunk servers dead: lookups still hit through the
+    surviving replicas and the engine attributes the degraded reads."""
+    _, model, params = dense_setup
+    kvc = make_kvc(replication=2)
+    eng = _engine(model, params, kvc)
+    eng.generate(_reqs(n=2, groups=1))              # populate + compile
+    kill_now(kvc, plan_survivable_kills(kvc, 3, seed=5))
+    out = eng.generate(_reqs(n=2, groups=1))
+    assert all(len(r.token_ids) > 0 for r in out)
+    assert sum(r.cached_tokens for r in out) > 0    # still hitting
+    assert eng.stats.degraded_reads >= 1
+
+
+def test_cluster_chaos_serve_in_order(dense_setup):
+    """Cluster serve with kills landing mid-serve on the fabric clock:
+    every request completes, in request order, and post-run drain+repair
+    settles the fabric."""
+    _, model, params = dense_setup
+    clock = SimClock(rate=5.0)
+    kvc = make_kvc(clock=clock, replication=2)
+    cluster = EngineCluster(
+        model, params, kvc, num_replicas=2, block_size=16,
+        max_seq_len=256, max_batch=4)
+    reqs = _reqs(n=6, groups=2)
+    cluster.serve(reqs, parallel=False)             # populate + compile
+    cluster.reset_stats()
+    inj = FaultInjector(kvc, FaultPlan.outages(
+        plan_survivable_kills(kvc, 3, seed=5),
+        kill_at_s=0.0, stagger_s=0.05, downtime_s=1e9))
+    inj.arm()
+    out = cluster.serve(reqs, parallel=True)
+    assert len(out) == len(reqs)
+    for req, res in zip(reqs, out):
+        assert res.request_id == req.request_id
+        assert len(res.token_ids) > 0
+    fabric = cluster.fabric_stats()
+    assert fabric["degraded_reads"] >= 1
+    inj.drain()
+    assert kvc.repair() >= 1
+    assert cluster.fabric_stats()["repaired_chunks"] >= 1
+    assert kvc.sweep_incomplete() == 0
+
+
+def test_chaos_same_seed_same_serve_results(dense_setup):
+    """The chaos harness is reproducible: the same FaultPlan seed over
+    the same stream yields identical serve results."""
+    _, model, params = dense_setup
+
+    def run():
+        kvc = make_kvc(replication=2)
+        cluster = EngineCluster(
+            model, params, kvc, num_replicas=2, router_seed=0,
+            block_size=16, max_seq_len=256, max_batch=4)
+        reqs = _reqs(n=6, groups=2)
+        cluster.serve(reqs, parallel=False)
+        inj = FaultInjector(kvc, FaultPlan.seeded_churn(
+            plan_survivable_kills(kvc, 4, seed=11), seed=11,
+            n_outages=3, window_s=0.0))             # due at arm time
+        inj.arm()
+        out = cluster.serve(reqs, parallel=False)
+        return [(r.request_id is not None, tuple(r.token_ids),
+                 r.cached_tokens) for r in out]
+
+    assert run() == run()

@@ -1,0 +1,114 @@
+"""``core.migration.plan_migration`` invariants (PR-4 left these
+untested): multi-step window shifts land every server inside the new
+window, per-plane moves never collide, and a purge racing a planned
+move leaves the directory consistent."""
+import pytest
+
+from repro.core import (
+    ConstellationKVC,
+    ConstellationSpec,
+    LosWindow,
+    Sat,
+    Strategy,
+    migration_planes,
+    plan_migration,
+)
+
+SPEC = ConstellationSpec(15, 15, 550.0)
+WINDOW = LosWindow(Sat(7, 7), 9, 9)
+
+
+def make_kvc(**kw):
+    return ConstellationKVC(SPEC, WINDOW, Strategy.ROTATION_HOP,
+                            num_servers=10, chunk_bytes=64, **kw)
+
+
+@pytest.mark.parametrize("d_slot", [1, 2, 5, 9, 14, 15, 23])
+def test_multi_step_shift_lands_every_server_in_window(d_slot):
+    kvc = make_kvc()
+    old = kvc.window
+    new = old
+    for _ in range(d_slot):
+        new = new.shifted(SPEC, d_slot=1)
+    moves = plan_migration(SPEC, old, new, kvc.server_map)
+    moved = {mv.server_id - 1: mv.dst for mv in moves}
+    for sid0, sat in enumerate(kvc.server_map):
+        final = moved.get(sid0, sat)
+        assert new.contains(SPEC, final), (d_slot, sid0, final)
+    # servers already inside the shifted window are never moved
+    for mv in moves:
+        assert not new.contains(SPEC, mv.src)
+
+
+@pytest.mark.parametrize("d_slot", [1, 3, 9])
+def test_per_plane_moves_never_collide(d_slot):
+    """Within each orbital plane the parallel moves must be pairwise
+    disjoint -- distinct destinations, and no destination stealing the
+    satellite of a server that did not move -- so the final server map
+    stays a bijection onto distinct satellites."""
+    kvc = make_kvc()
+    old = kvc.window
+    new = old
+    for _ in range(d_slot):
+        new = new.shifted(SPEC, d_slot=1)
+    moves = plan_migration(SPEC, old, new, kvc.server_map)
+    for plane, group in migration_planes(moves).items():
+        assert all(mv.src.plane == mv.dst.plane == plane for mv in group)
+        dsts = [mv.dst for mv in group]
+        assert len(set(dsts)) == len(dsts)
+    # globally: applying the moves keeps all server sats distinct
+    final = list(kvc.server_map)
+    for mv in moves:
+        final[mv.server_id - 1] = mv.dst
+    assert len(set(final)) == len(final)
+
+
+def test_purge_racing_planned_move_keeps_directory_consistent():
+    """A block purged between planning and executing a migration (a
+    capacity eviction's gossip can land exactly there): executing the
+    stale plan must neither resurrect the purged block nor corrupt the
+    surviving ones."""
+    kvc = make_kvc()
+    h_keep, h_gone = b"k" * 32, b"g" * 32
+    kvc.set_block(h_keep, b"x" * 640)
+    kvc.set_block(h_gone, b"y" * 640)
+    new = kvc.window
+    for _ in range(5):                      # far enough to evict servers
+        new = new.shifted(SPEC, d_slot=1)
+    moves = plan_migration(SPEC, kvc.window, new, kvc.server_map)
+    assert moves
+    kvc.purge_block(h_gone)                 # the race: purge after plan
+    for mv in moves:
+        kvc.execute_move(mv)
+    kvc.window = new
+    assert h_gone not in kvc.directory
+    assert kvc.get_block(h_gone) is None
+    assert kvc.get_block(h_keep) == b"x" * 640
+    assert kvc.sweep_incomplete() == 0
+    # no orphan chunks of the purged block survived the move
+    for sat in SPEC.all_sats():
+        store = kvc._stores.get(sat)
+        if store is not None:
+            assert all(key[0] != h_gone for key in store.keys())
+
+
+def test_purge_racing_planned_move_replicated():
+    """Same race under k=2 replication: the selective per-server move
+    path must stay consistent too."""
+    kvc = make_kvc(replication=2)
+    h_keep, h_gone = b"k" * 32, b"g" * 32
+    kvc.set_block(h_keep, b"x" * 640)
+    kvc.set_block(h_gone, b"y" * 640)
+    new = kvc.window
+    for _ in range(5):
+        new = new.shifted(SPEC, d_slot=1)
+    moves = plan_migration(SPEC, kvc.window, new, kvc.server_map)
+    assert moves
+    kvc.purge_block(h_gone)
+    for mv in moves:
+        kvc.execute_move(mv)
+    kvc.window = new
+    assert kvc.get_block(h_keep) == b"x" * 640
+    assert kvc.get_block(h_gone) is None
+    assert kvc.repair() == 0                # full replica sets survived
+    assert kvc.sweep_incomplete() == 0
