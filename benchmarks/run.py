@@ -406,6 +406,9 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
     ff_rows, ff_record = _faulty_fabric(model, params, smoke=smoke)
     rows.extend(ff_rows)
     record["faulty_fabric"] = ff_record
+    df_rows, df_record = _degraded_fabric(model, params, smoke=smoke)
+    rows.extend(df_rows)
+    record["degraded_fabric"] = df_record
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)
@@ -420,6 +423,9 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
     facc = record["faulty_fabric"]["acceptance"]
     if not all(facc.values()):
         raise SystemExit(f"faulty_fabric acceptance failed: {facc}")
+    dacc = record["degraded_fabric"]["acceptance"]
+    if not all(dacc.values()):
+        raise SystemExit(f"degraded_fabric acceptance failed: {dacc}")
     return rows
 
 
@@ -911,6 +917,190 @@ def _faulty_fabric(model, params, *, smoke: bool):
         f"identical={identical}",
     ), (
         "faulty_fabric[acceptance]", 0.0,
+        " ".join(f"{k}={v}" for k, v in acceptance.items()),
+    )]
+    return rows, record
+
+
+def _degraded_fabric(model, params, *, smoke: bool):
+    """Graceful degradation end-to-end: the faulty-fabric stream over a
+    k=2 cluster whose kill schedule deliberately COMPLETES a replica
+    home pair (PR-5's unrecoverable loss) while three of the four ISLs
+    around another chunk server stay severed for the whole run.  With a
+    ``GroundStationTier`` attached (write-through) every chunk op still
+    completes -- link outages grade into rerouted detours, orbital
+    losses fall through to ground -- nothing is purged, and the end-of-
+    run repair re-replicates the lost blocks from ground instead of
+    counting them lost.  The same schedule without a ground tier
+    degrades further: blocks purge, prefixes recompute, hit rate drops.
+    Every request completes with tokens byte-identical to the fault-free
+    run in all three scenarios -- degradation costs latency and hit
+    rate, never answers."""
+    from repro.core import (
+        ConstellationKVC, ConstellationSpec, FaultInjector, FaultPlan,
+        GroundStationTier, IslTransport, LosWindow, Sat, SimClock,
+        Strategy,
+    )
+    from repro.core.faults import FaultEvent
+    from repro.serving import EngineCluster, Request, SamplingParams
+
+    max_seq_len = 512
+    block = 128
+    groups = 5
+    dup = 4
+    gen_new = 4 if smoke else 8
+    filler = ("SkyMemory grades degradation instead of failing: dead ISL "
+              "links reroute into detours, dead satellites fall through "
+              "to the durable ground tier, and repair promotes the lost "
+              "blocks back into orbit when their homes heal. ")
+    spec = ConstellationSpec(15, 15, 550.0)
+
+    def stream(rep: int):
+        return [
+            Request(prompt=f"[df rep {rep} doc {i // dup}] " + filler * 2,
+                    sampling=SamplingParams(max_new_tokens=gen_new))
+            for i in range(groups * dup)
+        ]
+
+    def build(with_ground: bool):
+        clock = SimClock(rate=5.0)
+        kvc = ConstellationKVC(
+            spec, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+            num_servers=10, chunk_bytes=6 * 1024, replication=2,
+            transport=IslTransport(spec, clock=clock,
+                                   chunk_processing_time_s=2e-4,
+                                   probe_timeout_s=5e-3),
+            ground=(GroundStationTier(spec, processing_time_s=1e-3)
+                    if with_ground else None),
+            ground_write="all" if with_ground else "none",
+        )
+        cluster = EngineCluster(
+            model, params, kvc, num_replicas=2, policy="prefix_affinity",
+            router_seed=0, block_size=block, max_seq_len=max_seq_len,
+            max_batch=4,
+        )
+        for i, eng in enumerate(cluster.engines):   # warm compiles
+            eng.generate([Request(prompt=f"[df warm {i}] " + filler,
+                                  sampling=SamplingParams(max_new_tokens=2))])
+        cluster.serve(stream(0))    # warm the orbital cache (and ground)
+        cluster.reset_stats()
+        return cluster, kvc
+
+    def fault_plan(kvc) -> FaultPlan:
+        events = []
+        # >= 2 satellite kills that COMPLETE server 3's replica home
+        # pair: chunk 3 of every cached block loses its last orbital
+        # copy -- PR-5's unrecoverable loss, staged deliberately and
+        # sustained for the whole serve.  The heal events land at the
+        # end-of-run drain (wiped homes come back alive), giving the
+        # final repair pass live destinations to re-replicate onto.
+        for i, sat in enumerate(
+                kvc.replica_sat(3, r) for r in range(2)):
+            events.append(FaultEvent(at_s=i * 0.1, action="kill", sat=sat))
+            events.append(FaultEvent(at_s=1e9, action="heal", sat=sat))
+        # sustained link outages: sever three of the four ISLs around
+        # two other chunk servers' homes for the whole run -- every op
+        # touching them must detour (never fail; one live link remains)
+        for hub in (kvc.replica_sat(5, 0), kvc.replica_sat(8, 0)):
+            for dp, ds in ((1, 0), (-1, 0), (0, 1)):
+                nb = spec.wrap(Sat(hub.plane + dp, hub.slot + ds))
+                events.append(
+                    FaultEvent(at_s=0.0, action="kill", link=(hub, nb)))
+        return FaultPlan(events)
+
+    def measure(with_ground: bool, faulted: bool) -> dict:
+        cluster, kvc = build(with_ground)
+        inj = None
+        if faulted:
+            inj = FaultInjector(kvc, fault_plan(kvc))
+            inj.arm()
+        t0 = time.perf_counter()
+        out = cluster.serve(stream(1))
+        wall = time.perf_counter() - t0
+        merged = cluster.merged_stats()
+        run = {
+            "tokens_per_s": sum(len(r.token_ids) for r in out) / wall,
+            "requests": len(out),
+            "completed": sum(1 for r in out if len(r.token_ids) > 0),
+            "cached_tokens": merged.cached_tokens,
+            "engine_lost_block_lookups": merged.lost_blocks,
+            "l2_wait_s": merged.l2_wait_s,
+            "token_ids": [list(r.token_ids) for r in out],
+        }
+        if inj is not None:
+            run["sat_kills"] = inj.stats.sat_kills
+            run["link_kills"] = inj.stats.link_kills
+            inj.drain()                      # outstanding heals land
+            run["repaired_chunks"] = kvc.repair()
+        # fabric counters AFTER repair: purge-at-loss and repair-from-
+        # ground land on the base store, data-plane hits on the views
+        fabric = cluster.fabric_stats()
+        run.update({
+            "prefix_hit_rate": fabric["prefix_hit_rate"],
+            "degraded_reads": fabric["degraded_reads"],
+            "detoured_ops": fabric["detoured_ops"],
+            "detour_hops": fabric["detour_hops"],
+            "ground_hits": fabric["ground_hits"],
+            "lost_blocks": fabric["lost_blocks"],
+            "repaired_from_ground": fabric["repaired_from_ground"],
+        })
+        return run
+
+    baseline = measure(with_ground=True, faulted=False)
+    grounded = measure(with_ground=True, faulted=True)
+    bare = measure(with_ground=False, faulted=True)
+
+    base_hit = baseline["prefix_hit_rate"]
+    n_reqs = groups * dup
+    identical = all(run["token_ids"] == baseline["token_ids"]
+                    for run in (grounded, bare))
+    acceptance = {
+        # graceful, not cliff-shaped: every op completed via detour or
+        # ground -- nothing failed, nothing purged, nothing recomputed
+        "zero_failed_chunk_ops_with_ground":
+            grounded["lost_blocks"] == 0
+            and grounded["engine_lost_block_lookups"] == 0,
+        "all_requests_complete": all(
+            run["completed"] == n_reqs
+            for run in (baseline, grounded, bare)),
+        "link_outages_detour_not_fail":
+            grounded["detoured_ops"] > 0 and bare["detoured_ops"] > 0,
+        "ground_serves_orbital_losses": grounded["ground_hits"] > 0,
+        # >= 90% of PR-5's lost blocks become repaired_from_ground
+        "lost_blocks_become_repaired_from_ground":
+            bare["lost_blocks"] > 0
+            and grounded["repaired_from_ground"]
+            >= 0.9 * bare["lost_blocks"],
+        "hit_rate_holds_70pct_with_ground":
+            grounded["prefix_hit_rate"] >= 0.7 * base_hit,
+        "no_ground_degrades_further":
+            bare["prefix_hit_rate"] < grounded["prefix_hit_rate"],
+        "outputs_byte_identical_to_fault_free": identical,
+    }
+    record = {
+        "groups": groups, "dup_per_group": dup, "replicas": 2,
+        "replication": 2, "sat_kills": 2, "link_kills": 6,
+        "unfaulted_prefix_hit_rate": base_hit,
+        "unfaulted": {k: v for k, v in baseline.items()
+                      if k != "token_ids"},
+        "faulted_ground": {k: v for k, v in grounded.items()
+                           if k != "token_ids"},
+        "faulted_no_ground": {k: v for k, v in bare.items()
+                              if k != "token_ids"},
+        "acceptance": acceptance,
+    }
+    rows = [(
+        "degraded_fabric", 0.0,
+        f"unfaulted hit={base_hit*100:.0f}% | ground under 2 kills + 6 "
+        f"link cuts: hit={grounded['prefix_hit_rate']*100:.0f}% "
+        f"detours={grounded['detoured_ops']} "
+        f"ground_hits={grounded['ground_hits']} "
+        f"repaired_from_ground={grounded['repaired_from_ground']} "
+        f"lost={grounded['lost_blocks']} | no-ground: "
+        f"hit={bare['prefix_hit_rate']*100:.0f}% "
+        f"lost={bare['lost_blocks']} | identical={identical}",
+    ), (
+        "degraded_fabric[acceptance]", 0.0,
         " ".join(f"{k}={v}" for k, v in acceptance.items()),
     )]
     return rows, record

@@ -26,10 +26,18 @@ depth by default so the demo runs in ~a minute on CPU) from an
   flight: reads fall through the dead replicas (``degraded_reads``),
   unrecoverable blocks recompute instead of failing (``lost_blocks``),
   and the post-run repair pass re-replicates (``repaired_chunks``).
+* **Graceful degradation** -- ``--degrade-links N`` severs ISLs on the
+  greedy routes into N chunk servers for the whole run: ops complete
+  over rerouted detours (``detoured_ops`` / ``detour_hops``) instead of
+  failing.  ``--ground-stations N`` attaches the durable ground segment
+  below the constellation: orbital losses fall through to ground
+  (``ground_hits``) and the post-run repair re-replicates them back
+  into orbit (``repaired_from_ground``) instead of purging.
 
 Run: PYTHONPATH=src python examples/serve_skymemory.py
      [--full] [--replicas N] [--requests N] [--policy random]
-     [--replication K] [--outages N]
+     [--replication K] [--outages N] [--degrade-links N]
+     [--ground-stations N]
 """
 import argparse
 import sys
@@ -45,6 +53,7 @@ from repro.core import (  # noqa: E402
     ConstellationSpec,
     FaultInjector,
     FaultPlan,
+    GroundStationTier,
     IslTransport,
     LosWindow,
     Sat,
@@ -52,6 +61,7 @@ from repro.core import (  # noqa: E402
     Strategy,
     plan_survivable_kills,
 )
+from repro.core.faults import FaultEvent  # noqa: E402
 from repro.models.model import Model  # noqa: E402
 from repro.serving import (  # noqa: E402
     EngineCluster,
@@ -80,6 +90,12 @@ def main() -> None:
                     help="copies of every chunk (plane-diverse homes)")
     ap.add_argument("--outages", type=int, default=0,
                     help="chunk-server satellites killed mid-serve")
+    ap.add_argument("--degrade-links", type=int, default=0,
+                    help="chunk servers whose greedy-route ISL is cut "
+                         "for the whole run (ops detour, never fail)")
+    ap.add_argument("--ground-stations", type=int, default=0,
+                    help="attach a durable ground segment of N stations "
+                         "under the LOS window (0 = orbit only)")
     args = ap.parse_args()
 
     cfg = get_config("skymemory-tinyllama")
@@ -96,13 +112,26 @@ def main() -> None:
     # (rate 10 = ten virtual seconds per wall second, so multi-hop ISL
     # flights are experienced without dominating a CPU demo)
     clock = SimClock(rate=10.0)
+    # the ground segment: one durable tier under the LOS window (N
+    # stations pool into one uplink-priced store; more stations = more
+    # aggregate processing headroom, modeled as lower per-op time)
+    ground = None
+    if args.ground_stations > 0:
+        ground = GroundStationTier(
+            spec, processing_time_s=1e-3 / args.ground_stations)
     kvc = ConstellationKVC(
         spec, LosWindow(Sat(2, 9), 5, 5), Strategy.ROTATION_HOP,
         num_servers=10, chunk_bytes=6 * 1024,
         replication=args.replication,
         transport=IslTransport(spec, clock=clock,
-                               chunk_processing_time_s=2e-4),
+                               chunk_processing_time_s=2e-4,
+                               probe_timeout_s=5e-3),
+        ground=ground, ground_write="all" if ground else "none",
     )
+    if ground is not None:
+        print(f"ground segment: {args.ground_stations} station(s) under "
+              f"the LOS window, write-through (uplink "
+              f"{spec.uplink_latency_s()*1e3:.1f}ms one-way)")
     # block_size doubles as each replica's L0 page size, so blocks
     # fetched from the shared constellation drop straight into pool
     # pages; the orbital rotation ticker rotates the LOS window every 2
@@ -131,14 +160,30 @@ def main() -> None:
                 sampling=sp)
         for i in range(args.requests)
     ]
-    injector = None
+    events = []
     if args.outages:
         kills = plan_survivable_kills(kvc, args.outages, seed=5)
-        injector = FaultInjector(kvc, FaultPlan.outages(
-            kills, kill_at_s=0.5, stagger_s=0.5, downtime_s=1e9))
-        injector.arm()
-        print(f"fault plan armed: killing {len(kills)} chunk servers "
+        events += FaultPlan.outages(
+            kills, kill_at_s=0.5, stagger_s=0.5, downtime_s=1e9).events
+        print(f"fault plan: killing {len(kills)} chunk servers "
               f"mid-serve at {[(s.plane, s.slot) for s in kills]}")
+    if args.degrade_links:
+        # sever the last greedy hop from the window center into the
+        # first N chunk servers for the whole run: every op touching
+        # them reroutes (one cut link each -- nothing partitions)
+        cut = []
+        for sid in range(min(args.degrade_links, kvc.num_servers)):
+            path = spec.greedy_route(kvc.center, kvc.server_sat(sid))
+            if len(path) >= 2:
+                cut.append((path[-2], path[-1]))
+        events += [FaultEvent(at_s=0.0, action="kill", link=link)
+                   for link in cut]
+        print(f"link degradation: {len(cut)} ISLs severed on the greedy "
+              f"routes into servers 0..{len(cut) - 1} (sustained)")
+    injector = None
+    if events:
+        injector = FaultInjector(kvc, FaultPlan(events))
+        injector.arm()
 
     t0 = time.perf_counter()
     results = cluster.serve(reqs)
@@ -202,6 +247,14 @@ def main() -> None:
           f"lost_blocks={fabric['lost_blocks']} "
           f"repaired_chunks={fabric['repaired_chunks']} total "
           f"(of which {repaired} by the final repair pass)")
+    print(f"graceful degradation: "
+          f"link_cuts={0 if injector is None else injector.stats.link_kills}"
+          f" | detoured_ops={fabric['detoured_ops']} "
+          f"(+{fabric['detour_hops']} hops) | "
+          f"ground_hits={fabric['ground_hits']} "
+          f"repaired_from_ground={fabric['repaired_from_ground']}"
+          + (f" | ground tier holds {len(kvc.ground)} blocks"
+             if kvc.ground is not None else " (no ground segment)"))
 
 
 if __name__ == "__main__":

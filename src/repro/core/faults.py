@@ -11,10 +11,13 @@ links drop, and the cache must keep serving (degraded) and re-replicate
 Three pieces:
 
 * ``FaultState`` -- the live fault view the data plane consults on every
-  chunk op: which satellites are dead, which ISL links are down, and
-  whether a greedy +GRID route from ``src`` to ``dst`` is currently
-  usable.  Mutation is copy-on-write over frozensets so serving threads
-  read without taking a lock.
+  chunk op: which satellites are dead, which ISL links are down, and how
+  a route from ``src`` to ``dst`` runs *around* them.  A killed ISL no
+  longer fails ops whose greedy route crosses it: ``route_hops`` finds
+  the cheapest detour on the torus and the op pays the extra hops --
+  link outages grade latency instead of failing, and only a genuinely
+  partitioned endpoint is unreachable.  Mutation is copy-on-write over
+  frozensets so serving threads read without taking a lock.
 * ``FaultPlan`` -- a deterministic schedule of kill/heal events with
   times *relative to arming*, on the fabric's virtual clock
   (``core.protocol.SimClock``).  ``seeded_churn`` builds a reproducible
@@ -30,6 +33,7 @@ Three pieces:
 """
 from __future__ import annotations
 
+import heapq
 import math
 import random
 import threading
@@ -49,16 +53,17 @@ class FaultState:
 
     The sets are replaced wholesale on every mutation (copy-on-write),
     so a serving thread's membership check sees either the old or the
-    new frozenset, never a half-updated one.  ``reachable`` walks the
-    same greedy +GRID route the transport model prices, so "the link on
-    my route is down" and "my chunk op fails" agree by construction; a
-    per-state route cache keeps the walk off the hot path.
+    new frozenset, never a half-updated one.  ``route_hops`` prices the
+    route an op actually runs: the greedy +GRID path while it is clean,
+    the cheapest detour around killed links otherwise -- so "the link on
+    my route is down" grades the op's latency instead of failing it,
+    and a per-state route cache keeps the search off the hot path.
     """
 
     def __init__(self) -> None:
         self.dead_sats: frozenset = frozenset()
         self.dead_links: frozenset = frozenset()
-        self._reach_cache: dict = {}
+        self._route_cache: dict = {}
 
     @property
     def clean(self) -> bool:
@@ -67,19 +72,19 @@ class FaultState:
     # -- mutation (copy-on-write; callers serialize via the injector) ---
     def kill_sat(self, sat: Sat) -> None:
         self.dead_sats = self.dead_sats | {sat}
-        self._reach_cache = {}
+        self._route_cache = {}
 
     def heal_sat(self, sat: Sat) -> None:
         self.dead_sats = self.dead_sats - {sat}
-        self._reach_cache = {}
+        self._route_cache = {}
 
     def kill_link(self, a: Sat, b: Sat) -> None:
         self.dead_links = self.dead_links | {link_key(a, b)}
-        self._reach_cache = {}
+        self._route_cache = {}
 
     def heal_link(self, a: Sat, b: Sat) -> None:
         self.dead_links = self.dead_links - {link_key(a, b)}
-        self._reach_cache = {}
+        self._route_cache = {}
 
     # -- queries --------------------------------------------------------
     def sat_alive(self, sat: Sat) -> bool:
@@ -88,39 +93,118 @@ class FaultState:
     def link_alive(self, a: Sat, b: Sat) -> bool:
         return link_key(a, b) not in self.dead_links
 
+    def route_hops(
+        self,
+        spec: ConstellationSpec,
+        src: Sat,
+        dst: Sat,
+        *,
+        max_extra_hops: int | None = None,
+    ) -> tuple[int, int] | None:
+        """Hop composition ``(intra_plane, inter_plane)`` of the cheapest
+        live route from ``src`` to ``dst`` under the current link faults.
+
+        While no killed link sits on the greedy +GRID route this is just
+        the Manhattan hop split the clean transport model prices.  When
+        the greedy route crosses a dead link, a bounded uniform-cost
+        search over the torus (edge weights = the spec's one-hop intra-/
+        inter-plane latencies) finds the cheapest detour: the op still
+        completes, at ``+extra_hops`` cost.  Returns ``None`` only when
+        ``dst`` is partitioned from ``src`` -- every live path is cut (or
+        longer than ``max_extra_hops`` beyond the Manhattan distance,
+        when a bound is given).  Dead *satellites* do not block transit
+        here: a dead node's links still carry detoured traffic in this
+        model unless explicitly killed; endpoint death is ``reachable``'s
+        concern (the data is gone, not the path).
+        """
+        src, dst = spec.wrap(src), spec.wrap(dst)
+        dp, ds = spec.torus_delta(src, dst)
+        base = (abs(ds), abs(dp))
+        if not self.dead_links or src == dst:
+            return base
+        key = (src, dst, max_extra_hops)
+        cache = self._route_cache
+        if key in cache:
+            return cache[key]
+        path = spec.greedy_route(src, dst)
+        if all(link_key(a, b) not in self.dead_links
+               for a, b in zip(path, path[1:])):
+            cache[key] = base
+            return base
+        li = spec.intra_plane_latency_s()
+        le = spec.inter_plane_latency_s()
+        budget = (None if max_extra_hops is None
+                  else base[0] + base[1] + max_extra_hops)
+        # uniform-cost search (Dijkstra) over the torus, skipping dead
+        # links; the torus itself bounds the frontier at N*M nodes
+        best_lat: dict[Sat, float] = {src: 0.0}
+        frontier = [(0.0, 0, 0, src)]   # (latency, intra, inter, sat)
+        found: tuple[int, int] | None = None
+        while frontier:
+            lat, ni, ne, cur = heapq.heappop(frontier)
+            if cur == dst:
+                found = (ni, ne)
+                break
+            if lat > best_lat.get(cur, math.inf):
+                continue   # stale queue entry
+            if budget is not None and ni + ne >= budget:
+                continue
+            for dpl, dsl, w, intra in (
+                    (0, 1, li, 1), (0, -1, li, 1),
+                    (1, 0, le, 0), (-1, 0, le, 0)):
+                nxt = spec.wrap(Sat(cur.plane + dpl, cur.slot + dsl))
+                if link_key(cur, nxt) in self.dead_links:
+                    continue
+                nlat = lat + w
+                if nlat < best_lat.get(nxt, math.inf):
+                    best_lat[nxt] = nlat
+                    heapq.heappush(
+                        frontier,
+                        (nlat, ni + intra, ne + (1 - intra), nxt))
+        cache[key] = found
+        return found
+
+    def extra_hops(self, spec: ConstellationSpec, src: Sat, dst: Sat) -> int:
+        """Detour length beyond the clean Manhattan distance (0 when the
+        greedy route is clean or the endpoint is partitioned)."""
+        rh = self.route_hops(spec, src, dst)
+        if rh is None:
+            return 0
+        return rh[0] + rh[1] - spec.hops(src, dst)
+
+    def routed_latency_s(
+        self, spec: ConstellationSpec, src: Sat, dst: Sat
+    ) -> float | None:
+        """One-way ISL latency of the cheapest live route (detours
+        included), or ``None`` when ``dst`` is partitioned from ``src``.
+        This is what ``IslTransport`` prices under link faults, so the
+        estimate a router sees and the latency a fetch experiences are
+        the same detoured path."""
+        rh = self.route_hops(spec, src, dst)
+        if rh is None:
+            return None
+        return (rh[0] * spec.intra_plane_latency_s()
+                + rh[1] * spec.inter_plane_latency_s())
+
     def reachable(self, spec: ConstellationSpec, src: Sat, dst: Sat) -> bool:
         """Can a chunk op from ``src`` reach ``dst`` right now?
 
-        The target must be alive, and no explicitly-killed ISL link may
-        sit on the greedy +GRID route.  Two deliberate asymmetries:
-
-        * a dead satellite blocks only as an *endpoint* -- the +GRID
-          torus always has a one-hop detour around a dead transit node,
-          so transit is assumed rerouted at negligible cost (what
-          Celestial-style LEO routing actually does).  Its *data* is
-          still gone: that is what degraded reads fall through.
-        * a killed link fails ops whose deterministic greedy route
-          crosses it -- the priced path and the usable path stay the
-          same model, so "the link on my route is down" and "my chunk op
-          fails" agree by construction.
-
-        ``src`` itself is exempt: it is the op's origin (a serving
-        replica's anchor or the ground host's uplink satellite), whose
-        failure is the serving layer's problem, not the fabric's.
+        The target must be alive and some live route must exist.  Killed
+        ISL links no longer fail ops whose greedy route crosses them:
+        ``route_hops`` detours around them at extra-hop cost, so a link
+        outage only makes ``dst`` unreachable when it *partitions* the
+        endpoint -- every path cut.  A dead satellite still blocks as an
+        endpoint (its data is gone; that is what degraded reads fall
+        through) but not as transit.  ``src`` itself is exempt: it is
+        the op's origin (a serving replica's anchor or the ground host's
+        uplink satellite), whose failure is the serving layer's problem,
+        not the fabric's.
         """
         if dst in self.dead_sats:
             return False
         if not self.dead_links:
             return True
-        cache, key = self._reach_cache, (src, dst)
-        hit = cache.get(key)
-        if hit is not None:
-            return hit
-        path = spec.greedy_route(src, dst)
-        ok = all(link_key(a, b) not in self.dead_links
-                 for a, b in zip(path, path[1:]))
-        cache[key] = ok
-        return ok
+        return self.route_hops(spec, src, dst) is not None
 
 
 @dataclass(frozen=True)

@@ -24,6 +24,7 @@ from __future__ import annotations
 import random
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -155,6 +156,14 @@ class IslTransport:
     -- so callers can defer consuming the result until the flight is over
     (and overlap the flight with other work) instead of experiencing the
     constellation as a free local dict.
+
+    ``probe_timeout_s``: the explicit cost of one FAILED replica attempt
+    (a dead or partitioned home that never answers).  ``None`` keeps the
+    implicit model -- a failed probe charges the 0-byte round trip it
+    would have taken -- while a value models a real timeout budget.  The
+    Get fall-through and ``estimate_get_latency_s`` both price failed
+    attempts through ``probe_latency_s``, so the router prices exactly
+    what the fetch pays.
     """
 
     spec: ConstellationSpec
@@ -165,20 +174,35 @@ class IslTransport:
     clock: SimClock | None = None
     stats: TransportStats = field(default_factory=TransportStats)
     last_ready_at: float | None = field(default=None, repr=False)
+    probe_timeout_s: float | None = None
 
     def src_for(self, center: Sat) -> Sat:
         return self.anchor if self.anchor is not None else center
 
+    def _isl_leg_s(self, src: Sat, target: Sat, faults) -> float:
+        """One-way ISL latency of the route an op actually runs: the
+        clean greedy path, or -- under link faults -- the cheapest
+        detour (``FaultState.route_hops``).  A partitioned pair falls
+        back to the clean-path price: the op itself is already failed by
+        reachability, this only prices its timed-out probe."""
+        if faults is not None and faults.dead_links:
+            lat = faults.routed_latency_s(self.spec, src, target)
+            if lat is not None:
+                return lat
+        return self.spec.isl_latency_s(src, target, routed=True)
+
     def op_latency_s(
-        self, src: Sat, target: Sat, n_bytes: int, *, round_trip: bool
+        self, src: Sat, target: Sat, n_bytes: int, *,
+        round_trip: bool, faults=None,
     ) -> float:
         """Pure cost model -- no accounting.  The serving router calls
         this to *estimate* fetch costs from candidate anchors without
-        polluting transport stats."""
+        polluting transport stats.  ``faults`` (a ``FaultState``) prices
+        the ISL leg over the detoured route killed links force."""
         lat = 0.0
         if self.ground_hosted:
             lat += self.spec.uplink_latency_s()
-        lat += self.spec.isl_latency_s(src, target, routed=True)
+        lat += self._isl_leg_s(src, target, faults)
         if round_trip:
             lat *= 2.0
         lat += self.chunk_processing_time_s
@@ -186,13 +210,33 @@ class IslTransport:
             lat += n_bytes / self.link_bandwidth_bytes_s
         return lat
 
+    def probe_latency_s(self, src: Sat, target: Sat, *, faults=None) -> float:
+        """Cost of one failed replica attempt (dead/partitioned home):
+        the explicit ``probe_timeout_s`` when configured, else the
+        timed-out 0-byte round trip the attempt would have taken."""
+        if self.probe_timeout_s is not None:
+            return self.probe_timeout_s
+        return self.op_latency_s(src, target, 0, round_trip=True,
+                                 faults=faults)
+
     def chunk_op_latency_s(
-        self, center: Sat, target: Sat, n_bytes: int, *, round_trip: bool
+        self, center: Sat, target: Sat, n_bytes: int, *,
+        round_trip: bool, faults=None,
     ) -> float:
         lat = self.op_latency_s(
-            self.src_for(center), target, n_bytes, round_trip=round_trip)
+            self.src_for(center), target, n_bytes, round_trip=round_trip,
+            faults=faults)
         self.stats.messages += 1
         self.stats.bytes_moved += n_bytes
+        return lat
+
+    def chunk_probe_latency_s(self, center: Sat, target: Sat, *,
+                              faults=None) -> float:
+        """Accounting flavor of ``probe_latency_s`` (data-plane failed
+        attempts bump the message counter like any other chunk op)."""
+        lat = self.probe_latency_s(self.src_for(center), target,
+                                   faults=faults)
+        self.stats.messages += 1
         return lat
 
     def record_op(self, latency_s: float) -> float | None:
@@ -220,6 +264,130 @@ class CacheStats:
     degraded_reads: int = 0   # ops served only after dead-replica fallthrough
     lost_blocks: int = 0      # blocks with an unrecoverable chunk (purged)
     repaired_chunks: int = 0  # chunk copies re-replicated by repair passes
+    # graded link faults (detours) + the L3 ground tier:
+    detoured_ops: int = 0     # chunk ops completed over a rerouted path
+    detour_hops: int = 0      # extra hops those detours cost, summed
+    ground_hits: int = 0      # ops answered by the ground tier fall-through
+    ground_spills: int = 0    # orbit-evicted blocks demoted to ground
+    repaired_from_ground: int = 0  # blocks re-replicated from ground
+
+
+# ---------------------------------------------------------------------------
+# L3: the durable ground-station tier below the constellation.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GroundStats:
+    puts: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_stored: int = 0
+
+
+class GroundStationTier:
+    """A bigger, slower, durable block store below the constellation.
+
+    The MegaCacheX-style hierarchical tier: whole payloads keyed by
+    block hash (no striping -- ground stations are not satellites), with
+    capacity counted in *blocks* and LRU eviction when bounded
+    (``capacity_blocks=None`` = unbounded: durable by construction).
+    The station sits under the LOS window center, so an op from a
+    serving anchor runs anchor -> center over the ISLs (detour-priced
+    under link faults, like any chunk op) and then one Eq-4 downlink leg
+    -- ``op_latency_s`` prices the round trip on the same transport
+    model / ``SimClock`` the orbital ops complete on, plus the tier's
+    own (slower) processing and bandwidth terms.
+
+    ``ConstellationKVC`` attaches one via ``ground=`` / ``attach_ground``
+    and its ``ground_write`` policy decides what lands here; Gets fall
+    through replicas -> ground -> clean miss, and ``repair`` re-seeds
+    orbital copies from here when no replica survived.
+    """
+
+    def __init__(
+        self,
+        spec: ConstellationSpec,
+        *,
+        capacity_blocks: int | None = None,
+        processing_time_s: float = 0.0,
+        link_bandwidth_bytes_s: float | None = None,
+    ) -> None:
+        if capacity_blocks is not None and capacity_blocks < 1:
+            raise ValueError("ground capacity must be >= 1 block (or None)")
+        self.spec = spec
+        self.capacity_blocks = capacity_blocks
+        self.processing_time_s = processing_time_s
+        self.link_bandwidth_bytes_s = link_bandwidth_bytes_s
+        self.stats = GroundStats()
+        self._blocks: "OrderedDict[bytes, bytes]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def __contains__(self, block_hash: bytes) -> bool:
+        return block_hash in self._blocks
+
+    # -- cost model -----------------------------------------------------
+    def op_latency_s(
+        self, transport: IslTransport, center: Sat, n_bytes: int, *,
+        round_trip: bool = True, faults=None,
+    ) -> float:
+        """One ground-tier op from ``transport``'s origin: the ISL path
+        to the window center (0 bytes -- the tier's own bandwidth term
+        prices the payload) plus the downlink to the station under it,
+        doubled for a round trip, plus ground processing."""
+        lat = transport.op_latency_s(
+            transport.src_for(center), center, 0,
+            round_trip=round_trip, faults=faults)
+        leg = self.spec.uplink_latency_s()
+        lat += leg * (2.0 if round_trip else 1.0)
+        lat += self.processing_time_s
+        if self.link_bandwidth_bytes_s:
+            lat += n_bytes / self.link_bandwidth_bytes_s
+        return lat
+
+    # -- storage --------------------------------------------------------
+    def put(self, block_hash: bytes, payload: bytes) -> None:
+        """Durable write (write-through or spill).  Re-putting a known
+        hash refreshes recency only -- content addressing makes the
+        bytes identical."""
+        if block_hash in self._blocks:
+            self._blocks.move_to_end(block_hash)
+            return
+        self._blocks[block_hash] = payload
+        self.stats.puts += 1
+        self.stats.bytes_stored += len(payload)
+        if self.capacity_blocks is not None:
+            while len(self._blocks) > self.capacity_blocks:
+                _, victim = self._blocks.popitem(last=False)
+                self.stats.evictions += 1
+                self.stats.bytes_stored -= len(victim)
+
+    def get(self, block_hash: bytes) -> bytes | None:
+        """Data-plane read: counts hit/miss, refreshes recency."""
+        payload = self._blocks.get(block_hash)
+        if payload is None:
+            self.stats.misses += 1
+            return None
+        self._blocks.move_to_end(block_hash)
+        self.stats.hits += 1
+        return payload
+
+    def peek(self, block_hash: bytes) -> bytes | None:
+        """Control-plane read (repair): no stats, no recency."""
+        return self._blocks.get(block_hash)
+
+    def contains(self, block_hash: bytes) -> bool:
+        return block_hash in self._blocks
+
+    def delete(self, block_hash: bytes) -> bool:
+        """Explicit invalidation (purge gossip reaching the ground)."""
+        payload = self._blocks.pop(block_hash, None)
+        if payload is None:
+            return False
+        self.stats.bytes_stored -= len(payload)
+        return True
 
 
 class ConstellationKVC:
@@ -234,7 +402,19 @@ class ConstellationKVC:
     churn.  Fault sources attach via ``attach_faults`` (see
     ``core.faults.FaultInjector``); with none attached every path is
     byte-identical to the fault-free protocol.
+
+    ``ground`` attaches a durable ``GroundStationTier`` below the
+    constellation.  ``ground_write`` decides what lands there:
+    ``"none"`` (reads may still fall through to externally seeded
+    content), ``"spill"`` (only orbit-evicted victims are demoted down),
+    or ``"all"`` (write-through: every Set also lands on ground, so
+    total orbital loss is never data loss).  Gets fall through replicas
+    -> ground -> clean miss, and ``repair`` re-replicates from ground
+    when no orbital copy survived -- a block is only purged through
+    ``on_block_lost`` when ground misses too.
     """
+
+    GROUND_WRITE_POLICIES = ("none", "spill", "all")
 
     def __init__(
         self,
@@ -247,6 +427,8 @@ class ConstellationKVC:
         per_sat_capacity_bytes: int | None = None,
         transport: IslTransport | None = None,
         replication: int = 1,
+        ground: "GroundStationTier | None" = None,
+        ground_write: str = "none",
     ) -> None:
         self.spec = spec
         self.window = window
@@ -260,6 +442,16 @@ class ConstellationKVC:
                 f"replication must be in [1, {spec.num_sats}] "
                 f"(got {replication})")
         self.replication = replication
+        self.ground: GroundStationTier | None = None
+        self.ground_write = "none"
+        # blocks deliberately demoted to ground-only residency (capacity
+        # spills): repair must not re-promote them -- the orbit evicted
+        # them for a reason -- but Gets keep serving them from below
+        self._ground_demoted: set[bytes] = set()
+        if ground is not None:
+            self.attach_ground(ground, write=ground_write)
+        elif ground_write != "none":
+            raise ValueError("ground_write needs a ground tier attached")
         self.server_map: list[Sat] = place_servers(
             strategy, spec, window, self.num_servers
         )
@@ -291,10 +483,80 @@ class ConstellationKVC:
             )
         return self._stores[sat]
 
-    def _on_evict(self, store: SatelliteStore, key: tuple[bytes, int]) -> None:
-        """LRU eviction of one chunk invalidates its whole block (§3.9)."""
-        block_hash, _ = key
+    def attach_ground(self, tier: "GroundStationTier",
+                      write: str = "all") -> None:
+        """Attach the durable L3 tier with a write policy (see class
+        docstring).  Callable after construction so benchmarks can run
+        the same fabric with and without a ground segment."""
+        if write not in self.GROUND_WRITE_POLICIES:
+            raise ValueError(
+                f"ground_write must be one of {self.GROUND_WRITE_POLICIES} "
+                f"(got {write!r})")
+        self.ground = tier
+        self.ground_write = write
+
+    def _ground_latency_s(self, tr: IslTransport, n_bytes: int, *,
+                          round_trip: bool = True) -> float:
+        return self.ground.op_latency_s(
+            tr, self.center, n_bytes, round_trip=round_trip,
+            faults=self.faults)
+
+    def _on_evict(self, store: SatelliteStore, key: tuple[bytes, int],
+                  value: bytes) -> None:
+        """LRU eviction of one chunk invalidates its whole block (§3.9)
+        -- unless the ground tier holds (or, under ``ground_write=
+        "spill"``, receives) the payload, in which case the block is
+        *demoted*: orbital chunks dropped, directory entry kept, and
+        Gets fall through to ground instead of recomputing."""
+        block_hash, cid = key
+        if self.ground is not None and block_hash in self.directory:
+            if self.ground.contains(block_hash):
+                self._demote_to_ground(block_hash)
+                return
+            if self.ground_write == "spill":
+                payload = self._reassemble(block_hash, cid, value)
+                if payload is not None:
+                    self.ground.put(block_hash, payload)
+                    self.stats.ground_spills += 1
+                    self.transport.stats.messages += 1
+                    self.transport.stats.bytes_moved += len(payload)
+                    self._demote_to_ground(block_hash)
+                    return
         self.purge_block(block_hash)
+
+    def _reassemble(self, block_hash: bytes, evicted_cid: int,
+                    evicted_value: bytes) -> bytes | None:
+        """Rebuild a full payload from surviving orbital chunk copies
+        (plus the just-evicted one, already out of its store).  Returns
+        None when any chunk has no copy left -- then there is nothing
+        whole to spill and the eviction degenerates to a purge."""
+        n_chunks = self.directory[block_hash]
+        chunks: list[bytes] = []
+        for cid in range(n_chunks):
+            if cid == evicted_cid:
+                chunks.append(evicted_value)
+                continue
+            sid = chunk_server(cid, self.num_servers)
+            chunk = None
+            for r in range(self.replication):
+                chunk = self.store_for(self.replica_sat(sid, r)).peek(
+                    (block_hash, cid))
+                if chunk is not None:
+                    break
+            if chunk is None:
+                return None
+            chunks.append(chunk)
+        return join_chunks(chunks)
+
+    def _demote_to_ground(self, block_hash: bytes) -> None:
+        """Drop a block's orbital chunks but keep it servable: the
+        directory entry stays (ground holds the bytes), no
+        ``on_block_lost`` fires, and repair skips it until a fresh Set
+        re-promotes it."""
+        self._ground_demoted.add(block_hash)
+        for store in self._stores.values():
+            for key in [k for k in store.keys() if k[0] == block_hash]:
+                store.delete(key)
 
     def server_sat(self, server_id0: int) -> Sat:
         return self.server_map[server_id0]
@@ -332,6 +594,18 @@ class ConstellationKVC:
         f = self.faults
         return f is None or f.reachable(self.spec, src, sat)
 
+    def _note_detour(self, cs: CacheStats, src: Sat, sat: Sat) -> None:
+        """Account a completed chunk op that ran over a rerouted path
+        (killed links on the greedy route): ops keep completing, the
+        counters make the grading visible."""
+        f = self.faults
+        if f is None or not f.dead_links:
+            return
+        extra = f.extra_hops(self.spec, src, sat)
+        if extra > 0:
+            cs.detoured_ops += 1
+            cs.detour_hops += extra
+
     def drop_satellite(self, sat: Sat) -> int:
         """A satellite died: its chunk store's contents are destroyed.
 
@@ -367,6 +641,7 @@ class ConstellationKVC:
             link_bandwidth_bytes_s=base_t.link_bandwidth_bytes_s,
             anchor=self.spec.wrap(anchor),
             clock=clock if clock is not None else base_t.clock,
+            probe_timeout_s=base_t.probe_timeout_s,
         )
         return ConstellationView(self, transport)
 
@@ -383,27 +658,40 @@ class ConstellationKVC:
         stats, no data movement -- this is the router's hop-awareness
         signal, priced by the same transport model the fetch will
         experience: under faults each server is priced as the degraded
-        read would run it -- failed probes of dead replicas first, then
-        the first live replica -- so dead-replica detours show up in
+        read would run it -- failed probes of dead replicas first
+        (``probe_latency_s``, the same explicit timeout the fall-through
+        charges), then the first live replica over its detoured route,
+        then -- when every replica is out -- the ground tier's round
+        trip.  Detours, timeouts and the ground leg all show up in
         routing scores before any engine experiences them."""
         self._tick_faults()   # due kills/heals land before pricing
         tr = transport if transport is not None else self.transport
+        f = self.faults
         nb = (self.num_servers if payload_bytes is None
               else num_chunks(payload_bytes, self.chunk_bytes))
         servers = {chunk_server(cid, self.num_servers)
                    for cid in range(min(nb, self.num_servers))}
         anchor = self.spec.wrap(anchor)
+        pb = (payload_bytes if payload_bytes is not None
+              else nb * self.chunk_bytes)
         worst = 0.0
         for sid in servers:
             lat = 0.0
+            served = False
             for r in range(self.replication):
                 sat = self.replica_sat(sid, r)
                 if self._reachable(anchor, sat):
                     lat += tr.op_latency_s(anchor, sat, self.chunk_bytes,
-                                           round_trip=True)
+                                           round_trip=True, faults=f)
+                    served = True
                     break
-                # a dead replica costs its timed-out probe round trip
-                lat += tr.op_latency_s(anchor, sat, 0, round_trip=True)
+                # a dead replica costs its timed-out probe
+                lat += tr.probe_latency_s(anchor, sat, faults=f)
+            if not served and self.ground is not None:
+                # no orbital copy answerable: the fetch would fall
+                # through to ground for the whole payload
+                lat += self.ground.op_latency_s(
+                    tr, self.center, pb, round_trip=True, faults=f)
             worst = max(worst, lat)
         return worst
 
@@ -415,10 +703,16 @@ class ConstellationKVC:
         """Store (all ``replication`` copies of) every chunk; the block
         latency is the max over the parallel per-copy writes.  Replicas
         whose home is currently dead/unreachable are simply skipped --
-        the next ``repair`` pass back-fills them from a surviving copy."""
+        the next ``repair`` pass back-fills them from a surviving copy
+        (or, failing that, from ground).  Under ``ground_write="all"``
+        the payload also lands on the ground tier, which makes even a
+        write whose every orbital copy was refused durable: the block
+        registers and Gets fall through to ground until repair
+        re-seeds the orbit."""
         tr = via or self.transport
         cs = stats or self.stats
         self._tick_faults()
+        f = self.faults
         chunks = split_chunks(payload, self.chunk_bytes)
         src = tr.src_for(self.center)
         worst = 0.0
@@ -435,19 +729,36 @@ class ConstellationKVC:
                 worst = max(
                     worst,
                     tr.chunk_op_latency_s(
-                        self.center, sat, len(chunk), round_trip=False
+                        self.center, sat, len(chunk), round_trip=False,
+                        faults=f,
                     ),
                 )
+                self._note_detour(cs, src, sat)
             complete &= stored > 0
+        grounded = False
+        if self.ground is not None and self.ground_write == "all":
+            # synchronous write-through: the durable copy is part of the
+            # Set's critical path, so its (one-way) leg joins the max
+            self.ground.put(block_hash, payload)
+            tr.stats.messages += 1
+            tr.stats.bytes_moved += len(payload)
+            worst = max(worst,
+                        self._ground_latency_s(tr, len(payload),
+                                               round_trip=False))
+            grounded = True
         tr.record_op(worst)
-        if complete:
-            # a chunk with zero landed copies makes the write a failure:
-            # registering it would make the directory (and through it the
-            # metrics) claim a block that never existed.  A pre-existing
-            # entry for the same hash stays -- content addressing makes
-            # the old bytes identical to what this write carried.
+        stored_ok = complete or grounded
+        if stored_ok:
+            # a chunk with zero landed copies makes a purely orbital
+            # write a failure: registering it would make the directory
+            # (and through it the metrics) claim a block that never
+            # existed.  A pre-existing entry for the same hash stays --
+            # content addressing makes the old bytes identical to what
+            # this write carried.  A grounded write registers even when
+            # incomplete: the data exists below, repair promotes it.
             self.directory[block_hash] = len(chunks)
             cs.blocks_set += 1
+            self._ground_demoted.discard(block_hash)
         elif block_hash not in self.directory:
             # failed fresh write: drop the partial chunks that did land,
             # or they would linger as orphans no sweep walks (the sweep
@@ -460,7 +771,7 @@ class ConstellationKVC:
                         (block_hash, cid))
         return BlockMeta(
             n_chunks=len(chunks), set_time=time.time(),
-            payload_bytes=len(payload), stored=complete,
+            payload_bytes=len(payload), stored=stored_ok,
         )
 
     # -- Get KVC (paper §3.8) ------------------------------------------
@@ -476,12 +787,16 @@ class ConstellationKVC:
         leaving it unstamped made repeatedly-probed blocks look cold and
         get evicted first -- the staleness the shared policy fixed.
 
-        Degraded probes: a dead or empty replica falls through to the
-        next copy, each failed attempt charging its (timed-out) round
-        trip -- absent means absent from *every* replica home."""
+        Degraded probes: a dead replica's probe times out
+        (``probe_latency_s``) and an empty live replica answers
+        negatively at its real round trip; either way the next copy is
+        tried.  With a ground tier attached, absent from every replica
+        home falls through to one ground round trip -- absent now means
+        absent from orbit *and* ground."""
         tr = via or self.transport
         cs = stats or self.stats
         self._tick_faults()
+        f = self.faults
         cs.lookup_probes += 1
         sid = chunk_server(0, self.num_servers)
         src = tr.src_for(self.center)
@@ -491,18 +806,25 @@ class ConstellationKVC:
         for r in range(self.replication):
             sat = self.replica_sat(sid, r)
             if not self._reachable(src, sat):
-                lat += tr.chunk_op_latency_s(self.center, sat, 0,
-                                             round_trip=True)
+                # failed attempt: the probe times out
+                lat += tr.chunk_probe_latency_s(self.center, sat, faults=f)
                 fell_through = True
                 continue
             lat += tr.chunk_op_latency_s(self.center, sat, 0,
-                                         round_trip=True)
+                                         round_trip=True, faults=f)
             store = self.store_for(sat)
             if store.contains((block_hash, 0)):
                 store.touch((block_hash, 0))
                 present = True
+                self._note_detour(cs, src, sat)
                 break
             fell_through = True
+        if not present and self.ground is not None \
+                and self.ground.contains(block_hash):
+            lat += self._ground_latency_s(tr, 0, round_trip=True)
+            tr.stats.messages += 1
+            cs.ground_hits += 1
+            present = True
         tr.record_op(lat)
         if present and fell_through:
             cs.degraded_reads += 1
@@ -516,18 +838,24 @@ class ConstellationKVC:
         latency is the max over per-chunk fetch sequences).
 
         Degraded reads: per chunk, replicas are tried in placement order
-        and every failed attempt -- a dead/unreachable home, or a live
-        home that lost the copy -- charges its round trip *before* the
-        next replica is tried, so the experienced latency of a degraded
-        fetch really contains the detours.  A chunk with no live copy
-        fails the block (§3.1): a clean miss, never an exception.  The
-        block is lazily purged only when every replica home answered and
-        none had the data (it is *gone*); while a home is merely
-        unreachable the directory keeps the entry -- the data may still
-        be there when the fault heals."""
+        and every failed attempt -- a dead/unreachable home's timed-out
+        probe (``probe_latency_s``), or a live home that lost the copy
+        answering at its real round trip -- charges *before* the next
+        replica is tried, so the experienced latency of a degraded fetch
+        really contains the detours; ops over routes with killed links
+        pay (and count) their rerouted extra hops.  A chunk with no live
+        copy falls through to the ground tier when one is attached: the
+        whole payload comes back up at one uplink-priced round trip
+        (``ground_hits``) and the block survives.  Only when ground
+        misses too does the block fail (§3.1): a clean miss, never an
+        exception.  The block is lazily purged only when every replica
+        home answered empty AND ground missed (it is *gone*); while a
+        home is merely unreachable the directory keeps the entry -- the
+        data may still be there when the fault heals."""
         tr = via or self.transport
         cs = stats or self.stats
         self._tick_faults()
+        f = self.faults
         if n_chunks is None:
             n_chunks = self.directory.get(block_hash, 0)
             if n_chunks == 0:
@@ -545,31 +873,52 @@ class ConstellationKVC:
             for r in range(self.replication):
                 sat = self.replica_sat(sid, r)
                 if not self._reachable(src, sat):
-                    # failed attempt: the timed-out probe's round trip
-                    attempt_s += tr.chunk_op_latency_s(
-                        self.center, sat, 0, round_trip=True)
+                    # failed attempt: the probe times out
+                    attempt_s += tr.chunk_probe_latency_s(
+                        self.center, sat, faults=f)
                     unreachable = True
                     degraded = True
                     continue
                 got = self.store_for(sat).get((block_hash, cid))
                 if got is None:
                     if r + 1 < self.replication:
-                        # empty live replica: charge the probe and fall
-                        # through (the copy may have died with a crash
-                        # this home has since healed from)
+                        # empty live replica: charge the (answered)
+                        # probe and fall through (the copy may have
+                        # died with a crash this home has since healed
+                        # from)
                         attempt_s += tr.chunk_op_latency_s(
-                            self.center, sat, 0, round_trip=True)
+                            self.center, sat, 0, round_trip=True,
+                            faults=f)
                         degraded = True
                     continue
                 attempt_s += tr.chunk_op_latency_s(
-                    self.center, sat, len(got), round_trip=True)
+                    self.center, sat, len(got), round_trip=True, faults=f)
                 chunk = got
+                self._note_detour(cs, src, sat)
                 break
             if chunk is None:
-                # A chunk with no live copy fails the block (§3.1).
+                payload = (None if self.ground is None
+                           else self.ground.get(block_hash))
+                if payload is not None:
+                    # replicas -> ground: the durable tier answers with
+                    # the whole payload; its round trip stacks on this
+                    # chunk's failed attempts (the other chunks' flights
+                    # ran in parallel and are already inside `worst`)
+                    attempt_s += self._ground_latency_s(
+                        tr, len(payload), round_trip=True)
+                    tr.stats.messages += 1
+                    tr.stats.bytes_moved += len(payload)
+                    tr.record_op(max(worst, attempt_s))
+                    cs.block_hits += 1
+                    cs.ground_hits += 1
+                    if degraded:
+                        cs.degraded_reads += 1
+                    return payload
+                # replicas -> ground -> clean miss (§3.1).
                 cs.block_misses += 1
                 if not unreachable:
-                    # every home answered and none had it: unrecoverable
+                    # every home answered empty and ground missed too:
+                    # unrecoverable
                     self.purge_block(block_hash)
                     cs.lost_blocks += 1
                 return None
@@ -602,13 +951,17 @@ class ConstellationKVC:
 
     # -- eviction (§3.9) -------------------------------------------------
     def purge_block(self, block_hash: bytes) -> int:
-        """Gossip-style purge: remove every chunk of the block everywhere."""
+        """Gossip-style purge: remove every chunk of the block everywhere
+        -- the ground tier included (an invalidation, unlike demotion)."""
         n = self.directory.pop(block_hash, None)
+        self._ground_demoted.discard(block_hash)
         removed = 0
         for store in self._stores.values():
             for key in [k for k in store.keys() if k[0] == block_hash]:
                 store.delete(key)
                 removed += 1
+        if self.ground is not None and self.ground.delete(block_hash):
+            removed += 1
         if removed or n:
             self.stats.blocks_purged += 1
             if self.on_block_lost is not None:
@@ -617,7 +970,9 @@ class ConstellationKVC:
 
     def sweep_incomplete(self) -> int:
         """Periodic cleanup: purge blocks with missing chunks (§3.9) --
-        under replication, missing means *no replica home* has a copy."""
+        under replication, missing means *no replica home* has a copy.
+        Blocks the ground tier holds are exempt: they are still
+        servable (Get falls through) and repair re-seeds them."""
         purged = 0
         for block_hash, n_chunks in list(self.directory.items()):
             ok = all(
@@ -631,6 +986,9 @@ class ConstellationKVC:
                 for cid in range(n_chunks)
             )
             if not ok:
+                if self.ground is not None \
+                        and self.ground.contains(block_hash):
+                    continue
                 self.purge_block(block_hash)
                 purged += 1
         return purged
@@ -639,11 +997,15 @@ class ConstellationKVC:
     def repair(self) -> int:
         """Re-replication pass: restore every directory block to its full
         replica set by copying a surviving chunk copy onto each live
-        replica home that lost (or never received) its own.  A chunk with
-        no surviving copy on a live satellite is unrecoverable and loses
-        the whole block -- purged, ``on_block_lost`` fired so the radix
-        index prunes, counted in ``stats.lost_blocks``.  Runs on
-        ``rotate()`` when a fault source is attached, on heal events
+        replica home that lost (or never received) its own.  A chunk
+        with no surviving *orbital* copy re-replicates from the ground
+        tier when one holds the payload -- ``repaired_from_ground``
+        counts each block so rescued -- and only when ground misses too
+        is the block unrecoverable: purged, ``on_block_lost`` fired so
+        the radix index prunes, counted in ``stats.lost_blocks``.
+        Deliberately ground-demoted blocks (capacity spills) are skipped:
+        re-promoting them would undo the eviction.  Runs on ``rotate()``
+        when a fault source is attached, on heal events
         (``FaultInjector(repair_on_heal=True)``), or explicitly.
 
         Unlike the data-plane ops this is control-plane work: it only
@@ -654,7 +1016,11 @@ class ConstellationKVC:
         f = self.faults
         repaired = 0
         for block_hash, n_chunks in list(self.directory.items()):
+            if block_hash in self._ground_demoted:
+                continue
             lost = False
+            from_ground = False
+            gchunks: list[bytes] | None | bool = None   # lazy, per block
             for cid in range(n_chunks):
                 sid = chunk_server(cid, self.num_servers)
                 live = [self.replica_sat(sid, r)
@@ -665,6 +1031,25 @@ class ConstellationKVC:
                            if self.store_for(sat).contains(
                                (block_hash, cid))]
                 if not holders:
+                    if self.ground is not None and gchunks is None:
+                        gp = self.ground.peek(block_hash)
+                        gchunks = (split_chunks(gp, self.chunk_bytes)
+                                   if gp is not None else False)
+                    if gchunks:
+                        if not live:
+                            # no live home to re-seed right now; the
+                            # block stays ground-served (and counted)
+                            # until a home heals
+                            continue
+                        chunk = gchunks[cid]
+                        for sat in live:
+                            self.store_for(sat).set((block_hash, cid),
+                                                    chunk)
+                            self.transport.stats.messages += 1
+                            self.transport.stats.bytes_moved += len(chunk)
+                            repaired += 1
+                        from_ground = True
+                        continue
                     lost = True
                     break
                 missing = [sat for sat in live if sat not in holders]
@@ -679,6 +1064,8 @@ class ConstellationKVC:
             if lost:
                 self.purge_block(block_hash)
                 self.stats.lost_blocks += 1
+            elif from_ground:
+                self.stats.repaired_from_ground += 1
         self.stats.repaired_chunks += repaired
         return repaired
 
@@ -858,6 +1245,10 @@ class ConstellationView:
     @property
     def faults(self):
         return self.base.faults
+
+    @property
+    def ground(self) -> "GroundStationTier | None":
+        return self.base.ground
 
     def repair(self) -> int:
         return self.base.repair()

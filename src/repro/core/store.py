@@ -12,7 +12,10 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 ChunkKey = tuple[bytes, int]  # (block_hash, chunk_id)
-EvictionCallback = Callable[["SatelliteStore", ChunkKey], None]
+# (store, victim key, victim bytes): the value rides along because the
+# owner may need to spill it to a lower tier -- by callback time it is
+# already out of the store, so this is the last reference
+EvictionCallback = Callable[["SatelliteStore", ChunkKey, bytes], None]
 
 
 @dataclass
@@ -136,4 +139,4 @@ class SatelliteStore:
             self.stats.bytes_stored -= len(value)
             self.stats.evictions += 1
             if self.on_evict is not None:
-                self.on_evict(self, key)
+                self.on_evict(self, key, value)

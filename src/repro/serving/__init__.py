@@ -44,8 +44,8 @@ Fault model
 
 Constellation *failures* are experienced end-to-end too -- satellites
 crash and ISL links drop (``core.faults``: seeded ``FaultPlan`` applied
-by a ``FaultInjector`` on the fabric clock), and the serving stack keeps
-answering:
+by a ``FaultInjector`` on the fabric clock), and the serving stack
+degrades **gracefully** instead of falling off a cliff:
 
 * **k-replica placement** (``ConstellationKVC(replication=k)``): every
   chunk is stored ``k`` times -- replica 0 on its server's satellite,
@@ -53,26 +53,45 @@ answering:
   plane-first so copies are plane-diverse whenever ``k <= num_planes``
   and never share a satellite.  Rotation migrates every replica's home
   along with its server.
+* **Rerouted detours, not binary link failure**: a dead ISL link no
+  longer fails the op -- ``FaultState.route_hops`` finds the cheapest
+  clean detour around severed links (bounded torus search), and every
+  chunk op, presence probe, and router estimate
+  (``estimate_get_latency_s``) prices the SAME detoured path: a cut
+  link costs ``+extra_hops`` of latency, counted in
+  ``CacheStats.detoured_ops`` / ``detour_hops``.  A satellite is
+  *unreachable* only when its endpoint is genuinely partitioned, and
+  an unreachable probe is charged a flat ``IslTransport.
+  probe_timeout_s`` (when set) instead of a fabricated round trip.
 * **Degraded reads**: Get KVC / presence probes fall through dead
-  replicas in placement order, charging each failed attempt's timed-out
-  round trip on the same clock the successful fetch completes on -- a
-  degraded fetch *feels* slower, and the router's
-  ``estimate_get_latency_s`` prices the same detours, so routing sees
-  failures before engines do.  A chunk with no live copy is a clean
-  miss: the ``TieredKVManager`` shortens the restored prefix to the
-  longest still-servable boundary and the scheduler recomputes the
-  rest -- churn degrades hit rate, never a request.
-* **Repair**: ``ConstellationKVC.repair()`` re-replicates surviving
-  copies onto live replica homes (run on ``rotate()`` while an attached
-  fault source has live or freshly-applied faults, on heal events, or
-  explicitly); blocks with an unrecoverable chunk are purged and pruned
-  from the radix index.
+  replicas in placement order, charging each failed attempt on the
+  same clock the successful fetch completes on -- a degraded fetch
+  *feels* slower, and the router sees failures before engines do.
+* **The ground tier (L3)**: an attached ``GroundStationTier`` is the
+  durable store below the constellation -- bigger, slower, priced as
+  ISL hops to the LOS window center plus an Eq-4 uplink round trip.
+  Write policies (``ground_write``): ``"all"`` write-through on every
+  Set, ``"spill"`` reassemble-and-spill on LRU eviction, ``"none"``.
+  A Get with no live orbital copy falls through to ground
+  (``CacheStats.ground_hits``) and is only a clean miss -- prefix
+  shortened, tail recomputed, never a failed request -- when ground
+  misses too.
+* **Repair, now from ground**: ``ConstellationKVC.repair()``
+  re-replicates surviving orbital copies onto live replica homes, and
+  when NO orbital copy survives it re-replicates from the ground tier
+  (``CacheStats.repaired_from_ground``); only blocks absent from both
+  orbit and ground are purged and pruned from the radix index.
 * **Accounting**: ``CacheStats.degraded_reads`` / ``lost_blocks`` /
-  ``repaired_chunks`` on the fabric, ``EngineStats.degraded_reads`` /
-  ``lost_blocks`` per replica, all folded by ``EngineCluster.
-  fabric_stats`` and exercised by the ``faulty_fabric`` benchmark (k=2
-  holds the prefix hit rate through mid-serve satellite kills that
-  collapse k=1, with zero failed requests in either case).
+  ``repaired_chunks`` / ``detoured_ops`` / ``detour_hops`` /
+  ``ground_hits`` / ``repaired_from_ground`` on the fabric,
+  ``EngineStats.degraded_reads`` / ``lost_blocks`` / ``detoured_ops``
+  / ``ground_hits`` per replica, all folded by
+  ``EngineCluster.fabric_stats`` and exercised by the
+  ``faulty_fabric`` benchmark (k=2 holds the prefix hit rate through
+  mid-serve satellite kills that collapse k=1) and the
+  ``degraded_fabric`` benchmark (sustained link outages + satellite
+  kills with a ground station attached: zero failed ops, losses
+  repaired from ground, hit rate held while the no-ground run decays).
 
 Single-replica layering
 =======================

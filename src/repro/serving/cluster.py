@@ -37,6 +37,7 @@ from repro.core.constellation import Sat
 from repro.core.protocol import (
     CacheStats,
     ConstellationKVC,
+    GroundStats,
     KVCManager,
     SimClock,
     TransportStats,
@@ -281,6 +282,14 @@ class EngineCluster:
             "degraded_reads": cache.degraded_reads + base.degraded_reads,
             "lost_blocks": cache.lost_blocks + base.lost_blocks,
             "repaired_chunks": cache.repaired_chunks + base.repaired_chunks,
+            # graceful degradation: detours instead of failed ops, the
+            # ground tier instead of losses (repair passes credit the
+            # base store, data-plane fall-throughs the serving views)
+            "detoured_ops": cache.detoured_ops + base.detoured_ops,
+            "detour_hops": cache.detour_hops + base.detour_hops,
+            "ground_hits": cache.ground_hits + base.ground_hits,
+            "repaired_from_ground": (cache.repaired_from_ground
+                                     + base.repaired_from_ground),
         }
 
     def reset_stats(self) -> None:
@@ -296,5 +305,7 @@ class EngineCluster:
             view.stats = CacheStats()
             view.transport.stats = TransportStats()
         self.kvc.stats = CacheStats()
+        if self.kvc.ground is not None:
+            self.kvc.ground.stats = GroundStats()
         self.router.reset()
         self.rotations = 0

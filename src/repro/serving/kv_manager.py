@@ -23,6 +23,16 @@
   payload (overlapping the ISL flight with decode steps), and
   ``wait_fetch`` settles -- and accounts, as ``EngineStats.l2_wait_s``
   -- whatever flight time could not be hidden.
+* **L3 -- the ground-station tier** (``core.protocol.
+  GroundStationTier`` attached to the ``ConstellationKVC``): the
+  durable store below the constellation.  Nothing here talks to it
+  directly -- that is the point: spill victims land on ground through
+  the same Set KVC path (the KVC's ``ground_write`` policy), and a
+  restore prefers orbit but falls back to ground inside ``get_block``'s
+  replicas -> ground fall-through, at an uplink-priced round trip on
+  the same clock.  ``_observe_l2`` attributes those ``ground_hits`` (and
+  detoured chunk ops under link faults) to this replica's
+  ``EngineStats``.
 
 One ``LRUClock`` (``core.eviction``) stamps accesses across all three
 levels plus the radix index, so "least recently used" is one timeline,
@@ -259,11 +269,14 @@ class TieredKVManager:
     def _observe_l2(self):
         """Attribute the fabric's fault counters to this replica: any
         degraded reads (dead-replica fallthrough) the wrapped L2 call
-        experienced land in ``EngineStats.degraded_reads``, and a
-        block-miss delta -- the radix index pointed at blocks the
-        constellation could no longer serve, so (part of) the prefix
-        falls back to recompute, never an exception -- bumps
-        ``EngineStats.lost_blocks``."""
+        experienced land in ``EngineStats.degraded_reads``, detoured
+        chunk ops (killed links rerouted around) in
+        ``EngineStats.detoured_ops``, ground-tier answers (every orbital
+        replica out, the durable tier served) in
+        ``EngineStats.ground_hits``, and a block-miss delta -- the radix
+        index pointed at blocks the fabric could no longer serve from
+        *any* tier, so (part of) the prefix falls back to recompute,
+        never an exception -- bumps ``EngineStats.lost_blocks``."""
         # resolved per call: benchmarks re-point a view's CacheStats
         # between the warmup and the timed run
         cs = (None if self.manager is None
@@ -272,10 +285,13 @@ class TieredKVManager:
             yield
             return
         degraded0, misses0 = cs.degraded_reads, cs.block_misses
+        detoured0, ground0 = cs.detoured_ops, cs.ground_hits
         try:
             yield
         finally:
             self.stats.degraded_reads += cs.degraded_reads - degraded0
+            self.stats.detoured_ops += cs.detoured_ops - detoured0
+            self.stats.ground_hits += cs.ground_hits - ground0
             if cs.block_misses > misses0:
                 self.stats.lost_blocks += 1
 

@@ -55,6 +55,13 @@ class EngineStats:
     # or part of it -- was recomputed instead of crashing)
     degraded_reads: int = 0
     lost_blocks: int = 0
+    # graceful degradation (graded link faults + the L3 ground tier):
+    # chunk ops this replica's L2 calls completed over rerouted paths,
+    # and lookups/restores the ground tier answered after every orbital
+    # replica fell through -- the reads that would have been lost_blocks
+    # (recompute) without a durable tier below the constellation
+    detoured_ops: int = 0
+    ground_hits: int = 0
     ttft_s: list[float] = field(default_factory=list)   # per request
     itl_s: list[float] = field(default_factory=list)    # per decoded token
     # the subset of itl_s observed by running sequences while an

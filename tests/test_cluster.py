@@ -100,6 +100,26 @@ def test_transport_stats_reservoir_bounded():
     assert short.op_latencies_s == [3e-3, 1e-3, 2e-3]
 
 
+def test_transport_stats_past_cap_keeps_exact_counters():
+    """Overflowing the reservoir loses samples, never facts: ``ops`` and
+    ``max_latency_s`` stay exact, the sample list stays bounded, and the
+    percentiles stay inside the observed [min, max] envelope."""
+    rng = np.random.default_rng(42)
+    ts = TransportStats(reservoir_size=32)
+    lats = rng.uniform(1e-4, 5e-2, size=1000)
+    for lat in lats:
+        ts.record(float(lat))
+    assert ts.ops == 1000                             # exact, not sampled
+    assert ts.max_latency_s == pytest.approx(float(lats.max()))
+    assert ts.last_latency_s == pytest.approx(float(lats[-1]))
+    assert len(ts.op_latencies_s) <= 32               # bounded forever
+    assert all(float(lats.min()) <= x <= float(lats.max())
+               for x in ts.op_latencies_s)
+    pct = ts.latency_percentiles()
+    assert float(lats.min()) <= pct["p50"] <= pct["p95"] <= pct["p99"]
+    assert pct["p99"] <= float(lats.max())
+
+
 def test_transport_op_completion_time_on_clock():
     clock = SimClock(rate=1000.0)
     t = IslTransport(SPEC, clock=clock)

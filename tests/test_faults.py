@@ -11,11 +11,22 @@ The fault-tolerance contract under test:
 * ``repair`` re-replicates surviving copies, purges unrecoverable
   blocks (pruning the radix index), and interleaves safely with
   rotation migration;
+* link kills grade latency through rerouted detours instead of failing
+  ops; only a genuine partition makes a satellite unreachable;
+* a ``GroundStationTier`` keeps data servable (and repairable) after
+  total orbital loss -- losses become ground hits, not recomputes;
 * an ``EngineCluster`` under churn completes every request, in order.
+
+Seed-generic tests offset their seeds by ``SKYMEM_CHAOS_SEED`` (CI runs
+a small seed matrix); the default 0 reproduces the historical values.
 """
+import os
+
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.configs import get_config, smoke_config
 from repro.core import (
@@ -23,6 +34,7 @@ from repro.core import (
     ConstellationSpec,
     FaultInjector,
     FaultPlan,
+    GroundStationTier,
     KVCManager,
     LosWindow,
     Sat,
@@ -33,11 +45,12 @@ from repro.core import (
     plan_survivable_kills,
 )
 from repro.core.chunking import arrays_to_bytes
-from repro.core.faults import FaultEvent, FaultState
+from repro.core.faults import FaultEvent, FaultState, link_key
 from repro.models.model import Model
 from repro.serving import Engine, EngineCluster, Request, SamplingParams
 
 SPEC = ConstellationSpec(15, 15, 550.0)
+SEED = int(os.environ.get("SKYMEM_CHAOS_SEED", "0"))
 
 
 def make_kvc(clock=None, replication=1, **kw):
@@ -48,6 +61,12 @@ def make_kvc(clock=None, replication=1, **kw):
         num_servers=10, chunk_bytes=64, transport=transport,
         replication=replication, **kw,
     )
+
+
+def isolate(state, sat):
+    """Cut all four ISL links around ``sat``: a true partition."""
+    for dp, ds in ((0, 1), (0, -1), (1, 0), (-1, 0)):
+        state.kill_link(sat, SPEC.wrap(Sat(sat.plane + dp, sat.slot + ds)))
 
 
 def kill_now(kvc, sats):
@@ -165,20 +184,80 @@ def test_get_in_flight_when_serving_sat_dies_mid_get():
         assert kvc.get_block(H) == expect           # next Get degrades
 
 
-def test_link_outage_blocks_route_then_heals():
+def test_link_outage_detours_then_heals():
+    """A dead ISL link on the greedy route does not fail the op: the
+    fetch completes over the cheapest detour at +extra_hops latency,
+    and healing the link restores the clean-path price."""
     kvc = make_kvc(replication=1)
     kvc.set_block(H, PAYLOAD)
-    # sever the last greedy hop into chunk 3's server: the op's route is
+    assert kvc.get_block(H) == PAYLOAD
+    clean_lat = kvc.transport.stats.last_latency_s
+    # sever the last greedy hop into chunk 3's server: the route is
     # down but the satellite (and its data) is alive
     target = kvc.server_sat(3)
     path = SPEC.greedy_route(kvc.center, target)
     inj = FaultInjector(kvc, FaultPlan(
         [FaultEvent(at_s=0.0, action="kill", link=(path[-2], path[-1]))]))
     inj.arm()
-    assert kvc.get_block(H) is None                 # unreachable: miss
-    assert H in kvc.directory                       # ...but NOT purged
+    assert kvc.get_block(H) == PAYLOAD              # detoured, not failed
+    assert kvc.stats.detoured_ops >= 1
+    assert kvc.stats.detour_hops >= 2               # around one cut link
+    assert kvc.transport.stats.last_latency_s > clean_lat
+    assert kvc.stats.degraded_reads == 0            # no replica fell over
     inj.state.heal_link(path[-2], path[-1])
+    assert kvc.get_block(H) == PAYLOAD
+    assert kvc.transport.stats.last_latency_s == pytest.approx(clean_lat)
+
+
+def test_link_partition_is_clean_miss_and_heals():
+    """Only a genuine partition -- every live path to the endpoint cut
+    -- makes a chunk unreachable, and even then it is a clean miss: the
+    directory keeps the entry and healing restores the data."""
+    kvc = make_kvc(replication=1)
+    kvc.set_block(H, PAYLOAD)
+    target = kvc.server_sat(3)
+    inj = kill_now(kvc, [])                         # armed empty injector
+    isolate(inj.state, target)
+    assert not inj.state.reachable(SPEC, kvc.center, target)
+    assert inj.state.route_hops(SPEC, kvc.center, target) is None
+    assert kvc.get_block(H) is None                 # partitioned: miss
+    assert H in kvc.directory                       # ...but NOT purged
+    assert kvc.stats.lost_blocks == 0
+    inj.state.heal_link(
+        target, SPEC.wrap(Sat(target.plane, target.slot + 1)))
     assert kvc.get_block(H) == PAYLOAD              # data survived
+
+
+def test_bounded_detour_search_budget():
+    """``max_extra_hops`` bounds the search: a detour longer than the
+    budget reads as unreachable, an unbounded search still finds it."""
+    st_ = FaultState()
+    a, b = Sat(0, 0), Sat(0, 1)
+    st_.kill_link(a, b)
+    assert st_.route_hops(SPEC, a, b) == (1, 2)     # around one plane
+    assert st_.extra_hops(SPEC, a, b) == 2
+    assert st_.route_hops(SPEC, a, b, max_extra_hops=1) is None
+    assert st_.route_hops(SPEC, a, b, max_extra_hops=2) == (1, 2)
+
+
+def test_probe_timeout_prices_unreachable_probes():
+    """``IslTransport.probe_timeout_s`` is the flat charge for probing a
+    dead/partitioned replica -- used identically by the Get fall-through
+    and by ``estimate_get_latency_s``, so the router prices the same
+    failure the fetch experiences."""
+    kvc = make_kvc(replication=2)
+    kvc.transport.probe_timeout_s = 0.25
+    kvc.set_block(H, PAYLOAD)
+    anchor = kvc.center
+    est_clean = kvc.estimate_get_latency_s(anchor)
+    kill_now(kvc, [kvc.server_sat(3)])
+    assert kvc.transport.probe_latency_s(
+        anchor, kvc.server_sat(3), faults=kvc.faults) == 0.25
+    est_dead = kvc.estimate_get_latency_s(anchor)
+    assert est_dead >= 0.25                         # the probe dominates
+    assert est_dead > est_clean
+    assert kvc.get_block(H) == PAYLOAD              # replica 1 serves
+    assert kvc.transport.stats.last_latency_s >= 0.25
 
 
 def test_failed_set_indexes_no_phantom_and_leaves_no_orphans():
@@ -359,6 +438,139 @@ def test_repair_then_rotate_interleavings():
 
 
 # ---------------------------------------------------------------------------
+# the ground-station tier (L3)
+# ---------------------------------------------------------------------------
+
+def make_ground_kvc(write="all", capacity_blocks=None, **kw):
+    # a durable tier is bigger AND slower: give it a visible processing
+    # cost so latency assertions reflect the tiering, not just hops
+    return make_kvc(
+        ground=GroundStationTier(SPEC, capacity_blocks=capacity_blocks,
+                                 processing_time_s=0.05),
+        ground_write=write, **kw)
+
+
+def test_ground_write_through_registers_despite_dead_stripe_member():
+    """``ground_write="all"``: a Set that cannot land one chunk's every
+    orbital copy still registers -- the payload is durable below the
+    constellation, and the Get fall-through serves it."""
+    kvc = make_ground_kvc("all")
+    kill_now(kvc, [kvc.server_sat(4)])      # one stripe member dead, k=1
+    kvc.set_block(H, PAYLOAD)
+    assert H in kvc.directory               # registered: ground holds it
+    assert kvc.stats.blocks_set == 1
+    assert len(kvc.ground) == 1
+    assert kvc.get_block(H) == PAYLOAD      # ground answers the gap
+    assert kvc.stats.ground_hits == 1
+    assert kvc.stats.lost_blocks == 0
+
+
+def test_ground_fallthrough_after_total_orbital_loss():
+    """Total orbital loss with a ground tier: the Get falls through to
+    ground (slower, never failing), nothing is purged, nothing lost."""
+    kvc = make_ground_kvc("all")
+    kvc.set_block(H, PAYLOAD)
+    assert kvc.get_block(H) == PAYLOAD      # orbital hit
+    orbital_lat = kvc.transport.stats.last_latency_s
+    kill_now(kvc, list(kvc.server_map))     # every chunk home dead
+    assert kvc.get_block(H) == PAYLOAD      # ground serves
+    assert kvc.stats.ground_hits == 1
+    assert kvc.stats.lost_blocks == 0
+    assert H in kvc.directory
+    # the durable tier is priced, not free: uplink round trip dominates
+    assert kvc.transport.stats.last_latency_s > orbital_lat
+    # without ground the same loss is a clean miss (PR-5 behavior)
+    bare = make_kvc()
+    bare.set_block(H, PAYLOAD)
+    kill_now(bare, list(bare.server_map))
+    assert bare.get_block(H) is None
+
+
+def test_repair_rereplicates_from_ground():
+    """No orbital copy survives, ground holds the payload: ``repair``
+    re-replicates onto the healed homes and counts the block as
+    ``repaired_from_ground`` -- PR-5's lost_blocks, recovered."""
+    kvc = make_ground_kvc("all")
+    kvc.set_block(H, PAYLOAD)
+    inj = kill_now(kvc, list(kvc.server_map))
+    for s in list(kvc.server_map):
+        inj.state.heal_sat(s)               # back, but wiped
+    assert kvc.repair() >= kvc.directory[H]
+    assert kvc.stats.repaired_from_ground == 1
+    assert kvc.stats.lost_blocks == 0
+    g0 = kvc.stats.ground_hits
+    assert kvc.get_block(H) == PAYLOAD      # orbital again
+    assert kvc.stats.ground_hits == g0
+
+
+def test_repair_keeps_ground_only_blocks_until_homes_heal():
+    """While every home of a ground-held block is still dead, repair
+    neither purges nor counts it -- ground keeps serving, and a later
+    pass (homes healed) completes the re-replication."""
+    kvc = make_ground_kvc("all")
+    kvc.set_block(H, PAYLOAD)
+    inj = kill_now(kvc, list(kvc.server_map))
+    assert kvc.repair() == 0                # nowhere to put copies yet
+    assert kvc.stats.repaired_from_ground == 0
+    assert kvc.stats.lost_blocks == 0
+    assert H in kvc.directory
+    assert kvc.get_block(H) == PAYLOAD      # ground serves meanwhile
+    for s in list(kvc.server_map):
+        inj.state.heal_sat(s)
+    assert kvc.repair() >= 1
+    assert kvc.stats.repaired_from_ground == 1
+
+
+def test_spill_demotes_evicted_blocks_to_ground():
+    """``ground_write="spill"``: LRU eviction reassembles the victim and
+    demotes it to ground -- the directory keeps the entry, Gets keep
+    answering, and nothing is reported lost."""
+    p1, p2, p3 = (bytes([48 + i]) * 640 for i in range(3))
+    h1, h2, h3 = (bytes([65 + i]) * 32 for i in range(3))
+    # per-store capacity of two 64B chunks: the third Set evicts h1
+    kvc = make_ground_kvc("spill", per_sat_capacity_bytes=128)
+    kvc.set_block(h1, p1)
+    kvc.set_block(h2, p2)
+    kvc.set_block(h3, p3)
+    assert kvc.stats.ground_spills == 1
+    assert h1 in kvc.directory              # demoted, not purged
+    assert kvc.stats.lost_blocks == 0
+    assert kvc.get_block(h1) == p1          # served from ground
+    assert kvc.stats.ground_hits == 1
+    assert kvc.get_block(h2) == p2 and kvc.get_block(h3) == p3
+    # demoted blocks are ground-resident by design: repair leaves them
+    assert kvc.repair() == 0
+    g = kvc.stats.ground_hits
+    kvc.set_block(h1, p1)                   # a fresh Set re-promotes
+    assert kvc.get_block(h1) == p1
+    assert kvc.stats.ground_hits == g       # orbital once more
+
+
+def test_ground_tier_capacity_lru_and_validation():
+    g = GroundStationTier(SPEC, capacity_blocks=2)
+    g.put(b"a" * 32, b"x")
+    g.put(b"b" * 32, b"y")
+    assert g.get(b"a" * 32) == b"x"         # touch: b becomes LRU
+    g.put(b"c" * 32, b"z")
+    assert g.stats.evictions == 1
+    assert b"b" * 32 not in g
+    assert g.get(b"a" * 32) == b"x" and g.get(b"c" * 32) == b"z"
+    assert g.delete(b"a" * 32) and not g.delete(b"a" * 32)
+    assert len(g) == 1
+    with pytest.raises(ValueError):
+        GroundStationTier(SPEC, capacity_blocks=0)
+
+
+def test_purge_removes_ground_copy_too():
+    kvc = make_ground_kvc("all")
+    kvc.set_block(H, PAYLOAD)
+    assert len(kvc.ground) == 1
+    assert kvc.purge_block(H) > 0
+    assert len(kvc.ground) == 0
+    assert kvc.get_block(H) is None
+
+
+# ---------------------------------------------------------------------------
 # fault plans / injector determinism
 # ---------------------------------------------------------------------------
 
@@ -366,9 +578,9 @@ def test_seeded_churn_is_deterministic():
     sats = list(SPEC.all_sats())[:40]
     mk = lambda seed: FaultPlan.seeded_churn(  # noqa: E731
         sats, seed=seed, n_outages=5, window_s=2.0, downtime_s=1.0)
-    assert mk(7).events == mk(7).events
-    assert mk(7).events != mk(8).events
-    plan = mk(7)
+    assert mk(7 + SEED).events == mk(7 + SEED).events
+    assert mk(7 + SEED).events != mk(8 + SEED).events
+    plan = mk(7 + SEED)
     assert [e.at_s for e in plan.events] == sorted(
         e.at_s for e in plan.events)
     assert sum(e.action == "kill" for e in plan.events) == 5
@@ -404,27 +616,100 @@ def test_injector_drain_applies_outstanding_heals():
 
 def test_survivable_kills_never_complete_a_home_set():
     kvc = make_kvc(replication=2)
-    kills = set(plan_survivable_kills(kvc, 4, seed=3))
+    kills = set(plan_survivable_kills(kvc, 4, seed=3 + SEED))
     assert len(kills) >= 1
     for sid in range(kvc.num_servers):
         homes = {kvc.replica_sat(sid, r) for r in range(2)}
         assert not homes <= kills
-    assert plan_survivable_kills(kvc, 4, seed=3) == plan_survivable_kills(
-        kvc, 4, seed=3)
+    assert plan_survivable_kills(
+        kvc, 4, seed=3 + SEED) == plan_survivable_kills(
+        kvc, 4, seed=3 + SEED)
 
 
 def test_fault_state_copy_on_write_reads():
-    st = FaultState()
+    state = FaultState()
     a, b = Sat(0, 0), Sat(0, 1)
-    st.kill_link(a, b)
-    assert not st.link_alive(a, b) and st.link_alive(b, Sat(0, 2))
-    snapshot = st.dead_sats
-    st.kill_sat(a)
+    state.kill_link(a, b)
+    assert not state.link_alive(a, b) and state.link_alive(b, Sat(0, 2))
+    snapshot = state.dead_sats
+    state.kill_sat(a)
     assert snapshot == frozenset()                  # old view unchanged
-    assert not st.sat_alive(a)
-    st.heal_sat(a)
-    st.heal_link(a, b)
-    assert st.clean
+    assert not state.sat_alive(a)
+    state.heal_sat(a)
+    state.heal_link(a, b)
+    assert state.clean
+
+
+# ---------------------------------------------------------------------------
+# FaultState properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+_sats = st.builds(Sat, st.integers(0, SPEC.num_planes - 1),
+                  st.integers(0, SPEC.sats_per_plane - 1))
+_faults = st.lists(st.tuples(st.booleans(), _sats, _sats), max_size=24)
+
+
+@given(a=_sats, b=_sats)
+@settings(max_examples=100, deadline=None)
+def test_link_key_symmetric(a, b):
+    """ISL links are undirected: key, kill, heal, and liveness are all
+    orientation-blind."""
+    assert link_key(a, b) == link_key(b, a)
+    state = FaultState()
+    state.kill_link(a, b)
+    assert not state.link_alive(b, a)
+    state.heal_link(b, a)
+    assert state.clean
+
+
+@given(ops=_faults)
+@settings(max_examples=100, deadline=None)
+def test_kill_heal_round_trip_restores_empty_state(ops):
+    """Healing every kill (in any order, duplicates and all) restores
+    FaultState to empty -- no residue to leak into later route pricing."""
+    state = FaultState()
+    for sat_kill, a, b in ops:
+        if sat_kill:
+            state.kill_sat(a)
+        else:
+            state.kill_link(a, b)
+    assert state.clean == (not ops)
+    for sat_kill, a, b in reversed(ops):
+        if sat_kill:
+            state.heal_sat(a)
+        else:
+            state.heal_link(b, a)               # reversed orientation too
+    assert state.clean
+    assert state.dead_sats == frozenset()
+    assert state.dead_links == frozenset()
+
+
+@given(ops=_faults)
+@settings(max_examples=100, deadline=None)
+def test_copy_on_write_snapshots_never_see_later_kills(ops):
+    """A reader's snapshot taken before a kill never sees it: every
+    mutation replaces the frozensets wholesale, so views captured
+    earlier are frozen at their capture-time contents."""
+    state = FaultState()
+    expected_sats: set = set()
+    expected_links: set = set()
+    snapshots = []          # (dead_sats view, dead_links view, expected)
+    for sat_kill, a, b in ops:
+        snapshots.append((state.dead_sats, state.dead_links,
+                          frozenset(expected_sats),
+                          frozenset(expected_links)))
+        if sat_kill:
+            state.kill_sat(a)
+            expected_sats.add(a)
+        else:
+            state.kill_link(a, b)
+            expected_links.add(link_key(a, b))
+        # every earlier snapshot still shows exactly what was dead when
+        # it was taken -- this kill did not leak into it
+        for dsat, dlink, want_sats, want_links in snapshots:
+            assert dsat == want_sats and dlink == want_links
+    assert state.dead_sats == frozenset(expected_sats)
+    assert state.dead_links == frozenset(expected_links)
 
 
 # ---------------------------------------------------------------------------
@@ -477,7 +762,7 @@ def test_engine_degraded_hits_under_partial_outage(dense_setup):
     kvc = make_kvc(replication=2)
     eng = _engine(model, params, kvc)
     eng.generate(_reqs(n=2, groups=1))              # populate + compile
-    kill_now(kvc, plan_survivable_kills(kvc, 3, seed=5))
+    kill_now(kvc, plan_survivable_kills(kvc, 3, seed=5 + SEED))
     out = eng.generate(_reqs(n=2, groups=1))
     assert all(len(r.token_ids) > 0 for r in out)
     assert sum(r.cached_tokens for r in out) > 0    # still hitting
@@ -498,7 +783,7 @@ def test_cluster_chaos_serve_in_order(dense_setup):
     cluster.serve(reqs, parallel=False)             # populate + compile
     cluster.reset_stats()
     inj = FaultInjector(kvc, FaultPlan.outages(
-        plan_survivable_kills(kvc, 3, seed=5),
+        plan_survivable_kills(kvc, 3, seed=5 + SEED),
         kill_at_s=0.0, stagger_s=0.05, downtime_s=1e9))
     inj.arm()
     out = cluster.serve(reqs, parallel=True)
@@ -527,7 +812,7 @@ def test_chaos_same_seed_same_serve_results(dense_setup):
         reqs = _reqs(n=6, groups=2)
         cluster.serve(reqs, parallel=False)
         inj = FaultInjector(kvc, FaultPlan.seeded_churn(
-            plan_survivable_kills(kvc, 4, seed=11), seed=11,
+            plan_survivable_kills(kvc, 4, seed=11 + SEED), seed=11 + SEED,
             n_outages=3, window_s=0.0))             # due at arm time
         inj.arm()
         out = cluster.serve(reqs, parallel=False)

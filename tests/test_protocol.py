@@ -99,7 +99,8 @@ def test_int8_quantized_roundtrip_close():
 
 def test_store_lru_eviction_order():
     evicted = []
-    s = SatelliteStore(capacity_bytes=10, on_evict=lambda st_, k: evicted.append(k))
+    s = SatelliteStore(
+        capacity_bytes=10, on_evict=lambda st_, k, v_: evicted.append(k))
     s.set((b"a", 0), b"xxxx")
     s.set((b"b", 0), b"yyyy")
     assert s.get((b"a", 0)) == b"xxxx"  # touch a -> b becomes LRU
