@@ -409,6 +409,9 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
     df_rows, df_record = _degraded_fabric(model, params, smoke=smoke)
     rows.extend(df_rows)
     record["degraded_fabric"] = df_record
+    sd_rows, sd_record = _striped_directory(model, params, smoke=smoke)
+    rows.extend(sd_rows)
+    record["striped_directory"] = sd_record
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)
@@ -426,6 +429,9 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
     dacc = record["degraded_fabric"]["acceptance"]
     if not all(dacc.values()):
         raise SystemExit(f"degraded_fabric acceptance failed: {dacc}")
+    sacc = record["striped_directory"]["acceptance"]
+    if not all(sacc.values()):
+        raise SystemExit(f"striped_directory acceptance failed: {sacc}")
     return rows
 
 
@@ -1101,6 +1107,208 @@ def _degraded_fabric(model, params, *, smoke: bool):
         f"lost={bare['lost_blocks']} | identical={identical}",
     ), (
         "degraded_fabric[acceptance]", 0.0,
+        " ".join(f"{k}={v}" for k, v in acceptance.items()),
+    )]
+    return rows, record
+
+
+def _striped_directory(model, params, *, smoke: bool):
+    """The metadata tier under fire: the directory is striped across the
+    fabric (entry home = hash-derived stripe, ``dir_replication``
+    plane-diverse copies), so losing satellites loses *metadata*, not
+    just chunks.  Mid-serve we wipe BOTH homes of the busiest stripe on
+    a dir_replication=2 cluster: lookups on that stripe degrade (probe
+    the dead home, fall through), blocks whose entries are unreachable
+    recompute -- every request still completes, tokens byte-identical to
+    the fault-free run -- and after the homes heal, ``reconcile``
+    rewrites the wiped stripe from inventory + the client journal.  The
+    cluster runs over a write-through ground tier: a stripe's homes are
+    the same satellites as its server's chunk homes, so the ground
+    segment absorbs the collateral *data* loss and what this scenario
+    isolates is the *metadata* failure mode.  A dir_replication=1 probe
+    on the same geometry shows the contrast: one dead stripe home and
+    its entries are simply gone, even though every chunk copy is still
+    in orbit (metadata loss, not data loss)."""
+    import hashlib
+
+    from repro.core import (
+        ConstellationKVC, ConstellationSpec, FaultInjector, FaultPlan,
+        GroundStationTier, IslTransport, LosWindow, Sat, SimClock,
+        Strategy, chain_hashes, stripe_of,
+    )
+    from repro.core.faults import FaultEvent
+    from repro.serving import EngineCluster, Request, SamplingParams
+
+    max_seq_len = 512
+    block = 128
+    groups = 5
+    dup = 4
+    gen_new = 4 if smoke else 8
+    filler = ("SkyMemory stripes the block directory across the "
+              "constellation: metadata is fabric state with homes, "
+              "replicas, priced lookups, and an inventory-driven "
+              "reconcile pass that rebuilds wiped stripes. ")
+    spec = ConstellationSpec(15, 15, 550.0)
+
+    def stream(rep: int):
+        return [
+            Request(prompt=f"[sd rep {rep} doc {i // dup}] " + filler * 2,
+                    sampling=SamplingParams(max_new_tokens=gen_new))
+            for i in range(groups * dup)
+        ]
+
+    def build():
+        clock = SimClock(rate=5.0)
+        kvc = ConstellationKVC(
+            spec, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+            num_servers=10, chunk_bytes=6 * 1024, replication=2,
+            dir_replication=2,
+            transport=IslTransport(spec, clock=clock,
+                                   chunk_processing_time_s=2e-4,
+                                   probe_timeout_s=5e-3),
+            ground=GroundStationTier(spec, processing_time_s=1e-3),
+            ground_write="all",
+        )
+        cluster = EngineCluster(
+            model, params, kvc, num_replicas=2, policy="prefix_affinity",
+            router_seed=0, block_size=block, max_seq_len=max_seq_len,
+            max_batch=4,
+        )
+        for i, eng in enumerate(cluster.engines):   # warm compiles
+            eng.generate([Request(prompt=f"[sd warm {i}] " + filler,
+                                  sampling=SamplingParams(max_new_tokens=2))])
+        # warm the cache + directory with the MEASURED stream: the
+        # measured serve is then pure metadata-plane traffic (every
+        # request resolves its prefix through a priced stripe lookup)
+        cluster.serve(stream(1))
+        cluster.reset_stats()
+        return cluster, kvc
+
+    def measure(faulted: bool) -> dict:
+        cluster, kvc = build()
+        # wipe the stripe that homes the most of the doc groups' tail-
+        # block entries -- the hashes the serve will actually look up
+        tails = [
+            chain_hashes(cluster.engines[0].tokenizer.encode(
+                f"[sd rep 1 doc {doc}] " + filler * 2), block)[-1]
+            for doc in range(groups)
+        ]
+        sid = max(range(kvc.num_servers),
+                  key=lambda s: sum(
+                      stripe_of(t, kvc.num_servers) == s for t in tails))
+        homes = [kvc.replica_sat(sid, r) for r in range(2)]
+        inj = None
+        if faulted:
+            events = []
+            # both kills due at the first fabric op of the serve: every
+            # lookup the stream issues on the wiped stripe degrades
+            for i, sat in enumerate(homes):
+                events.append(
+                    FaultEvent(at_s=i * 0.01, action="kill", sat=sat))
+                events.append(FaultEvent(at_s=1e9, action="heal", sat=sat))
+            inj = FaultInjector(kvc, FaultPlan(events))
+            inj.arm()
+        t0 = time.perf_counter()
+        out = cluster.serve(stream(1))
+        wall = time.perf_counter() - t0
+        merged = cluster.merged_stats()
+        run = {
+            "tokens_per_s": sum(len(r.token_ids) for r in out) / wall,
+            "requests": len(out),
+            "completed": sum(1 for r in out if len(r.token_ids) > 0),
+            "cached_tokens": merged.cached_tokens,
+            "token_ids": [list(r.token_ids) for r in out],
+            "wiped_stripe": sid,
+        }
+        if inj is not None:
+            run["sat_kills"] = inj.stats.sat_kills
+            run["dir_entries_dropped"] = inj.stats.dir_entries_dropped
+            inj.drain()                      # the wiped homes come back
+            run["shard_len_after_heal"] = kvc.dir_shard_len(homes[0])
+            run["reconciled_chunks"] = kvc.reconcile()
+            run["shard_len_after_reconcile"] = kvc.dir_shard_len(homes[0])
+        fabric = cluster.fabric_stats()
+        run.update({
+            "prefix_hit_rate": fabric["prefix_hit_rate"],
+            "dir_lookups": fabric["dir_lookups"],
+            "degraded_lookups": fabric["degraded_lookups"],
+            "dir_repaired_entries": fabric["dir_repaired_entries"],
+            "orphaned_chunks": fabric["orphaned_chunks"],
+            "degraded_reads": fabric["degraded_reads"],
+            "ground_hits": fabric["ground_hits"],
+            "lost_blocks": fabric["lost_blocks"],
+        })
+        return run
+
+    def k1_probe() -> dict:
+        # no model needed: a bare dir_replication=1 fabric with the same
+        # geometry, to show one dead stripe home = entries gone even
+        # though every chunk copy is still in orbit
+        kvc = ConstellationKVC(
+            spec, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+            num_servers=10, chunk_bytes=6 * 1024, replication=2,
+            dir_replication=1,
+        )
+        hashes = [hashlib.sha256(b"sd-probe-%d" % i).digest()
+                  for i in range(20)]
+        for i, h in enumerate(hashes):
+            kvc.set_block(h, bytes([i % 251]) * (2 * 6 * 1024))
+        sid = max(range(kvc.num_servers),
+                  key=lambda s: kvc.dir_shard_len(kvc.server_sat(s)))
+        inj = FaultInjector(kvc, FaultPlan.outages([kvc.server_sat(sid)]))
+        inj.arm()
+        inj.advance()
+        resolvable = sum(1 for h in hashes if kvc.get_block(h) is not None)
+        return {
+            "entries": len(hashes),
+            "entries_dropped": inj.stats.dir_entries_dropped,
+            "resolvable_after_kill": resolvable,
+        }
+
+    baseline = measure(faulted=False)
+    wiped = measure(faulted=True)
+    probe = k1_probe()
+
+    n_reqs = groups * dup
+    identical = wiped["token_ids"] == baseline["token_ids"]
+    acceptance = {
+        # a stripe wipeout costs lookups and recomputes, never answers
+        "all_requests_complete": all(
+            run["completed"] == n_reqs for run in (baseline, wiped)),
+        "outputs_byte_identical_to_fault_free": identical,
+        "lookups_are_priced_fabric_ops": baseline["dir_lookups"] > 0,
+        "degraded_lookups_nonzero": wiped["degraded_lookups"] > 0,
+        "stripe_rebuilt_by_reconcile":
+            wiped["dir_repaired_entries"] > 0
+            and wiped["shard_len_after_reconcile"]
+            > wiped["shard_len_after_heal"],
+        "dir_k1_demonstrably_loses_entries":
+            probe["entries_dropped"] > 0
+            and probe["resolvable_after_kill"] < probe["entries"],
+    }
+    record = {
+        "groups": groups, "dup_per_group": dup, "replicas": 2,
+        "replication": 2, "dir_replication": 2,
+        "unfaulted": {k: v for k, v in baseline.items()
+                      if k != "token_ids"},
+        "stripe_wiped": {k: v for k, v in wiped.items()
+                         if k != "token_ids"},
+        "dir_k1_probe": probe,
+        "acceptance": acceptance,
+    }
+    rows = [(
+        "striped_directory", 0.0,
+        f"unfaulted hit={baseline['prefix_hit_rate']*100:.0f}% "
+        f"dir_lookups={baseline['dir_lookups']} | stripe "
+        f"{wiped['wiped_stripe']} wiped (entries_dropped="
+        f"{wiped['dir_entries_dropped']}): "
+        f"hit={wiped['prefix_hit_rate']*100:.0f}% "
+        f"degraded_lookups={wiped['degraded_lookups']} "
+        f"repaired_entries={wiped['dir_repaired_entries']} | k1 probe: "
+        f"{probe['resolvable_after_kill']}/{probe['entries']} resolvable "
+        f"after one stripe-home kill | identical={identical}",
+    ), (
+        "striped_directory[acceptance]", 0.0,
         " ".join(f"{k}={v}" for k, v in acceptance.items()),
     )]
     return rows, record

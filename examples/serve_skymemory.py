@@ -33,11 +33,18 @@ depth by default so the demo runs in ~a minute on CPU) from an
   below the constellation: orbital losses fall through to ground
   (``ground_hits``) and the post-run repair re-replicates them back
   into orbit (``repaired_from_ground``) instead of purging.
+* **Decentralized directory** -- block metadata is fabric state too:
+  each entry lives on a hash-derived stripe, replicated
+  ``--dir-replication`` times plane-diversely, and every lookup is a
+  priced ISL op (``dir_lookups``).  Killing a stripe home degrades
+  lookups onto the surviving copies (``degraded_lookups``); the final
+  ``reconcile`` pass rebuilds wiped stripes from satellite inventories
+  (``dir_repaired_entries``) and sweeps orphaned chunks.
 
 Run: PYTHONPATH=src python examples/serve_skymemory.py
      [--full] [--replicas N] [--requests N] [--policy random]
-     [--replication K] [--outages N] [--degrade-links N]
-     [--ground-stations N]
+     [--replication K] [--dir-replication K] [--outages N]
+     [--degrade-links N] [--ground-stations N]
 """
 import argparse
 import sys
@@ -88,6 +95,9 @@ def main() -> None:
                     choices=["prefix_affinity", "random"])
     ap.add_argument("--replication", type=int, default=2,
                     help="copies of every chunk (plane-diverse homes)")
+    ap.add_argument("--dir-replication", type=int, default=None,
+                    help="copies of every directory-stripe entry "
+                         "(default: match --replication)")
     ap.add_argument("--outages", type=int, default=0,
                     help="chunk-server satellites killed mid-serve")
     ap.add_argument("--degrade-links", type=int, default=0,
@@ -123,6 +133,7 @@ def main() -> None:
         spec, LosWindow(Sat(2, 9), 5, 5), Strategy.ROTATION_HOP,
         num_servers=10, chunk_bytes=6 * 1024,
         replication=args.replication,
+        dir_replication=args.dir_replication,
         transport=IslTransport(spec, clock=clock,
                                chunk_processing_time_s=2e-4,
                                probe_timeout_s=5e-3),
@@ -236,7 +247,7 @@ def main() -> None:
           f"(hits survive chunk migration)")
     if injector is not None:
         injector.drain()            # outstanding heals land
-        repaired = kvc.repair()     # re-replicate what the crashes lost
+        repaired = kvc.reconcile()  # rebuild metadata, then lost chunks
     else:
         repaired = 0
     fabric = cluster.fabric_stats()
@@ -255,6 +266,13 @@ def main() -> None:
           f"repaired_from_ground={fabric['repaired_from_ground']}"
           + (f" | ground tier holds {len(kvc.ground)} blocks"
              if kvc.ground is not None else " (no ground segment)"))
+    print(f"striped directory: dir_replication={kvc.dir_replication} | "
+          f"dir_lookups={fabric['dir_lookups']} "
+          f"degraded_lookups={fabric['degraded_lookups']} | entries "
+          f"dropped={0 if injector is None else injector.stats.dir_entries_dropped}"
+          f" rebuilt={fabric['dir_repaired_entries']} | "
+          f"orphaned_chunks={fabric['orphaned_chunks']} "
+          f"shortened_prefixes={fabric['shortened_prefixes']}")
 
 
 if __name__ == "__main__":

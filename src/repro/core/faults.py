@@ -27,9 +27,12 @@ Three pieces:
   anchors the plan at the current clock reading, and ``advance()``
   (called by the store at the top of every chunk op, so no extra thread
   is needed) applies every event whose time has passed.  Killing a
-  satellite drops its chunk store -- the data is *gone*, not hidden --
-  while the block directory keeps its entries so degraded reads can fall
-  through to surviving replicas and a repair pass can re-replicate.
+  satellite drops its chunk store AND its directory-stripe shard -- data
+  and metadata are both fabric state and both die with their host.
+  Degraded reads fall through to surviving chunk replicas, degraded
+  *lookups* fall through to surviving directory-stripe replicas, and
+  ``reconcile()`` rebuilds both from what survives (chunk re-replication
+  plus inventory-driven metadata reconstruction).
 """
 from __future__ import annotations
 
@@ -295,6 +298,7 @@ class FaultInjectorStats:
     link_kills: int = 0
     link_heals: int = 0
     chunks_dropped: int = 0   # store entries destroyed by satellite deaths
+    dir_entries_dropped: int = 0  # directory-shard entries destroyed
 
     @property
     def events_applied(self) -> int:
@@ -379,6 +383,9 @@ class FaultInjector:
             if ev.action == "kill":
                 self.state.kill_sat(sat)
                 self.stats.sat_kills += 1
+                # shard size BEFORE the drop wipes it: the injector is
+                # the fault source, so it attributes the metadata loss
+                self.stats.dir_entries_dropped += self.kvc.dir_shard_len(sat)
                 self.stats.chunks_dropped += self.kvc.drop_satellite(sat)
             else:
                 self.state.heal_sat(sat)
@@ -399,15 +406,25 @@ class FaultInjector:
 def plan_survivable_kills(kvc, n_kills: int, *, seed: int = 0) -> list[Sat]:
     """Pick up to ``n_kills`` chunk-server satellites to kill such that,
     at the store's replication factor, no chunk loses its *entire*
-    replica home set -- the benchmark's "replication survives this"
-    schedule (with ``replication == 1`` nothing is survivable, so any
-    servers may be picked; that is the collapse baseline).  Seeded and
-    deterministic for a given store geometry."""
+    replica home set -- and, since PR 7, no directory stripe loses its
+    entire metadata home set either -- the benchmark's "replication
+    survives this" schedule.  A factor of 1 (data or metadata) means
+    nothing at that tier is survivable, so that tier's constraint is
+    waived; that is the collapse baseline.  Seeded and deterministic for
+    a given store geometry."""
     rng = random.Random(seed)
-    home_sets = [
-        {kvc.replica_sat(sid, r) for r in range(kvc.replication)}
-        for sid in range(kvc.num_servers)
-    ]
+    home_sets: list[set[Sat]] = []
+    if kvc.replication > 1:
+        home_sets += [
+            {kvc.replica_sat(sid, r) for r in range(kvc.replication)}
+            for sid in range(kvc.num_servers)
+        ]
+    kd = getattr(kvc, "dir_replication", kvc.replication)
+    if kd > 1:
+        home_sets += [
+            {kvc.replica_sat(sid, r) for r in range(kd)}
+            for sid in range(kvc.num_servers)
+        ]
     cands = list(dict.fromkeys(kvc.server_map))
     rng.shuffle(cands)
     killed: set[Sat] = set()
@@ -415,7 +432,7 @@ def plan_survivable_kills(kvc, n_kills: int, *, seed: int = 0) -> list[Sat]:
     for sat in cands:
         if len(out) >= n_kills:
             break
-        if kvc.replication > 1 and any(
+        if home_sets and any(
                 homes <= killed | {sat} for homes in home_sets):
             continue
         killed.add(sat)

@@ -4,6 +4,11 @@ When satellites drift out of the LOS window their chunks are migrated -- in
 parallel within each orbital plane -- to the satellites about to enter LOS.
 A migration is harmless if the chunk briefly exists on both satellites
 (paper §3.7), so moves are modeled copy-then-delete.
+
+Since PR 7 a move carries metadata too: the directory-stripe shards
+homed on the departing satellite (and its replica offsets) ride along to
+the destination, so lookups keep resolving through the live server map
+after rotation (``ConstellationKVC.execute_move``).
 """
 from __future__ import annotations
 

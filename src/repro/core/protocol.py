@@ -37,6 +37,7 @@ from repro.core.chunking import (
     split_chunks,
 )
 from repro.core.constellation import ConstellationSpec, LosWindow, Sat
+from repro.core.directory import StripedDirectory, stripe_of
 from repro.core.hashing import chain_hashes, split_token_blocks
 from repro.core.mapping import Strategy, place_servers
 from repro.core.radix import BlockMeta, RadixBlockIndex
@@ -270,6 +271,12 @@ class CacheStats:
     ground_hits: int = 0      # ops answered by the ground tier fall-through
     ground_spills: int = 0    # orbit-evicted blocks demoted to ground
     repaired_from_ground: int = 0  # blocks re-replicated from ground
+    # decentralized directory (striped metadata on the fabric):
+    dir_lookups: int = 0      # priced directory lookups issued
+    degraded_lookups: int = 0  # lookups that probed >=1 dead stripe home
+    dir_repaired_entries: int = 0  # entry copies rewritten by reconcile()
+    orphaned_chunks: int = 0  # inventoried chunks with no provable entry
+    shortened_prefixes: int = 0  # index prefixes walked back at Get time
 
 
 # ---------------------------------------------------------------------------
@@ -427,6 +434,7 @@ class ConstellationKVC:
         per_sat_capacity_bytes: int | None = None,
         transport: IslTransport | None = None,
         replication: int = 1,
+        dir_replication: int | None = None,
         ground: "GroundStationTier | None" = None,
         ground_write: str = "none",
     ) -> None:
@@ -442,6 +450,13 @@ class ConstellationKVC:
                 f"replication must be in [1, {spec.num_sats}] "
                 f"(got {replication})")
         self.replication = replication
+        if dir_replication is None:
+            dir_replication = replication
+        if not 1 <= dir_replication <= spec.num_sats:
+            raise ValueError(
+                f"dir_replication must be in [1, {spec.num_sats}] "
+                f"(got {dir_replication})")
+        self.dir_replication = dir_replication
         self.ground: GroundStationTier | None = None
         self.ground_write = "none"
         # blocks deliberately demoted to ground-only residency (capacity
@@ -458,8 +473,15 @@ class ConstellationKVC:
         self._stores: dict[Sat, SatelliteStore] = {}
         self._capacity = per_sat_capacity_bytes
         self.policy = None   # shared LRU clock, injected via adopt_policy
-        # block hash -> n_chunks for blocks believed stored (server-side dir).
-        self.directory: dict[bytes, int] = {}
+        # Block metadata lives ON the fabric: ``block_hash -> n_chunks``
+        # entries are striped over the satellites (stripe home =
+        # hash-derived server, ``dir_replication`` plane-diverse copies)
+        # and die with their hosts.  ``_known_blocks`` is this client's
+        # own journal of what it ever registered -- control-plane
+        # bookkeeping (sweeps, the purge/lost decision, prefetch), never
+        # consulted by a priced data-plane lookup.
+        self._dir = StripedDirectory()
+        self._known_blocks: dict[bytes, int] = {}
         self.on_block_lost: Callable[[bytes], None] | None = None
         self.injector = None  # core.faults.FaultInjector, via attach_faults
         self._repaired_at_event = -1   # rotate-repair gating
@@ -509,7 +531,7 @@ class ConstellationKVC:
         *demoted*: orbital chunks dropped, directory entry kept, and
         Gets fall through to ground instead of recomputing."""
         block_hash, cid = key
-        if self.ground is not None and block_hash in self.directory:
+        if self.ground is not None and block_hash in self._known_blocks:
             if self.ground.contains(block_hash):
                 self._demote_to_ground(block_hash)
                 return
@@ -530,7 +552,7 @@ class ConstellationKVC:
         (plus the just-evicted one, already out of its store).  Returns
         None when any chunk has no copy left -- then there is nothing
         whole to spill and the eviction degenerates to a purge."""
-        n_chunks = self.directory[block_hash]
+        n_chunks = self._known_blocks[block_hash]
         chunks: list[bytes] = []
         for cid in range(n_chunks):
             if cid == evicted_cid:
@@ -572,8 +594,149 @@ class ConstellationKVC:
         """Home satellite of replica ``replica`` of server
         ``server_id0``'s chunks (replica 0 = the server's own satellite).
         Derived from the live ``server_map``, so rotation migration moves
-        every replica's home along with its server."""
+        every replica's home along with its server.  Directory stripes
+        use the same geometry: stripe ``sid`` replica ``r`` lives here
+        too (metadata moves with the server it describes)."""
         return self._offset_sat(self.server_map[server_id0], replica)
+
+    # -- the decentralized directory (metadata plane) -------------------
+    @property
+    def directory(self) -> dict[bytes, int]:
+        """Control-plane merged view of the block metadata: the client's
+        journal plus every surviving stripe shard.  This is what sweeps,
+        gossip-cost models and tests read; it is *free* and therefore
+        never consulted by a data-plane op -- ``get_block``/``has_block``
+        resolve ``n_chunks`` through the priced stripe walk
+        (``_dir_lookup``), which really does lose entries when every
+        shard replica dies."""
+        merged = dict(self._known_blocks)
+        merged.update(self._dir.entries())
+        return merged
+
+    def dir_shard_len(self, sat: Sat) -> int:
+        """Entry count of the directory shard hosted by ``sat``."""
+        return self._dir.shard_len(self.spec.wrap(sat))
+
+    def _replica_order(self, sid: int, src: Sat, tr: IslTransport,
+                       f, k: int) -> list[int]:
+        """Swarm read order: replica indices of server/stripe ``sid``
+        sorted by the round-trip price ``src`` would pay to each home
+        (ties by replica index, so a single-replica fabric reduces to
+        placement order).  Shared by the Get fall-through, presence
+        probes, directory lookups and ``estimate_get_latency_s``, so the
+        router prices exactly the walk the fetch will run.  Dead homes
+        are NOT filtered: liveness is only learned by paying the probe,
+        so a cheap-but-dead home is charged before the cheapest live
+        one -- precisely what the estimator prices."""
+        if k == 1:
+            return [0]
+        costs = sorted(
+            (tr.op_latency_s(src, self.replica_sat(sid, r), 0,
+                             round_trip=True, faults=f), r)
+            for r in range(k))
+        return [r for _, r in costs]
+
+    def _fallthrough_cost_s(
+        self, sid: int, src: Sat, tr: IslTransport, f, k: int,
+        n_bytes: int,
+    ) -> tuple[float, bool]:
+        """Pure price of one replica fall-through walk from ``src``:
+        every dead home charges its timed-out probe, the first reachable
+        home answers a round trip of ``n_bytes``.  Returns
+        ``(latency_s, served)`` -- ``served`` False when every home is
+        out (the caller prices the ground leg or declares the op
+        unreachable).  No accounting: this is the estimator's half of
+        the estimate/fetch agreement."""
+        lat = 0.0
+        for r in self._replica_order(sid, src, tr, f, k):
+            sat = self.replica_sat(sid, r)
+            if self._reachable(src, sat):
+                lat += tr.op_latency_s(src, sat, n_bytes,
+                                       round_trip=True, faults=f)
+                return lat, True
+            lat += tr.probe_latency_s(src, sat, faults=f)
+        return lat, False
+
+    def _dir_lookup(
+        self, block_hash: bytes, tr: IslTransport, cs: CacheStats,
+    ) -> tuple[int | None, float, bool]:
+        """Priced lookup of a block's metadata entry on its stripe.
+
+        Walks the stripe's replica homes in swarm (cheapest-first)
+        order, exactly like a degraded data read: a dead or partitioned
+        home charges its timed-out probe, a live home answers at its
+        real round trip.  A live home *without* the entry falls through
+        too -- it may have healed empty after a crash -- and the entry
+        is a miss only once every live home answered empty.  Returns
+        ``(n_chunks | None, latency_s, unreachable)``; ``unreachable``
+        is True only when no home answered at all (genuine partition:
+        the metadata may still exist, so callers must not purge on it).
+        ``degraded_lookups`` counts lookups that probed at least one
+        dead home -- found or not, the metadata plane degraded them."""
+        f = self.faults
+        src = tr.src_for(self.center)
+        sid = stripe_of(block_hash, self.num_servers)
+        cs.dir_lookups += 1
+        lat = 0.0
+        n: int | None = None
+        dead_fall = False
+        answered = False
+        for r in self._replica_order(sid, src, tr, f,
+                                     self.dir_replication):
+            sat = self.replica_sat(sid, r)
+            if not self._reachable(src, sat):
+                lat += tr.chunk_probe_latency_s(self.center, sat, faults=f)
+                dead_fall = True
+                continue
+            lat += tr.chunk_op_latency_s(self.center, sat, 0,
+                                         round_trip=True, faults=f)
+            answered = True
+            hit = self._dir.shard(sat).get(block_hash)
+            if hit is not None:
+                n = hit
+                break
+        if dead_fall:
+            cs.degraded_lookups += 1
+        return n, lat, not answered
+
+    def _dir_register(
+        self, block_hash: bytes, n_chunks: int, tr: IslTransport,
+    ) -> float:
+        """Priced register on Set: write the entry to every *reachable*
+        stripe replica home (one-way messages, parallel with the data
+        writes -- the caller folds the returned worst leg into the Set's
+        max).  Dead homes are skipped; ``reconcile`` back-fills them.
+        The client always journals the block host-side: it remembers
+        what it wrote even when the metadata plane cannot."""
+        f = self.faults
+        src = tr.src_for(self.center)
+        sid = stripe_of(block_hash, self.num_servers)
+        self._known_blocks[block_hash] = n_chunks
+        worst = 0.0
+        for r in range(self.dir_replication):
+            sat = self.replica_sat(sid, r)
+            if not self._reachable(src, sat):
+                continue
+            self._dir.shard(sat)[block_hash] = n_chunks
+            worst = max(worst, tr.chunk_op_latency_s(
+                self.center, sat, 0, round_trip=False, faults=f))
+        return worst
+
+    def _dir_unregister(self, block_hash: bytes) -> int | None:
+        """Purge-side metadata gossip: drop the entry from every stripe
+        home holding it (one message each) and the client journal.
+        Modeled as always landing -- a stale entry surviving a missed
+        purge would make a later Get charge a full fetch walk, discover
+        nothing, and count the block lost, polluting the loss counters
+        with blocks that were deliberately purged.  Returns the
+        journaled ``n_chunks`` (None when the block was unknown)."""
+        n = self._known_blocks.pop(block_hash, None)
+        sid = stripe_of(block_hash, self.num_servers)
+        for r in range(self.dir_replication):
+            sat = self.replica_sat(sid, r)
+            if self._dir.shard(sat).pop(block_hash, None) is not None:
+                self.transport.stats.messages += 1
+        return n
 
     # -- fault plumbing ------------------------------------------------
     def attach_faults(self, injector) -> None:
@@ -607,14 +770,20 @@ class ConstellationKVC:
             cs.detour_hops += extra
 
     def drop_satellite(self, sat: Sat) -> int:
-        """A satellite died: its chunk store's contents are destroyed.
+        """A satellite died: its chunk store's contents are destroyed,
+        and so is the directory shard it hosted -- metadata is fabric
+        state and does not outlive its satellite.
 
-        Not an eviction -- no ``on_evict`` gossip, and the directory
-        keeps its block entries -- because the data *may* survive
-        elsewhere: degraded reads fall through to the other replicas and
-        ``repair`` re-replicates (or finally purges) what the crash
-        orphaned.  Returns the number of chunks destroyed."""
-        store = self._stores.get(self.spec.wrap(sat))
+        Not an eviction -- no ``on_evict`` gossip -- because the data
+        *may* survive elsewhere: degraded reads fall through to the
+        other replicas, degraded lookups to the other stripe homes, and
+        ``reconcile`` rebuilds lost shards / re-replicates (or finally
+        purges) what the crash orphaned.  Returns the number of chunks
+        destroyed (``dir_shard_len`` before the kill tells a fault
+        source how many metadata entries died with them)."""
+        sat = self.spec.wrap(sat)
+        self._dir.drop(sat)
+        store = self._stores.get(sat)
         if store is None:
             return 0
         return len(store.pop_all())
@@ -651,19 +820,26 @@ class ConstellationKVC:
         *,
         payload_bytes: int | None = None,
         transport: IslTransport | None = None,
+        block_hash: bytes | None = None,
     ) -> float:
         """Predicted Get KVC block latency from ``anchor``: the max
         round-trip chunk op over the chunk servers a block of
-        ``payload_bytes`` (default: a full stripe) lands on.  Pure -- no
-        stats, no data movement -- this is the router's hop-awareness
-        signal, priced by the same transport model the fetch will
-        experience: under faults each server is priced as the degraded
-        read would run it -- failed probes of dead replicas first
-        (``probe_latency_s``, the same explicit timeout the fall-through
-        charges), then the first live replica over its detoured route,
-        then -- when every replica is out -- the ground tier's round
-        trip.  Detours, timeouts and the ground leg all show up in
-        routing scores before any engine experiences them."""
+        ``payload_bytes`` (default: a full stripe) lands on, plus -- when
+        the caller knows which block it will fetch (``block_hash``) --
+        the priced directory-stripe lookup that fronts the fetch.  Pure
+        -- no stats, no data movement -- this is the router's
+        hop-awareness signal, priced by the same swarm walk the fetch
+        will run (``_replica_order`` / ``_fallthrough_cost_s``): under
+        faults each server is priced as the degraded read would run it
+        -- failed probes of dead replicas first (``probe_latency_s``,
+        the same explicit timeout the fall-through charges), then the
+        cheapest live replica over its detoured route, then -- when
+        every replica is out -- the ground tier's round trip.  Detours,
+        timeouts, the metadata leg and the ground leg all show up in
+        routing scores before any engine experiences them.  Without
+        ``block_hash`` the metadata leg is omitted: it is a 0-byte round
+        trip every candidate anchor pays alike, so the relative ranking
+        the router needs is preserved."""
         self._tick_faults()   # due kills/heals land before pricing
         tr = transport if transport is not None else self.transport
         f = self.faults
@@ -674,26 +850,22 @@ class ConstellationKVC:
         anchor = self.spec.wrap(anchor)
         pb = (payload_bytes if payload_bytes is not None
               else nb * self.chunk_bytes)
+        dir_lat = 0.0
+        if block_hash is not None:
+            dir_lat, _ = self._fallthrough_cost_s(
+                stripe_of(block_hash, self.num_servers), anchor, tr, f,
+                self.dir_replication, 0)
         worst = 0.0
         for sid in servers:
-            lat = 0.0
-            served = False
-            for r in range(self.replication):
-                sat = self.replica_sat(sid, r)
-                if self._reachable(anchor, sat):
-                    lat += tr.op_latency_s(anchor, sat, self.chunk_bytes,
-                                           round_trip=True, faults=f)
-                    served = True
-                    break
-                # a dead replica costs its timed-out probe
-                lat += tr.probe_latency_s(anchor, sat, faults=f)
+            lat, served = self._fallthrough_cost_s(
+                sid, anchor, tr, f, self.replication, self.chunk_bytes)
             if not served and self.ground is not None:
                 # no orbital copy answerable: the fetch would fall
                 # through to ground for the whole payload
                 lat += self.ground.op_latency_s(
                     tr, self.center, pb, round_trip=True, faults=f)
             worst = max(worst, lat)
-        return worst
+        return dir_lat + worst
 
     # -- Set KVC (paper §3.8) ------------------------------------------
     def set_block(
@@ -746,7 +918,6 @@ class ConstellationKVC:
                         self._ground_latency_s(tr, len(payload),
                                                round_trip=False))
             grounded = True
-        tr.record_op(worst)
         stored_ok = complete or grounded
         if stored_ok:
             # a chunk with zero landed copies makes a purely orbital
@@ -756,10 +927,14 @@ class ConstellationKVC:
             # content addressing makes the old bytes identical to what
             # this write carried.  A grounded write registers even when
             # incomplete: the data exists below, repair promotes it.
-            self.directory[block_hash] = len(chunks)
+            # The register runs in parallel with the chunk writes, so
+            # its worst one-way leg joins the Set's max.
+            worst = max(worst,
+                        self._dir_register(block_hash, len(chunks), tr))
             cs.blocks_set += 1
             self._ground_demoted.discard(block_hash)
-        elif block_hash not in self.directory:
+        tr.record_op(worst)
+        if not stored_ok and block_hash not in self._known_blocks:
             # failed fresh write: drop the partial chunks that did land,
             # or they would linger as orphans no sweep walks (the sweep
             # and repair passes scan the directory, which never learned
@@ -775,50 +950,79 @@ class ConstellationKVC:
         )
 
     # -- Get KVC (paper §3.8) ------------------------------------------
+    def _probe_chunk(
+        self, block_hash: bytes, cid: int, tr: IslTransport,
+        cs: CacheStats, f, src: Sat,
+    ) -> tuple[bool, float, bool]:
+        """One presence probe with swarm replica fall-through: returns
+        ``(present, latency_s, fell_through)``.  A dead home's probe
+        times out (``chunk_probe_latency_s``), an empty live home
+        answers negatively at its real round trip; either way the next
+        cheapest copy is tried.  A positive probe *touches* the chunk's
+        LRU clock: a presence check is a use (the caller is about to
+        rely on the block), and leaving it unstamped made repeatedly-
+        probed blocks look cold and get evicted first."""
+        sid = chunk_server(cid, self.num_servers)
+        lat = 0.0
+        fell = False
+        for r in self._replica_order(sid, src, tr, f, self.replication):
+            sat = self.replica_sat(sid, r)
+            if not self._reachable(src, sat):
+                # failed attempt: the probe times out
+                lat += tr.chunk_probe_latency_s(self.center, sat, faults=f)
+                fell = True
+                continue
+            lat += tr.chunk_op_latency_s(self.center, sat, 0,
+                                         round_trip=True, faults=f)
+            store = self.store_for(sat)
+            if store.contains((block_hash, cid)):
+                store.touch((block_hash, cid))
+                self._note_detour(cs, src, sat)
+                return True, lat, fell
+            fell = True
+        return False, lat, fell
+
     def has_block(
         self, block_hash: bytes, *,
         via: IslTransport | None = None, stats: CacheStats | None = None,
     ) -> bool:
-        """Probe chunk 0 at its server -- a missing first chunk means the
-        block is absent (paper: lookups start at the nearest satellite).
+        """Priced presence check: resolve the entry on its directory
+        stripe, then probe the block's first AND last chunk at their
+        replica homes.  (Chunk 0 alone read as present after a *later*
+        chunk died with all its homes -- the false positive that made
+        ``lookup_longest`` promise prefixes ``get_block`` could not
+        serve.)  The two chunk probes fan out in parallel after the
+        lookup, so the op's latency is the lookup plus their max.
 
-        A positive probe *touches* the chunk's LRU clock: a presence
-        check is a use (the caller is about to rely on the block), and
-        leaving it unstamped made repeatedly-probed blocks look cold and
-        get evicted first -- the staleness the shared policy fixed.
-
-        Degraded probes: a dead replica's probe times out
-        (``probe_latency_s``) and an empty live replica answers
-        negatively at its real round trip; either way the next copy is
-        tried.  With a ground tier attached, absent from every replica
-        home falls through to one ground round trip -- absent now means
-        absent from orbit *and* ground."""
+        Degraded probes fall through replicas exactly like a degraded
+        read (see ``_probe_chunk``).  When the directory entry is
+        missing or its stripe unreachable, a ground tier is the
+        authority of last resort: one ground round trip answers, and
+        absent now means absent from the metadata plane *and* ground.
+        A middle chunk lost everywhere can still slip through -- probing
+        every chunk would cost a full Get -- but ``get_cache_tokens``
+        walks a failed Get back to the longest servable boundary
+        (``shortened_prefixes``), so the residue is a shorter prefix,
+        never a crash."""
         tr = via or self.transport
         cs = stats or self.stats
         self._tick_faults()
         f = self.faults
         cs.lookup_probes += 1
-        sid = chunk_server(0, self.num_servers)
         src = tr.src_for(self.center)
-        lat = 0.0
+        n_chunks, lat, _unreach = self._dir_lookup(block_hash, tr, cs)
         present = False
         fell_through = False
-        for r in range(self.replication):
-            sat = self.replica_sat(sid, r)
-            if not self._reachable(src, sat):
-                # failed attempt: the probe times out
-                lat += tr.chunk_probe_latency_s(self.center, sat, faults=f)
-                fell_through = True
-                continue
-            lat += tr.chunk_op_latency_s(self.center, sat, 0,
-                                         round_trip=True, faults=f)
-            store = self.store_for(sat)
-            if store.contains((block_hash, 0)):
-                store.touch((block_hash, 0))
-                present = True
-                self._note_detour(cs, src, sat)
-                break
-            fell_through = True
+        if n_chunks is not None:
+            present = True
+            probe_worst = 0.0
+            for cid in sorted({0, n_chunks - 1}):
+                got, plat, pfell = self._probe_chunk(
+                    block_hash, cid, tr, cs, f, src)
+                probe_worst = max(probe_worst, plat)
+                fell_through |= pfell
+                present &= got
+            lat += probe_worst
         if not present and self.ground is not None \
                 and self.ground.contains(block_hash):
             lat += self._ground_latency_s(tr, 0, round_trip=True)
@@ -837,9 +1041,18 @@ class ConstellationKVC:
         """Fetch a block's chunks (all chunks in parallel, so the block
         latency is the max over per-chunk fetch sequences).
 
-        Degraded reads: per chunk, replicas are tried in placement order
-        and every failed attempt -- a dead/unreachable home's timed-out
-        probe (``probe_latency_s``), or a live home that lost the copy
+        The fetch is fronted by a priced directory lookup on the block's
+        metadata stripe (``_dir_lookup``) resolving ``n_chunks``; its
+        latency is the sequential prelude to the parallel chunk fan-out.
+        A lookup miss is a clean block miss -- unless a ground tier is
+        attached, in which case the durable tier is the authority of
+        last resort and answers the whole payload (metadata loss is not
+        data loss).
+
+        Degraded reads: per chunk, replicas are tried cheapest-first
+        (the swarm order ``estimate_get_latency_s`` prices) and every
+        failed attempt -- a dead/unreachable home's timed-out probe
+        (``probe_latency_s``), or a live home that lost the copy
         answering at its real round trip -- charges *before* the next
         replica is tried, so the experienced latency of a degraded fetch
         really contains the detours; ops over routes with killed links
@@ -850,16 +1063,30 @@ class ConstellationKVC:
         misses too does the block fail (§3.1): a clean miss, never an
         exception.  The block is lazily purged only when every replica
         home answered empty AND ground missed (it is *gone*); while a
-        home is merely unreachable the directory keeps the entry -- the
+        home is merely unreachable the metadata keeps its entries -- the
         data may still be there when the fault heals."""
         tr = via or self.transport
         cs = stats or self.stats
         self._tick_faults()
         f = self.faults
+        dir_lat = 0.0
         if n_chunks is None:
-            n_chunks = self.directory.get(block_hash, 0)
-            if n_chunks == 0:
+            n_chunks, dir_lat, _unreach = self._dir_lookup(
+                block_hash, tr, cs)
+            if n_chunks is None:
+                if self.ground is not None:
+                    payload = self.ground.get(block_hash)
+                    if payload is not None:
+                        lat = dir_lat + self._ground_latency_s(
+                            tr, len(payload), round_trip=True)
+                        tr.stats.messages += 1
+                        tr.stats.bytes_moved += len(payload)
+                        tr.record_op(lat)
+                        cs.block_hits += 1
+                        cs.ground_hits += 1
+                        return payload
                 cs.block_misses += 1
+                tr.record_op(dir_lat)
                 return None
         src = tr.src_for(self.center)
         chunks: list[bytes] = []
@@ -870,7 +1097,8 @@ class ConstellationKVC:
             attempt_s = 0.0
             chunk = None
             unreachable = False
-            for r in range(self.replication):
+            order = self._replica_order(sid, src, tr, f, self.replication)
+            for j, r in enumerate(order):
                 sat = self.replica_sat(sid, r)
                 if not self._reachable(src, sat):
                     # failed attempt: the probe times out
@@ -881,7 +1109,7 @@ class ConstellationKVC:
                     continue
                 got = self.store_for(sat).get((block_hash, cid))
                 if got is None:
-                    if r + 1 < self.replication:
+                    if j + 1 < len(order):
                         # empty live replica: charge the (answered)
                         # probe and fall through (the copy may have
                         # died with a crash this home has since healed
@@ -908,7 +1136,7 @@ class ConstellationKVC:
                         tr, len(payload), round_trip=True)
                     tr.stats.messages += 1
                     tr.stats.bytes_moved += len(payload)
-                    tr.record_op(max(worst, attempt_s))
+                    tr.record_op(dir_lat + max(worst, attempt_s))
                     cs.block_hits += 1
                     cs.ground_hits += 1
                     if degraded:
@@ -924,7 +1152,7 @@ class ConstellationKVC:
                 return None
             worst = max(worst, attempt_s)
             chunks.append(chunk)
-        tr.record_op(worst)
+        tr.record_op(dir_lat + worst)
         cs.block_hits += 1
         if degraded:
             cs.degraded_reads += 1
@@ -952,8 +1180,10 @@ class ConstellationKVC:
     # -- eviction (§3.9) -------------------------------------------------
     def purge_block(self, block_hash: bytes) -> int:
         """Gossip-style purge: remove every chunk of the block everywhere
-        -- the ground tier included (an invalidation, unlike demotion)."""
-        n = self.directory.pop(block_hash, None)
+        -- the ground tier included (an invalidation, unlike demotion)
+        -- and unregister the entry from its directory stripe (one
+        priced message per shard copy dropped)."""
+        n = self._dir_unregister(block_hash)
         self._ground_demoted.discard(block_hash)
         removed = 0
         for store in self._stores.values():
@@ -972,9 +1202,11 @@ class ConstellationKVC:
         """Periodic cleanup: purge blocks with missing chunks (§3.9) --
         under replication, missing means *no replica home* has a copy.
         Blocks the ground tier holds are exempt: they are still
-        servable (Get falls through) and repair re-seeds them."""
+        servable (Get falls through) and repair re-seeds them.  The scan
+        walks the client journal -- control-plane housekeeping over what
+        this client wrote, not a priced metadata lookup."""
         purged = 0
-        for block_hash, n_chunks in list(self.directory.items()):
+        for block_hash, n_chunks in list(self._known_blocks.items()):
             ok = all(
                 any(
                     self.store_for(
@@ -993,29 +1225,112 @@ class ConstellationKVC:
                 purged += 1
         return purged
 
-    # -- repair (fault tolerance) -----------------------------------------
+    # -- anti-entropy reconcile + repair (fault tolerance) -----------------
     def repair(self) -> int:
-        """Re-replication pass: restore every directory block to its full
-        replica set by copying a surviving chunk copy onto each live
-        replica home that lost (or never received) its own.  A chunk
-        with no surviving *orbital* copy re-replicates from the ground
-        tier when one holds the payload -- ``repaired_from_ground``
-        counts each block so rescued -- and only when ground misses too
-        is the block unrecoverable: purged, ``on_block_lost`` fired so
-        the radix index prunes, counted in ``stats.lost_blocks``.
-        Deliberately ground-demoted blocks (capacity spills) are skipped:
-        re-promoting them would undo the eviction.  Runs on ``rotate()``
-        when a fault source is attached, on heal events
-        (``FaultInjector(repair_on_heal=True)``), or explicitly.
+        """Back-compat name for ``reconcile`` (rotation housekeeping,
+        heal hooks and the chaos suite call it by this name).  Returns
+        the number of chunk copies re-replicated, as before."""
+        return self.reconcile()
 
+    def _reconstruct_n(
+        self, block_hash: bytes, slots: dict[int, list[Sat]],
+    ) -> int | None:
+        """Rebuild a lost directory entry from a chunk inventory alone.
+
+        Provable only when the tail chunk is identifiable: the ground
+        tier knows the exact payload length, or the highest inventoried
+        chunk is shorter than ``chunk_bytes`` (every non-tail chunk is
+        exactly ``chunk_bytes``, so a short chunk IS the tail).  A
+        full-size highest chunk proves nothing -- the real tail may have
+        died with its homes, and registering a truncated ``n_chunks``
+        would serve corrupt payloads -- so those chunks stay orphans."""
+        if self.ground is not None:
+            gp = self.ground.peek(block_hash)
+            if gp is not None:
+                return num_chunks(len(gp), self.chunk_bytes)
+        max_cid = max(slots)
+        for sat in slots[max_cid]:
+            tail = self.store_for(sat).peek((block_hash, max_cid))
+            if tail is not None and len(tail) < self.chunk_bytes:
+                return max_cid + 1
+        return None
+
+    def reconcile(self) -> int:
+        """Inventory-driven anti-entropy pass, in two phases.
+
+        **Phase 1 -- metadata.**  Every live satellite reports its chunk
+        inventory (``SatelliteStore.inventory``, read-only).  Authority
+        for directory entries is the union of surviving stripe shards,
+        the client journal, and -- for hashes known to neither --
+        entries reconstructed from the inventories themselves
+        (``_reconstruct_n``): the decentralized replacement for the old
+        omniscient directory scan.  Inventoried chunks whose entry
+        cannot be proven are deleted and counted (``orphaned_chunks``);
+        every reconciled entry is rewritten onto each *live* stripe home
+        missing it (``dir_repaired_entries``, one message per copy) --
+        this is what rebuilds a wiped directory stripe.
+
+        **Phase 2 -- data.**  The PR-5/6 repair pass over the reconciled
+        entries: restore every block to its full replica set by copying
+        a surviving chunk copy onto each live replica home that lost (or
+        never received) its own.  A chunk with no surviving *orbital*
+        copy re-replicates from the ground tier when one holds the
+        payload -- ``repaired_from_ground`` counts each block so rescued
+        -- and only when ground misses too is the block unrecoverable:
+        purged, ``on_block_lost`` fired so the radix index prunes,
+        counted in ``stats.lost_blocks``.  Deliberately ground-demoted
+        blocks (capacity spills) are skipped: re-promoting them would
+        undo the eviction.
+
+        Runs on ``rotate()`` when a fault source is attached, on heal
+        events (``FaultInjector(repair_on_heal=True)``), or explicitly.
         Unlike the data-plane ops this is control-plane work: it only
         requires the source and destination satellites to be *alive*
         (background traffic can route around dead ISLs), not the serving
-        path's greedy route.  Returns the number of chunk copies
-        re-replicated (also accumulated in ``stats.repaired_chunks``)."""
+        path's greedy route -- and it must never stamp LRU recency
+        (inventories and peeks only).  Returns the number of chunk
+        copies re-replicated (also in ``stats.repaired_chunks``)."""
         f = self.faults
+        # -- phase 1: reconcile the metadata plane ----------------------
+        inv: dict[bytes, dict[int, list[Sat]]] = {}
+        for sat, store in self._stores.items():
+            if f is not None and not f.sat_alive(sat):
+                continue   # a dead satellite cannot report
+            for block_hash, cids in store.inventory().items():
+                slots = inv.setdefault(block_hash, {})
+                for cid in cids:
+                    slots.setdefault(cid, []).append(sat)
+        entries: dict[bytes, int] = self._dir.entries()
+        for block_hash, n in self._known_blocks.items():
+            entries.setdefault(block_hash, n)
+        for block_hash, slots in list(inv.items()):
+            if block_hash in entries:
+                continue
+            n = self._reconstruct_n(block_hash, slots)
+            if n is None:
+                # chunks with no provable block: orphans, swept out
+                for cid, sats in slots.items():
+                    for sat in sats:
+                        if self.store_for(sat).delete((block_hash, cid)):
+                            self.stats.orphaned_chunks += 1
+                del inv[block_hash]
+                continue
+            entries[block_hash] = n
+            self._known_blocks[block_hash] = n
+        for block_hash, n in entries.items():
+            sid = stripe_of(block_hash, self.num_servers)
+            for r in range(self.dir_replication):
+                sat = self.replica_sat(sid, r)
+                if f is not None and not f.sat_alive(sat):
+                    continue
+                shard = self._dir.shard(sat)
+                if shard.get(block_hash) != n:
+                    shard[block_hash] = n
+                    self.transport.stats.messages += 1
+                    self.stats.dir_repaired_entries += 1
+        # -- phase 2: re-replicate the data plane -----------------------
         repaired = 0
-        for block_hash, n_chunks in list(self.directory.items()):
+        for block_hash, n_chunks in list(entries.items()):
             if block_hash in self._ground_demoted:
                 continue
             lost = False
@@ -1075,13 +1390,21 @@ class ConstellationKVC:
         ``steps`` rotation steps (paper: 'the set of satellites in the LOS
         at that future time is known exactly').
 
-        Copies each chunk to the satellite that will host its server after
-        the rotation; harmless double-residency until the window arrives
-        (§3.7).  Returns the number of chunks copied.
-        """
-        n_chunks = self.directory.get(block_hash)
+        Copies each chunk to the satellites that will host *all* ``k``
+        of its server's replica homes after the rotation (not just
+        replica 0 -- a degraded read right after the window arrives
+        should find its fall-through copies pre-positioned too);
+        harmless double-residency until the window arrives (§3.7).  The
+        source is the first live holder in placement order, so a dead
+        replica-0 home does not defeat the prefetch; a currently-dead
+        *destination* is skipped -- writing into it would resurrect data
+        on heal that the dead satellite could never have received (the
+        same rule migration applies to copies in transit).  Returns the
+        number of chunk copies placed."""
+        n_chunks = self._known_blocks.get(block_hash)
         if not n_chunks or self.strategy is Strategy.HOP:
             return 0
+        f = self.faults
         # simulate the window/servers 'steps' ahead without moving data
         future_window = self.window
         future_map = list(self.server_map)
@@ -1094,16 +1417,28 @@ class ConstellationKVC:
         copied = 0
         for cid in range(n_chunks):
             sid = chunk_server(cid, self.num_servers)
-            src, dst = self.server_sat(sid), future_map[sid]
-            if src == dst:
+            if self.server_sat(sid) == future_map[sid]:
                 continue
-            chunk = self.store_for(src).get((block_hash, cid))
+            chunk = None
+            for r in range(self.replication):
+                src = self.replica_sat(sid, r)
+                if f is not None and not f.sat_alive(src):
+                    continue
+                chunk = self.store_for(src).get((block_hash, cid))
+                if chunk is not None:
+                    break
             if chunk is None:
                 continue
-            self.store_for(dst).set((block_hash, cid), chunk)
-            self.transport.stats.messages += 1
-            self.transport.stats.bytes_moved += len(chunk)
-            copied += 1
+            for r in range(self.replication):
+                dst = self._offset_sat(future_map[sid], r)
+                if dst == self.replica_sat(sid, r):
+                    continue
+                if f is not None and not f.sat_alive(dst):
+                    continue   # no resurrection on heal
+                self.store_for(dst).set((block_hash, cid), chunk)
+                self.transport.stats.messages += 1
+                self.transport.stats.bytes_moved += len(chunk)
+                copied += 1
         return copied
 
     # -- rotation (§3.4) --------------------------------------------------
@@ -1147,6 +1482,25 @@ class ConstellationKVC:
                 dst_store.set(key, value)
                 self.transport.stats.messages += 1
                 self.transport.stats.bytes_moved += len(value)
+        # the server's directory stripe rides along: every replica copy
+        # of each entry homed on this stripe moves with it (one priced
+        # message per entry), under the same dead-destination rule --
+        # entries in transit to a dead satellite are dropped; lookups
+        # fall through the surviving stripe copies and ``reconcile``
+        # rewrites what the move lost.
+        for r in range(self.dir_replication):
+            src_shard = self._dir.shard(self._offset_sat(mv.src, r))
+            moved = [(h, n) for h, n in src_shard.items()
+                     if stripe_of(h, self.num_servers) == sid0]
+            for h, _ in moved:
+                del src_shard[h]
+            dst = self._offset_sat(mv.dst, r)
+            if f is not None and not f.sat_alive(dst):
+                continue
+            dst_shard = self._dir.shard(dst)
+            for h, n in moved:
+                dst_shard[h] = n
+                self.transport.stats.messages += 1
         self.server_map[sid0] = mv.dst
         self.stats.migrations += 1
 
@@ -1243,6 +1597,10 @@ class ConstellationView:
         return self.base.replication
 
     @property
+    def dir_replication(self) -> int:
+        return self.base.dir_replication
+
+    @property
     def faults(self):
         return self.base.faults
 
@@ -1252,6 +1610,9 @@ class ConstellationView:
 
     def repair(self) -> int:
         return self.base.repair()
+
+    def reconcile(self) -> int:
+        return self.base.reconcile()
 
     @property
     def directory(self) -> dict[bytes, int]:
@@ -1303,11 +1664,12 @@ class ConstellationView:
                                         via=self.transport, stats=self.stats)
 
     def estimate_get_latency_s(
-        self, *, payload_bytes: int | None = None
+        self, *, payload_bytes: int | None = None,
+        block_hash: bytes | None = None,
     ) -> float:
         return self.base.estimate_get_latency_s(
             self.anchor, payload_bytes=payload_bytes,
-            transport=self.transport)
+            transport=self.transport, block_hash=block_hash)
 
 
 # ---------------------------------------------------------------------------
@@ -1506,9 +1868,24 @@ class KVCManager:
                 n, _meta = self.index.longest_cached_prefix(hashes)
             else:
                 n = self.cache.lookup_longest(hashes)
+            n0 = n
             while n > 0:
                 payload = self.cache.get_block(hashes[n - 1])
                 if payload is not None:
+                    if n < n0:
+                        self._count_shortened_prefix()
                     return payload, n * self.block_size
                 n -= 1  # lazy eviction pruned the index; try shorter prefix
+            if n0 > 0:
+                self._count_shortened_prefix()
             return None, 0
+
+    def _count_shortened_prefix(self) -> None:
+        """The index/lookup promised a prefix the fabric could not serve
+        (e.g. a *later* chunk evicted from every replica while chunk-0
+        probes still answered): the walk-back above degraded it to a
+        shorter prefix instead of failing.  Count it so serving stats can
+        surface the mismatch."""
+        stats = getattr(self.cache, "stats", None)
+        if stats is not None and hasattr(stats, "shortened_prefixes"):
+            stats.shortened_prefixes += 1

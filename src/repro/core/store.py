@@ -106,6 +106,16 @@ class SatelliteStore:
     def keys(self) -> list[ChunkKey]:
         return list(self._data.keys())
 
+    def inventory(self) -> dict[bytes, list[int]]:
+        """Anti-entropy inventory report: ``block_hash -> chunk ids``
+        this satellite holds.  Read-only like ``peek`` -- no recency
+        stamps, no hit/miss accounting -- so a ``reconcile`` pass over a
+        healthy fabric leaves eviction order untouched."""
+        inv: dict[bytes, list[int]] = {}
+        for block_hash, cid in self._data:
+            inv.setdefault(block_hash, []).append(cid)
+        return inv
+
     def pop_all(self) -> list[tuple[ChunkKey, bytes]]:
         """Drain the store (used by rotation migration)."""
         items = list(self._data.items())

@@ -63,10 +63,30 @@ degrades **gracefully** instead of falling off a cliff:
   *unreachable* only when its endpoint is genuinely partitioned, and
   an unreachable probe is charged a flat ``IslTransport.
   probe_timeout_s`` (when set) instead of a fabricated round trip.
-* **Degraded reads**: Get KVC / presence probes fall through dead
-  replicas in placement order, charging each failed attempt on the
-  same clock the successful fetch completes on -- a degraded fetch
-  *feels* slower, and the router sees failures before engines do.
+* **Degraded reads, swarm-ordered**: Get KVC / presence probes fall
+  through dead replicas *cheapest-live-first* per anchor (the same
+  cost order ``estimate_get_latency_s`` prices), charging each failed
+  attempt on the same clock the successful fetch completes on -- a
+  degraded fetch *feels* slower, and the router sees failures before
+  engines do.
+* **The metadata tier is fabric state too**
+  (``ConstellationKVC(dir_replication=k)``): the block directory --
+  ``block_hash -> n_chunks`` -- is striped across satellites (stripe
+  home hash-derived like chunk servers, replicated plane-diversely via
+  the same ``replica_delta`` geometry) instead of living in one
+  immortal host dict.  Every directory op is priced on the clock:
+  lookups walk the stripe replicas cheapest-live-first and fall
+  through dead homes exactly like degraded data reads
+  (``CacheStats.dir_lookups`` / ``degraded_lookups``), Sets register,
+  purges unregister, and rotation migrates shard entries with their
+  server.  A satellite death destroys its shard; ``reconcile()``
+  rebuilds lost entries from surviving stripe replicas plus
+  per-satellite chunk inventories (``dir_repaired_entries``) and
+  deletes orphaned chunks no reconstructed entry explains
+  (``orphaned_chunks``).  A block whose *later* chunk died everywhere
+  no longer reads as present until the fetch fails: the fabric serves
+  the longest still-complete prefix and counts it
+  (``shortened_prefixes``).
 * **The ground tier (L3)**: an attached ``GroundStationTier`` is the
   durable store below the constellation -- bigger, slower, priced as
   ISL hops to the LOS window center plus an Eq-4 uplink round trip.
@@ -83,15 +103,21 @@ degrades **gracefully** instead of falling off a cliff:
   orbit and ground are purged and pruned from the radix index.
 * **Accounting**: ``CacheStats.degraded_reads`` / ``lost_blocks`` /
   ``repaired_chunks`` / ``detoured_ops`` / ``detour_hops`` /
-  ``ground_hits`` / ``repaired_from_ground`` on the fabric,
+  ``ground_hits`` / ``repaired_from_ground`` / ``dir_lookups`` /
+  ``degraded_lookups`` / ``dir_repaired_entries`` /
+  ``orphaned_chunks`` / ``shortened_prefixes`` on the fabric,
   ``EngineStats.degraded_reads`` / ``lost_blocks`` / ``detoured_ops``
-  / ``ground_hits`` per replica, all folded by
-  ``EngineCluster.fabric_stats`` and exercised by the
-  ``faulty_fabric`` benchmark (k=2 holds the prefix hit rate through
-  mid-serve satellite kills that collapse k=1) and the
+  / ``ground_hits`` / ``degraded_lookups`` / ``shortened_prefixes``
+  per replica, all folded by ``EngineCluster.fabric_stats`` and
+  exercised by the ``faulty_fabric`` benchmark (k=2 holds the prefix
+  hit rate through mid-serve satellite kills that collapse k=1), the
   ``degraded_fabric`` benchmark (sustained link outages + satellite
   kills with a ground station attached: zero failed ops, losses
-  repaired from ground, hit rate held while the no-ground run decays).
+  repaired from ground, hit rate held while the no-ground run decays),
+  and the ``striped_directory`` benchmark (a directory-stripe wipeout
+  mid-serve at ``dir_replication=2`` stays byte-identical with zero
+  failed requests and the stripe rebuilt by ``reconcile()``, while
+  ``dir_replication=1`` demonstrably loses the entries).
 
 Single-replica layering
 =======================

@@ -290,6 +290,19 @@ class EngineCluster:
             "ground_hits": cache.ground_hits + base.ground_hits,
             "repaired_from_ground": (cache.repaired_from_ground
                                      + base.repaired_from_ground),
+            # decentralized directory: priced metadata lookups, stripe
+            # fall-throughs, reconcile's metadata rebuilds and orphan
+            # sweeps, and prefixes the fabric served shorter than the
+            # index promised (reconcile runs through the base; lookups
+            # through the serving views)
+            "dir_lookups": cache.dir_lookups + base.dir_lookups,
+            "degraded_lookups": (cache.degraded_lookups
+                                 + base.degraded_lookups),
+            "dir_repaired_entries": (cache.dir_repaired_entries
+                                     + base.dir_repaired_entries),
+            "orphaned_chunks": cache.orphaned_chunks + base.orphaned_chunks,
+            "shortened_prefixes": (cache.shortened_prefixes
+                                   + base.shortened_prefixes),
         }
 
     def reset_stats(self) -> None:

@@ -273,10 +273,15 @@ class TieredKVManager:
         chunk ops (killed links rerouted around) in
         ``EngineStats.detoured_ops``, ground-tier answers (every orbital
         replica out, the durable tier served) in
-        ``EngineStats.ground_hits``, and a block-miss delta -- the radix
-        index pointed at blocks the fabric could no longer serve from
-        *any* tier, so (part of) the prefix falls back to recompute,
-        never an exception -- bumps ``EngineStats.lost_blocks``."""
+        ``EngineStats.ground_hits``, degraded directory lookups (a dead
+        metadata-stripe home probed before a surviving replica answered)
+        in ``EngineStats.degraded_lookups``, fabric-shortened prefixes
+        (a promised later chunk gone from every replica, served shorter)
+        in ``EngineStats.shortened_prefixes``, and a block-miss delta --
+        the radix index pointed at blocks the fabric could no longer
+        serve from *any* tier, so (part of) the prefix falls back to
+        recompute, never an exception -- bumps
+        ``EngineStats.lost_blocks``."""
         # resolved per call: benchmarks re-point a view's CacheStats
         # between the warmup and the timed run
         cs = (None if self.manager is None
@@ -286,12 +291,16 @@ class TieredKVManager:
             return
         degraded0, misses0 = cs.degraded_reads, cs.block_misses
         detoured0, ground0 = cs.detoured_ops, cs.ground_hits
+        dlook0, short0 = cs.degraded_lookups, cs.shortened_prefixes
         try:
             yield
         finally:
             self.stats.degraded_reads += cs.degraded_reads - degraded0
             self.stats.detoured_ops += cs.detoured_ops - detoured0
             self.stats.ground_hits += cs.ground_hits - ground0
+            self.stats.degraded_lookups += cs.degraded_lookups - dlook0
+            self.stats.shortened_prefixes += (
+                cs.shortened_prefixes - short0)
             if cs.block_misses > misses0:
                 self.stats.lost_blocks += 1
 

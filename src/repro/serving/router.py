@@ -108,19 +108,25 @@ class Router:
         self.max_seen_blocks = max_seen_blocks
 
     # -- shared signals -------------------------------------------------
-    def _cached_prefix(self, hashes: list[bytes]) -> tuple[int, int | None]:
-        """(blocks, payload_bytes) of the request's longest prefix in the
-        shared radix index.  ``payload_bytes`` sizes the single Get KVC a
-        hit will actually issue (the final block's cumulative payload),
-        so hop estimates can price the chunk servers that block really
-        spans instead of assuming a full stripe."""
+    def _cached_prefix(
+        self, hashes: list[bytes]
+    ) -> tuple[int, int | None, bytes | None]:
+        """(blocks, payload_bytes, tail_hash) of the request's longest
+        prefix in the shared radix index.  ``payload_bytes`` sizes the
+        single Get KVC a hit will actually issue (the final block's
+        cumulative payload) and ``tail_hash`` is that block's hash, so
+        hop estimates can price the chunk servers the block really spans
+        AND the exact directory-stripe lookup leg the fetch will pay --
+        keeping the router's estimate and the experienced latency on the
+        same path."""
         if self.manager is None or not hashes:
-            return 0, None
+            return 0, None, None
         with self.manager.lock:
             n, meta = self.manager.index.longest_cached_prefix(hashes)
+        tail = hashes[n - 1] if n else None
         if n and meta is not None and meta.payload_bytes:
-            return n, meta.payload_bytes
-        return n, None
+            return n, meta.payload_bytes, tail
+        return n, None, tail
 
     def _commit(self, h: ReplicaHandle, hashes: list[bytes],
                 n_tokens: int, est_new_tokens: int) -> int:
@@ -198,7 +204,7 @@ class PrefixAffinityRouter(Router):
     def route(self, tokens: list[int], *,
               est_new_tokens: int = 0) -> RouteDecision:
         hashes = chain_hashes(tokens, self.block_size)
-        cached, payload_bytes = self._cached_prefix(hashes)
+        cached, payload_bytes, tail_hash = self._cached_prefix(hashes)
         best_h: ReplicaHandle | None = None
         best_key = None
         best_aff = 0
@@ -208,7 +214,7 @@ class PrefixAffinityRouter(Router):
             hop_s = 0.0
             if cached and h.view is not None:
                 hop_s = h.view.estimate_get_latency_s(
-                    payload_bytes=payload_bytes)
+                    payload_bytes=payload_bytes, block_hash=tail_hash)
             score = (self.w_affinity * aff_tokens
                      - self.w_load * h.load_tokens)
             # hop latency splits equal-score candidates; remaining ties

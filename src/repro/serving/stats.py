@@ -62,6 +62,12 @@ class EngineStats:
     # (recompute) without a durable tier below the constellation
     detoured_ops: int = 0
     ground_hits: int = 0
+    # decentralized directory (striped replicated metadata): lookups
+    # this replica's L2 calls resolved only after probing >=1 dead
+    # directory-stripe home, and promised prefixes the fabric degraded
+    # to a shorter served prefix (a later chunk gone from every replica)
+    degraded_lookups: int = 0
+    shortened_prefixes: int = 0
     ttft_s: list[float] = field(default_factory=list)   # per request
     itl_s: list[float] = field(default_factory=list)    # per decoded token
     # the subset of itl_s observed by running sequences while an

@@ -298,11 +298,17 @@ def test_affinity_router_is_hop_aware():
     assert d.cached_blocks > 0
     assert d.replica == 1             # near anchor despite higher index
     # the hop signal prices the Get the hit will actually issue: the
-    # cached prefix's cumulative payload, not a full stripe
-    pb = mgr.index.longest_cached_prefix(
-        chain_hashes(tokens, 8))[1].payload_bytes
-    assert d.hop_latency_s == near.estimate_get_latency_s(payload_bytes=pb)
+    # cached prefix's cumulative payload plus the directory-stripe
+    # lookup for its tail block, not a full stripe
+    hashes = chain_hashes(tokens, 8)
+    n, meta = mgr.index.longest_cached_prefix(hashes)
+    assert d.hop_latency_s == near.estimate_get_latency_s(
+        payload_bytes=meta.payload_bytes, block_hash=hashes[n - 1])
     assert d.hop_latency_s > 0.0
+    # the metadata leg is real: pricing it makes the estimate strictly
+    # larger than the payload-only figure
+    assert d.hop_latency_s > near.estimate_get_latency_s(
+        payload_bytes=meta.payload_bytes)
     # without a cached prefix the hop term vanishes -> load tie-break
     d2 = router.route(_tokenize("never seen before, fresh tokens"))
     assert d2.replica == 0

@@ -43,6 +43,7 @@ from repro.core import (
     IslTransport,
     chain_hashes,
     plan_survivable_kills,
+    stripe_of,
 )
 from repro.core.chunking import arrays_to_bytes
 from repro.core.faults import FaultEvent, FaultState, link_key
@@ -568,6 +569,268 @@ def test_purge_removes_ground_copy_too():
     assert kvc.purge_block(H) > 0
     assert len(kvc.ground) == 0
     assert kvc.get_block(H) is None
+
+
+# ---------------------------------------------------------------------------
+# the decentralized directory (striped replicated metadata)
+# ---------------------------------------------------------------------------
+
+def _hash_on_stripe(kvc, min_sid):
+    """A deterministic hash whose directory stripe is >= ``min_sid`` --
+    with a small payload its metadata homes are disjoint from its data
+    homes, so a stripe kill is a pure metadata wipeout."""
+    for i in range(256):
+        h = bytes([i]) * 32
+        if stripe_of(h, kvc.num_servers) >= min_sid:
+            return h
+    raise AssertionError("no hash found on a high stripe")
+
+
+def test_directory_lookup_is_priced():
+    """Resolving the entry on its stripe is a real op: a Get that must
+    look the block up pays more than one handed ``n_chunks`` a priori,
+    and the lookup is counted."""
+    kvc = make_kvc(replication=1)
+    kvc.set_block(H, PAYLOAD)
+    kvc.get_block(H, kvc.directory[H])      # metadata known out-of-band
+    known_lat = kvc.transport.stats.last_latency_s
+    assert kvc.stats.dir_lookups == 0
+    assert kvc.get_block(H) == PAYLOAD
+    assert kvc.stats.dir_lookups == 1
+    assert kvc.transport.stats.last_latency_s > known_lat
+
+
+def test_dir_stripe_wipeout_k2_degrades_then_reconcile_rebuilds():
+    """dir_replication=2: one dead stripe home degrades lookups (they
+    fall through to the surviving copy), losing BOTH homes is a clean
+    miss -- never an exception -- and ``reconcile`` rebuilds the wiped
+    stripe once its homes heal."""
+    kvc = make_kvc(replication=2, dir_replication=2)
+    h = _hash_on_stripe(kvc, min_sid=2)
+    p = b"x" * 128                          # 2 chunks: servers 0 and 1
+    kvc.set_block(h, p)
+    sid = stripe_of(h, kvc.num_servers)
+    homes = [kvc.replica_sat(sid, r) for r in range(2)]
+    # one home down: degraded lookup, still served
+    inj = kill_now(kvc, [homes[0]])
+    assert inj.stats.dir_entries_dropped >= 1
+    d0 = kvc.stats.degraded_lookups
+    assert kvc.get_block(h) == p
+    assert kvc.stats.degraded_lookups == d0 + 1
+    # both homes down: the stripe is gone -- clean miss, nothing purged
+    inj = kill_now(kvc, homes)
+    assert kvc.get_block(h) is None
+    assert h in kvc.directory               # the client journal remembers
+    assert kvc.stats.lost_blocks == 0
+    # heal + reconcile: the stripe is rewritten and lookups are clean
+    for s in homes:
+        inj.state.heal_sat(s)
+    kvc.reconcile()
+    assert kvc.stats.dir_repaired_entries >= 2     # both copies rebuilt
+    d1 = kvc.stats.degraded_lookups
+    assert kvc.get_block(h) == p
+    assert kvc.stats.degraded_lookups == d1        # clean again
+
+
+def test_dir_k1_stripe_loss_is_clean_miss():
+    """dir_replication=1 demonstrably loses the stripe's entries: while
+    the single home is dead every lookup of its blocks misses cleanly
+    (recompute upstream), even though the data plane still holds every
+    chunk copy."""
+    kvc = make_kvc(replication=2, dir_replication=1)
+    h = _hash_on_stripe(kvc, min_sid=2)
+    p = b"y" * 128
+    kvc.set_block(h, p)
+    sid = stripe_of(h, kvc.num_servers)
+    kill_now(kvc, [kvc.replica_sat(sid, 0)])
+    assert kvc.get_block(h) is None         # metadata lost, data intact
+    assert kvc.stats.degraded_lookups >= 1
+    assert kvc.stats.block_misses == 1
+    assert h in kvc.directory               # journal view only
+    # every chunk copy is still physically there
+    for cid in range(2):
+        for r in range(2):
+            assert kvc.store_for(kvc.replica_sat(cid, r)).contains((h, cid))
+
+
+def test_swarm_read_serves_cheapest_live_replica():
+    """A healthy fabric no longer always reads replica 0: an anchor
+    sitting on a chunk's replica-1 home reads that copy (0 hops beats
+    any fall-through), with no degraded accounting."""
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    sid = next(s for s in range(kvc.num_servers)
+               if kvc.replica_sat(s, 1) not in kvc.server_map)
+    twin = kvc.replica_sat(sid, 1)
+    view = kvc.view(twin)
+    twin_store = kvc.store_for(twin)
+    hits0 = twin_store.stats.hits
+    assert view.get_block(H) == PAYLOAD
+    assert twin_store.stats.hits == hits0 + 1      # chunk `sid` from here
+    assert view.stats.degraded_reads == 0
+
+
+def test_estimate_prices_directory_leg():
+    """``block_hash`` adds the stripe-lookup leg to the estimate, and a
+    dead stripe home raises it -- the router prices the same degraded
+    walk the fetch will run."""
+    kvc = make_kvc(replication=2, dir_replication=2)
+    h = _hash_on_stripe(kvc, min_sid=2)
+    kvc.set_block(h, b"z" * 128)
+    anchor = kvc.center
+    plain = kvc.estimate_get_latency_s(anchor, payload_bytes=128)
+    with_dir = kvc.estimate_get_latency_s(
+        anchor, payload_bytes=128, block_hash=h)
+    assert with_dir > plain
+    sid = stripe_of(h, kvc.num_servers)
+    kill_now(kvc, [kvc.replica_sat(sid, 0)])
+    assert kvc.estimate_get_latency_s(
+        anchor, payload_bytes=128, block_hash=h) > with_dir
+
+
+def test_has_block_probes_tail_chunk():
+    """The pre-PR-7 false positive: chunk 0 alive, a *later* chunk dead
+    with all its homes -- ``has_block`` must answer False, and
+    ``lookup_longest`` must not promise the prefix."""
+    kvc = make_kvc(replication=1)
+    kvc.set_block(H, PAYLOAD)               # 10 chunks; tail on server 9
+    assert kvc.has_block(H) is True
+    kill_now(kvc, [kvc.server_sat(9)])
+    assert kvc.has_block(H) is False
+    assert kvc.lookup_longest([H]) == 0
+
+
+def test_kv_manager_shortens_prefix_when_tail_chunk_lost():
+    """The radix index promises 2 blocks; block 2's tail chunk died with
+    its only home: the Get walks back to the longest servable boundary
+    and counts the shortened prefix -- never a crash, never corruption."""
+    kvc = make_kvc(replication=1)
+    mgr = KVCManager(lambda p: [ord(c) % 96 for c in p],
+                     lambda t, p, n: arrays_to_bytes(
+                         [np.cumsum(np.asarray(t, np.int64))]),
+                     kvc, block_size=4)
+    # block 1: 63B (1 chunk, server 0); block 2: 95B (chunks on 0 and 1)
+    assert mgr.add_blocks("abcdefgh") == 2
+    kill_now(kvc, [kvc.server_sat(1)])      # block 2's tail chunk home
+    payload, n = mgr.get_cache("abcdefgh")
+    assert n == 4                           # shortened to block 1
+    assert payload is not None
+    assert kvc.stats.shortened_prefixes == 1
+
+
+def test_reconcile_reconstructs_from_inventory_and_sweeps_orphans():
+    """Total metadata loss (stripes AND client journal): inventories
+    rebuild entries whose tail chunk is provable (shorter than
+    ``chunk_bytes``), and sweep the rest out as counted orphans rather
+    than registering a truncated -- corrupt -- entry."""
+    kvc = make_kvc(replication=2, dir_replication=2)
+    h_tail, h_full = b"T" * 32, b"F" * 32
+    p_tail = b"x" * 130                     # 3 chunks, 2-byte tail: provable
+    p_full = b"y" * 128                     # 2 full chunks: unprovable
+    kvc.set_block(h_tail, p_tail)
+    kvc.set_block(h_full, p_full)
+    for sat in list(kvc._dir._shards):
+        kvc._dir.drop(sat)
+    kvc._known_blocks.clear()
+    assert kvc.get_block(h_tail) is None    # the fabric forgot everything
+    kvc.reconcile()
+    assert kvc.directory[h_tail] == 3       # rebuilt from inventory alone
+    assert kvc.get_block(h_tail) == p_tail
+    assert h_full not in kvc.directory
+    assert kvc.get_block(h_full) is None
+    assert kvc.stats.orphaned_chunks == 4   # 2 chunks x 2 replica copies
+    assert kvc.stats.dir_repaired_entries >= 2
+    assert all((h_full, cid) not in [k for s in kvc._stores.values()
+                                     for k in s.keys()] for cid in range(2))
+
+
+def test_prefetch_prepositions_all_k_homes_and_skips_dead():
+    """``prefetch_for_rotation`` pre-positions every replica home of the
+    future placement, and a currently-dead destination is skipped --
+    nothing resurrects when it heals (the migration rule, applied to
+    prefetch)."""
+    from repro.core import migration as mig
+
+    kvc = make_kvc(replication=2)
+    kvc.set_block(H, PAYLOAD)
+    future_window, future_map = kvc.window, list(kvc.server_map)
+    for _ in range(5):
+        nw = future_window.shifted(SPEC, d_slot=1)
+        for mv in mig.plan_migration(SPEC, future_window, nw, future_map):
+            future_map[mv.server_id - 1] = mv.dst
+        future_window = nw
+    moved = [sid for sid in range(kvc.num_servers)
+             if future_map[sid] != kvc.server_sat(sid)]
+    assert moved
+    dead = kvc._offset_sat(future_map[moved[0]], 1)
+    inj = kill_now(kvc, [dead])
+    assert kvc.prefetch_for_rotation(H, steps=5) > 0
+    assert len(kvc.store_for(dead)) == 0    # nothing written while dead
+    inj.state.heal_sat(dead)
+    assert len(kvc.store_for(dead)) == 0    # and nothing resurrected
+    # every OTHER future home -- all k of them -- is pre-positioned
+    for sid in moved:
+        for r in range(2):
+            dst = kvc._offset_sat(future_map[sid], r)
+            if dst == kvc.replica_sat(sid, r) or dst == dead:
+                continue
+            assert kvc.store_for(dst).contains((H, sid))
+
+
+def test_seeded_dir_stripe_chaos_degrade_reconcile_recover():
+    """Seeded end-to-end arc on the fabric clock: staggered kills of one
+    stripe's homes mid-traffic -> degraded lookups -> clean misses ->
+    heal + reconcile -> full recovery, byte-identical throughout."""
+    import random as _random
+
+    rng = _random.Random(31 + SEED)
+    clock = SimClock(rate=50.0)
+    kvc = make_kvc(clock=clock, replication=2, dir_replication=2)
+    blocks = {}
+    for _ in range(5):
+        while True:
+            h = bytes(rng.randrange(256) for _ in range(32))
+            if stripe_of(h, kvc.num_servers) >= 2 and h not in blocks:
+                break
+        p = bytes([rng.randrange(256)]) * 128
+        kvc.set_block(h, p)
+        blocks[h] = p
+    victim = min(blocks)                    # deterministic pick
+    sid = stripe_of(victim, kvc.num_servers)
+    homes = [kvc.replica_sat(sid, r) for r in range(2)]
+    inj = FaultInjector(kvc, FaultPlan.outages(
+        homes, kill_at_s=0.0, stagger_s=0.5, downtime_s=1e9))
+    inj.arm()
+    t0 = clock.now()
+    while clock.now() < t0 + 1.2:
+        got = kvc.get_block(victim)
+        assert got in (blocks[victim], None)    # degrades, never corrupts
+        clock.wait_until(clock.now() + 0.05)
+    assert kvc.stats.degraded_lookups > 0
+    inj.drain()
+    for s in homes:
+        inj.state.heal_sat(s)
+    kvc.reconcile()
+    assert kvc.stats.dir_repaired_entries >= 1
+    for h, p in blocks.items():
+        assert kvc.get_block(h) == p            # full recovery
+    assert kvc.sweep_incomplete() == 0
+
+
+def test_rotation_migrates_directory_stripes():
+    """Rotation keeps the metadata plane resolvable: after the server
+    map moves, lookups answer through the migrated shard homes with no
+    degraded accounting."""
+    kvc = make_kvc(replication=2, dir_replication=2)
+    h = _hash_on_stripe(kvc, min_sid=2)
+    kvc.set_block(h, b"m" * 128)
+    sid = stripe_of(h, kvc.num_servers)
+    old_home = kvc.replica_sat(sid, 0)
+    kvc.rotate(6)
+    assert kvc.server_sat(sid) != old_home  # the stripe actually moved
+    assert kvc.dir_shard_len(kvc.replica_sat(sid, 0)) >= 1
+    assert kvc.get_block(h) == b"m" * 128
+    assert kvc.stats.degraded_lookups == 0
 
 
 # ---------------------------------------------------------------------------

@@ -273,7 +273,8 @@ def test_transport_accounting():
     t = IslTransport(SPEC, ground_hosted=True, chunk_processing_time_s=0.001)
     kvc = make_kvc(transport=t)
     kvc.set_block(b"t" * 32, b"y" * 640)
-    assert t.stats.messages == 10
+    # 10 chunk writes + 1 directory-stripe register (0 payload bytes)
+    assert t.stats.messages == 11
     assert t.stats.bytes_moved == 640
     assert t.stats.op_latencies_s[-1] > 550.0 / 299792.458  # at least uplink
 
