@@ -33,6 +33,12 @@ depth by default so the demo runs in ~a minute on CPU) from an
   below the constellation: orbital losses fall through to ground
   (``ground_hits``) and the post-run repair re-replicates them back
   into orbit (``repaired_from_ground``) instead of purging.
+* **Quantized payloads** -- ``--payload-codec int8`` (or ``int4``)
+  ships every constellation payload quantized per-channel with
+  per-block-chunk scale tables instead of raw f32 arrays: encoded
+  bytes shrink ~4x (8x), the router prices the *encoded* sizes, and
+  the dequantize leg runs on the fetch-ahead worker
+  (``dequant_overlap_s``) overlapped with live decode steps.
 * **Decentralized directory** -- block metadata is fabric state too:
   each entry lives on a hash-derived stripe, replicated
   ``--dir-replication`` times plane-diversely, and every lookup is a
@@ -45,6 +51,7 @@ Run: PYTHONPATH=src python examples/serve_skymemory.py
      [--full] [--replicas N] [--requests N] [--policy random]
      [--replication K] [--dir-replication K] [--outages N]
      [--degrade-links N] [--ground-stations N]
+     [--payload-codec {f32,int8,int4}]
 """
 import argparse
 import sys
@@ -106,6 +113,11 @@ def main() -> None:
     ap.add_argument("--ground-stations", type=int, default=0,
                     help="attach a durable ground segment of N stations "
                          "under the LOS window (0 = orbit only)")
+    ap.add_argument("--payload-codec", default="f32",
+                    choices=["f32", "int8", "int4"],
+                    help="constellation payload encoding (f32 = raw "
+                         "arrays; int8/int4 = per-channel quantized "
+                         "with per-block scale tables)")
     args = ap.parse_args()
 
     cfg = get_config("skymemory-tinyllama")
@@ -156,6 +168,7 @@ def main() -> None:
         model, params, kvc, num_replicas=args.replicas,
         policy=args.policy, block_size=128, max_seq_len=512, max_batch=4,
         rotate_every_s=None if args.outages else 2.0,
+        payload_codec=args.payload_codec,
     )
     print(f"cluster: {cluster.num_replicas} replicas anchored at "
           f"{[(a.plane, a.slot) for a in cluster.anchors]} | "
@@ -266,6 +279,12 @@ def main() -> None:
           f"repaired_from_ground={fabric['repaired_from_ground']}"
           + (f" | ground tier holds {len(kvc.ground)} blocks"
              if kvc.ground is not None else " (no ground segment)"))
+    print(f"payload codec: {args.payload_codec} | encoded "
+          f"{fabric['bytes_encoded']/1e6:.1f}MB of "
+          f"{fabric['bytes_raw']/1e6:.1f}MB raw "
+          f"({fabric['compression_ratio']:.2f}x compression) | "
+          f"dequant overlapped {fabric['dequant_overlap_s']*1e3:.0f}ms "
+          f"on the fetch-ahead worker")
     print(f"striped directory: dir_replication={kvc.dir_replication} | "
           f"dir_lookups={fabric['dir_lookups']} "
           f"degraded_lookups={fabric['degraded_lookups']} | entries "

@@ -5,8 +5,22 @@ fixed-byte chunks; chunk ``i`` maps to virtual server ``i mod num_servers``.
 A failed lookup of any single chunk means the block is absent.
 
 Also provides the byte serialization of a KVC block payload -- a list of
-numpy arrays (K and V per layer, or SSM state tensors) -- plus the optional
-int8 quantization the paper's testbed used (optimum-quanto / HQQ 8-bit).
+numpy arrays (K and V per layer, or SSM state tensors) -- plus the
+versioned payload codec layer (paper §5 shipped 8-bit quantized KVC
+blocks): a self-describing container that records the codec id and each
+array's *source* dtype, so a bf16 KVC dequantizes back to bf16, with
+
+* symmetric int8 per-last-axis-channel scales kept **per block chunk**
+  of the token axis (``PayloadCodec.block_tokens``), not per whole
+  prefix, so long-prefix outliers don't crush early-block precision;
+* optional int4 packing (two nibbles per byte + the same scale table);
+* delta encoding for cumulative dense payloads: block *n*'s payload
+  carries only its own ``block_size`` tokens plus a back-pointer to
+  block *n-1*, turning the O(n)-byte cumulative Set into O(1)
+  (``make_delta_payload`` / ``cat_payloads`` reassemble on restore).
+
+Every decoder sniffs the container magic, so f32 (legacy ``SKYM``) and
+codec (``SKYC``) payloads coexist on one fabric.
 """
 from __future__ import annotations
 
@@ -17,6 +31,20 @@ import numpy as np
 
 _MAGIC = b"SKYM"
 _VERSION = 1
+
+_CODEC_MAGIC = b"SKYC"
+_CODEC_VERSION = 1
+# container kinds under the SKYC magic
+_KIND_ENC = 1     # quantized array container (codec id + per-array header)
+_KIND_DELTA = 2   # back-pointer + inner payload for one block's new tokens
+_KIND_CAT = 3     # ordered segments whose decoded arrays concatenate
+
+_CODEC_IDS = {"int8": 1, "int4": 2}
+_CODEC_NAMES = {v: k for k, v in _CODEC_IDS.items()}
+_QMAX = {"int8": 127.0, "int4": 7.0}
+# per-array storage tags inside an ENC container
+_STORE_RAW = 0    # verbatim bytes (f32 arrays under codec f32; int pools)
+_STORE_Q = 1      # quantized codes + per-(chunk, channel) scale table
 
 
 def split_chunks(data: bytes, chunk_bytes: int) -> list[bytes]:
@@ -90,7 +118,11 @@ def _dtype_from_name(name: str) -> np.dtype:
     except TypeError:
         import ml_dtypes  # registered by jax
 
-        return np.dtype(getattr(ml_dtypes, name))
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except (AttributeError, TypeError):
+            # a corrupt / truncated header names no dtype at all
+            raise ValueError(f"unknown dtype name {name!r}") from None
 
 
 def arrays_to_bytes(arrays: list[np.ndarray]) -> bytes:
@@ -112,25 +144,28 @@ def arrays_to_bytes(arrays: list[np.ndarray]) -> bytes:
 def bytes_to_arrays(data: bytes) -> list[np.ndarray]:
     if data[:4] != _MAGIC:
         raise ValueError("not a SkyMemory KVC payload")
-    ver, n = struct.unpack_from("<HI", data, 4)
-    if ver != _VERSION:
-        raise ValueError(f"unsupported KVC payload version {ver}")
-    off = 10
     out: list[np.ndarray] = []
-    for _ in range(n):
-        (dlen,) = struct.unpack_from("<B", data, off)
-        off += 1
-        dt = _dtype_from_name(data[off : off + dlen].decode())
-        off += dlen
-        (ndim,) = struct.unpack_from("<B", data, off)
-        off += 1
-        shape = struct.unpack_from(f"<{ndim}q", data, off)
-        off += 8 * ndim
-        (rlen,) = struct.unpack_from("<q", data, off)
-        off += 8
-        a = np.frombuffer(data[off : off + rlen], dtype=dt).reshape(shape)
-        off += rlen
-        out.append(a)
+    try:
+        ver, n = struct.unpack_from("<HI", data, 4)
+        if ver != _VERSION:
+            raise ValueError(f"unsupported KVC payload version {ver}")
+        off = 10
+        for _ in range(n):
+            (dlen,) = struct.unpack_from("<B", data, off)
+            off += 1
+            dt = _dtype_from_name(data[off : off + dlen].decode())
+            off += dlen
+            (ndim,) = struct.unpack_from("<B", data, off)
+            off += 1
+            shape = struct.unpack_from(f"<{ndim}q", data, off)
+            off += 8 * ndim
+            (rlen,) = struct.unpack_from("<q", data, off)
+            off += 8
+            a = np.frombuffer(data[off : off + rlen], dtype=dt).reshape(shape)
+            off += rlen
+            out.append(a)
+    except struct.error as e:
+        raise ValueError(f"corrupt KVC payload: {e}") from e
     return out
 
 
@@ -158,15 +193,22 @@ def dequantize_int8(qa: QuantizedArray) -> np.ndarray:
 
 
 def quantized_to_bytes(arrays: list[np.ndarray]) -> bytes:
-    flat: list[np.ndarray] = []
-    for a in arrays:
-        qa = quantize_int8(a)
-        flat.append(qa.q)
-        flat.append(qa.scale)
-    return arrays_to_bytes(flat)
+    """Serialize ``arrays`` int8-quantized, recording each array's source
+    dtype in the codec header so ``bytes_to_dequantized`` restores it
+    exactly (a bf16 KVC comes back bf16, not silently-doubled float32)."""
+    return encode_arrays(arrays, PayloadCodec("int8"))
 
 
 def bytes_to_dequantized(data: bytes) -> list[np.ndarray]:
+    """Decode a quantized payload back to (dequantized) arrays.
+
+    New ``SKYC`` payloads restore each array's recorded source dtype;
+    legacy ``SKYM`` [q, scale, q, scale, ...] payloads (written before
+    the codec header existed) still decode, to float32 as they always
+    did -- the pre-header format never recorded the source dtype.
+    """
+    if data[:4] == _CODEC_MAGIC:
+        return decode_payload_arrays(data)
     flat = bytes_to_arrays(data)
     if len(flat) % 2:
         raise ValueError("corrupt quantized payload")
@@ -174,3 +216,420 @@ def bytes_to_dequantized(data: bytes) -> list[np.ndarray]:
     for i in range(0, len(flat), 2):
         out.append(dequantize_int8(QuantizedArray(q=flat[i], scale=flat[i + 1])))
     return out
+
+
+# ---------------------------------------------------------------------------
+# The versioned payload codec layer.
+# ---------------------------------------------------------------------------
+
+def _quant_geometry(shape: tuple[int, ...]) -> tuple[int, int, int]:
+    """(token_axis, n_tokens, channels) used for per-chunk scale tables.
+
+    KVC payload arrays put the token axis at axis 1 (``[L, T, Hkv, hd]``
+    dense K/V, ``[L, T, dc]`` MLA latents) and channels on the last
+    axis; lower-rank arrays (SSM snapshots after squeezing) fall back to
+    axis 0 -- the segmentation is self-consistent between encode and
+    decode either way, which is all correctness needs.
+    """
+    axis = 1 if len(shape) >= 3 else 0
+    return axis, shape[axis], shape[-1]
+
+
+def _quantize_segmented(
+    a: np.ndarray, qmax: float, seg: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-last-axis-channel quantization with one scale row
+    per ``seg``-token chunk of the token axis: returns ``(codes, scales)``
+    where ``codes`` is int8 in [-qmax, qmax] with ``a``'s shape and
+    ``scales`` is float32 ``[n_segs, channels]``."""
+    orig_shape = a.shape
+    af = np.asarray(a, dtype=np.float32)
+    if af.ndim < 2:
+        af = af.reshape(1, af.size)
+    axis, n_tok, chans = _quant_geometry(af.shape)
+    seg = seg if seg and seg > 0 else max(n_tok, 1)
+    n_segs = max(1, -(-n_tok // seg)) if n_tok else 1
+    scales = np.ones((n_segs, chans), np.float32)
+    q = np.zeros(af.shape, np.int8)
+    red = tuple(range(af.ndim - 1))
+    sl: list[slice] = [slice(None)] * af.ndim
+    for s in range(n_segs):
+        sl[axis] = slice(s * seg, (s + 1) * seg)
+        part = af[tuple(sl)]
+        if part.size == 0:
+            continue
+        amax = np.max(np.abs(part), axis=red, keepdims=True)
+        scale = np.where(amax > 0, amax / qmax, 1.0).astype(np.float32)
+        q[tuple(sl)] = np.clip(
+            np.round(part / scale), -qmax, qmax).astype(np.int8)
+        scales[s] = scale.reshape(chans)
+    return q.reshape(orig_shape), scales
+
+
+def _dequantize_segmented(
+    q: np.ndarray, scales: np.ndarray, seg: int, dtype: np.dtype
+) -> np.ndarray:
+    orig_shape = q.shape
+    qf = q.astype(np.float32)
+    if qf.ndim < 2:
+        qf = qf.reshape(1, qf.size)
+    axis, n_tok, chans = _quant_geometry(qf.shape)
+    seg = seg if seg and seg > 0 else max(n_tok, 1)
+    n_segs = max(1, -(-n_tok // seg)) if n_tok else 1
+    if scales.shape != (n_segs, chans):
+        raise ValueError("corrupt codec payload: scale table shape "
+                         f"{scales.shape} != {(n_segs, chans)}")
+    out = np.empty(qf.shape, np.float32)
+    sl: list[slice] = [slice(None)] * qf.ndim
+    for s in range(n_segs):
+        sl[axis] = slice(s * seg, (s + 1) * seg)
+        out[tuple(sl)] = qf[tuple(sl)] * scales[s]
+    return out.reshape(orig_shape).astype(dtype)
+
+
+def _pack_int4(q: np.ndarray) -> bytes:
+    """[-7, 7] codes -> two offset nibbles per byte (odd tails padded)."""
+    flat = (q.reshape(-1).astype(np.int16) + 8).astype(np.uint8)
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
+    return (flat[0::2] | (flat[1::2] << 4)).tobytes()
+
+
+def _unpack_int4(data: bytes, size: int) -> np.ndarray:
+    if len(data) != (size + 1) // 2:
+        raise ValueError("corrupt codec payload: truncated int4 codes")
+    b = np.frombuffer(data, np.uint8)
+    out = np.empty(b.size * 2, np.int8)
+    out[0::2] = (b & 0x0F).astype(np.int16) - 8
+    out[1::2] = (b >> 4).astype(np.int16) - 8
+    return out[:size]
+
+
+@dataclass(frozen=True)
+class PayloadCodec:
+    """How a KVC payload's bytes are produced.
+
+    ``name``: ``"f32"`` (verbatim, the legacy ``SKYM`` wire format),
+    ``"int8"`` or ``"int4"`` (symmetric per-channel quantization).
+    ``block_tokens`` is the scale-table chunk along the token axis (0 =
+    one table for the whole tensor) AND the block size delta chains are
+    hashed at.  ``delta`` opts cumulative dense payloads into delta
+    encoding -- it requires ``block_tokens`` so back-pointers can be
+    recomputed from the token chain.  Decoding never needs a codec
+    (payloads are self-describing); this object only shapes *encoding*
+    and the router's bytes-per-token price model.
+    """
+
+    name: str = "f32"
+    block_tokens: int = 0
+    delta: bool = False
+
+    def __post_init__(self) -> None:
+        if self.name not in ("f32", "int8", "int4"):
+            raise ValueError(f"unknown payload codec {self.name!r}")
+        if self.delta and self.block_tokens <= 0:
+            raise ValueError("delta encoding needs block_tokens > 0")
+
+    @classmethod
+    def parse(cls, spec, block_tokens: int = 0) -> "PayloadCodec":
+        """``None`` / ``"f32"`` / ``"int8"`` / ``"int4"`` / ``"int8+delta"``
+        / ``"int4+delta"`` / a ready ``PayloadCodec`` -> a codec whose
+        chunked scale tables (and delta hashing) use ``block_tokens``."""
+        if isinstance(spec, cls):
+            return spec
+        if spec is None:
+            spec = "f32"
+        base, _, suffix = spec.partition("+")
+        if suffix not in ("", "delta"):
+            raise ValueError(f"unknown payload codec {spec!r}")
+        return cls(base, block_tokens, delta=suffix == "delta")
+
+    @property
+    def quantized(self) -> bool:
+        return self.name != "f32"
+
+    def bytes_per_value(self, src_itemsize: int) -> float:
+        """Encoded payload bytes per stored value -- the router's
+        codec-derived size model (scale tables and headers are noise at
+        KVC payload sizes and are deliberately not modeled)."""
+        if self.name == "int8":
+            return 1.0
+        if self.name == "int4":
+            return 0.5
+        return float(src_itemsize)
+
+    def encode(self, arrays: list[np.ndarray]) -> bytes:
+        return encode_arrays(arrays, self)
+
+
+def encode_arrays(arrays: list[np.ndarray],
+                  codec: PayloadCodec) -> bytes:
+    """Serialize ``arrays`` under ``codec``.  ``f32`` emits the legacy
+    ``SKYM`` format byte-for-byte; quantized codecs emit a ``SKYC``
+    container recording the codec id and, per array, the source dtype,
+    shape, and per-chunk scale table.  Integer/bool arrays (e.g. an
+    already-int8 device pool's pages) are always stored verbatim --
+    re-quantizing quantized codes would corrupt them."""
+    if not codec.quantized:
+        return arrays_to_bytes(arrays)
+    qmax = _QMAX[codec.name]
+    parts = [_CODEC_MAGIC,
+             struct.pack("<HBB", _CODEC_VERSION, _KIND_ENC,
+                         _CODEC_IDS[codec.name]),
+             struct.pack("<I", len(arrays))]
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        dt = _dtype_name(a.dtype)
+        parts.append(struct.pack("<B", len(dt)))
+        parts.append(dt)
+        parts.append(struct.pack("<B", a.ndim))
+        parts.append(struct.pack(f"<{a.ndim}q", *a.shape))
+        if a.dtype.kind in "iub":
+            raw = a.tobytes()
+            parts.append(struct.pack("<B", _STORE_RAW))
+            parts.append(struct.pack("<q", len(raw)))
+            parts.append(raw)
+            continue
+        q, scales = _quantize_segmented(a, qmax, codec.block_tokens)
+        body = (_pack_int4(q) if codec.name == "int4" else q.tobytes())
+        parts.append(struct.pack("<B", _STORE_Q))
+        parts.append(struct.pack("<ii", codec.block_tokens, scales.shape[0]))
+        parts.append(scales.tobytes())
+        parts.append(struct.pack("<q", len(body)))
+        parts.append(body)
+    return b"".join(parts)
+
+
+def _codec_kind(data: bytes) -> int | None:
+    """SKYC container kind, or None for anything else (incl. SKYM)."""
+    if len(data) < 7 or data[:4] != _CODEC_MAGIC:
+        return None
+    ver, kind = struct.unpack_from("<HB", data, 4)
+    if ver != _CODEC_VERSION:
+        raise ValueError(f"unsupported KVC codec version {ver}")
+    return kind
+
+
+def _decode_enc(data: bytes) -> list[np.ndarray]:
+    out: list[np.ndarray] = []
+    try:
+        codec_id, = struct.unpack_from("<B", data, 7)
+        name = _CODEC_NAMES.get(codec_id)
+        if name is None:
+            raise ValueError(f"unknown KVC codec id {codec_id}")
+        n, = struct.unpack_from("<I", data, 8)
+        off = 12
+        for _ in range(n):
+            (dlen,) = struct.unpack_from("<B", data, off)
+            off += 1
+            dt = _dtype_from_name(data[off:off + dlen].decode())
+            off += dlen
+            (ndim,) = struct.unpack_from("<B", data, off)
+            off += 1
+            shape = struct.unpack_from(f"<{ndim}q", data, off)
+            off += 8 * ndim
+            (store,) = struct.unpack_from("<B", data, off)
+            off += 1
+            if store == _STORE_RAW:
+                (rlen,) = struct.unpack_from("<q", data, off)
+                off += 8
+                if off + rlen > len(data):
+                    raise ValueError("truncated")
+                a = np.frombuffer(data[off:off + rlen], dtype=dt)
+                out.append(a.reshape(shape))
+                off += rlen
+                continue
+            if store != _STORE_Q:
+                raise ValueError(f"unknown storage tag {store}")
+            seg, n_segs = struct.unpack_from("<ii", data, off)
+            off += 8
+            chans = shape[-1] if ndim else 1
+            slen = 4 * n_segs * chans
+            if n_segs < 1 or off + slen > len(data):
+                raise ValueError("truncated")
+            scales = np.frombuffer(
+                data[off:off + slen], np.float32).reshape(n_segs, chans)
+            off += slen
+            (qlen,) = struct.unpack_from("<q", data, off)
+            off += 8
+            if off + qlen > len(data):
+                raise ValueError("truncated")
+            size = int(np.prod(shape, dtype=np.int64)) if ndim else 1
+            if name == "int4":
+                q = _unpack_int4(data[off:off + qlen], size)
+            else:
+                if qlen != size:
+                    raise ValueError("truncated")
+                q = np.frombuffer(data[off:off + qlen], np.int8)
+            off += qlen
+            out.append(_dequantize_segmented(
+                q.reshape(shape), scales, seg, dt))
+    except struct.error as e:
+        raise ValueError(f"corrupt codec payload: {e}") from e
+    return out
+
+
+# -- delta containers (O(1)-byte cumulative chains) -------------------------
+
+def make_delta_payload(inner: bytes, prev_hash: bytes,
+                       prev_tokens: int) -> bytes:
+    """Wrap ``inner`` (this block's *own* tokens, already encoded) with a
+    back-pointer: the previous block's hash and how many tokens its
+    cumulative payload covers."""
+    return b"".join([
+        _CODEC_MAGIC, struct.pack("<HB", _CODEC_VERSION, _KIND_DELTA),
+        struct.pack("<B", len(prev_hash)), prev_hash,
+        struct.pack("<q", prev_tokens), inner,
+    ])
+
+
+def is_delta_payload(data: bytes) -> bool:
+    return _codec_kind(data) == _KIND_DELTA
+
+
+def delta_info(data: bytes) -> tuple[bytes, int, bytes]:
+    """``(prev_hash, prev_tokens, inner_payload)`` of a delta payload."""
+    if _codec_kind(data) != _KIND_DELTA:
+        raise ValueError("not a delta payload")
+    try:
+        (hlen,) = struct.unpack_from("<B", data, 7)
+        prev_hash = data[8:8 + hlen]
+        if len(prev_hash) != hlen:
+            raise ValueError("corrupt delta payload: truncated hash")
+        (prev_tokens,) = struct.unpack_from("<q", data, 8 + hlen)
+    except struct.error as e:
+        raise ValueError(f"corrupt delta payload: {e}") from e
+    return prev_hash, prev_tokens, data[16 + hlen:]
+
+
+# -- cat containers (reassembled cumulative prefixes) -----------------------
+
+def cat_payloads(parts: list[bytes]) -> bytes:
+    """Concatenation container: an ordered list of payloads (a cumulative
+    base followed by delta segments) whose decoded arrays concatenate
+    along the token axis.  Nested cats flatten; a single segment returns
+    itself (no wrapper)."""
+    segs: list[bytes] = []
+    for p in parts:
+        segs.extend(split_cat_payload(p) if is_cat_payload(p) else [p])
+    if not segs:
+        raise ValueError("cat of zero payloads")
+    if len(segs) == 1:
+        return segs[0]
+    out = [_CODEC_MAGIC, struct.pack("<HB", _CODEC_VERSION, _KIND_CAT),
+           struct.pack("<I", len(segs))]
+    for s in segs:
+        out.append(struct.pack("<q", len(s)))
+        out.append(s)
+    return b"".join(out)
+
+
+def is_cat_payload(data: bytes) -> bool:
+    return _codec_kind(data) == _KIND_CAT
+
+
+def split_cat_payload(data: bytes) -> list[bytes]:
+    if _codec_kind(data) != _KIND_CAT:
+        raise ValueError("not a cat payload")
+    segs: list[bytes] = []
+    try:
+        n, = struct.unpack_from("<I", data, 7)
+        off = 11
+        for _ in range(n):
+            (slen,) = struct.unpack_from("<q", data, off)
+            off += 8
+            if slen < 0 or off + slen > len(data):
+                raise ValueError("corrupt cat payload: truncated segment")
+            segs.append(data[off:off + slen])
+            off += slen
+    except struct.error as e:
+        raise ValueError(f"corrupt cat payload: {e}") from e
+    return segs
+
+
+# -- the one decoder every tier calls ---------------------------------------
+
+def decode_payload_arrays(data: bytes) -> list[np.ndarray]:
+    """Decode ANY payload this module can emit back to arrays: legacy
+    ``SKYM``, quantized ``SKYC`` containers (source dtype restored), a
+    bare delta segment (its own tokens only), or a cat container (the
+    segments' arrays concatenated position-wise along the token axis)."""
+    kind = _codec_kind(data)
+    if kind is None:
+        return bytes_to_arrays(data)
+    if kind == _KIND_ENC:
+        return _decode_enc(data)
+    if kind == _KIND_DELTA:
+        return decode_payload_arrays(delta_info(data)[2])
+    if kind == _KIND_CAT:
+        seg_arrays = [decode_payload_arrays(s)
+                      for s in split_cat_payload(data)]
+        n = len(seg_arrays[0])
+        if any(len(sa) != n for sa in seg_arrays):
+            raise ValueError("corrupt cat payload: ragged segments")
+        out = []
+        for i in range(n):
+            pieces = [sa[i] for sa in seg_arrays]
+            axis = 1 if pieces[0].ndim >= 3 else 0
+            out.append(np.concatenate(pieces, axis=axis))
+        return out
+    raise ValueError(f"unknown KVC container kind {kind}")
+
+
+def payload_raw_bytes(data: bytes) -> int:
+    """Dtype-true bytes ``data`` decodes to -- a header-only scan (bodies
+    are skipped, nothing dequantizes), so Set/Get paths can account
+    ``bytes_raw`` vs ``bytes_encoded`` per block at negligible cost.
+    Best-effort: anything unparseable (the fabric also stores opaque
+    test bytes) counts at face value instead of raising."""
+    try:
+        return _payload_raw_bytes(data)
+    except (ValueError, IndexError, UnicodeDecodeError, struct.error):
+        return len(data)
+
+
+def _payload_raw_bytes(data: bytes) -> int:
+    kind = _codec_kind(data)
+    if kind == _KIND_DELTA:
+        return payload_raw_bytes(delta_info(data)[2])
+    if kind == _KIND_CAT:
+        return sum(payload_raw_bytes(s) for s in split_cat_payload(data))
+    total = 0
+    if kind == _KIND_ENC:
+        n, = struct.unpack_from("<I", data, 8)
+        off = 12
+        for _ in range(n):
+            (dlen,) = struct.unpack_from("<B", data, off)
+            off += 1
+            dt = _dtype_from_name(data[off:off + dlen].decode())
+            off += dlen
+            (ndim,) = struct.unpack_from("<B", data, off)
+            off += 1
+            shape = struct.unpack_from(f"<{ndim}q", data, off)
+            off += 8 * ndim
+            (store,) = struct.unpack_from("<B", data, off)
+            off += 1
+            size = int(np.prod(shape, dtype=np.int64)) if ndim else 1
+            total += size * dt.itemsize
+            if store == _STORE_RAW:
+                (rlen,) = struct.unpack_from("<q", data, off)
+                off += 8 + rlen
+            else:
+                seg, n_segs = struct.unpack_from("<ii", data, off)
+                off += 8 + 4 * n_segs * (shape[-1] if ndim else 1)
+                (qlen,) = struct.unpack_from("<q", data, off)
+                off += 8 + qlen
+        return total
+    if data[:4] == _MAGIC:
+        _, n = struct.unpack_from("<HI", data, 4)
+        off = 10
+        for _ in range(n):
+            (dlen,) = struct.unpack_from("<B", data, off)
+            off += 1 + dlen
+            (ndim,) = struct.unpack_from("<B", data, off)
+            off += 1 + 8 * ndim
+            (rlen,) = struct.unpack_from("<q", data, off)
+            off += 8 + rlen
+            total += rlen
+        return total
+    return len(data)

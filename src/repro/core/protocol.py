@@ -30,9 +30,12 @@ from typing import Callable, Sequence
 
 from repro.core import migration as migration_mod
 from repro.core.chunking import (
+    cat_payloads,
     chunk_server,
+    is_delta_payload,
     join_chunks,
     num_chunks,
+    payload_raw_bytes,
     replica_delta,
     split_chunks,
 )
@@ -108,6 +111,9 @@ class TransportStats:
 
     messages: int = 0
     bytes_moved: int = 0
+    # dtype-true bytes the *block payloads* among bytes_moved decode to
+    # (codec compression accounting; probe/metadata traffic not included)
+    bytes_raw: int = 0
     total_latency_s: float = 0.0
     ops: int = 0
     last_latency_s: float = 0.0
@@ -277,6 +283,21 @@ class CacheStats:
     dir_repaired_entries: int = 0  # entry copies rewritten by reconcile()
     orphaned_chunks: int = 0  # inventoried chunks with no provable entry
     shortened_prefixes: int = 0  # index prefixes walked back at Get time
+    # payload codec (quantized / delta-encoded block payloads): what the
+    # fabric actually shipped vs what those bytes decode to -- the
+    # compression the ISL bandwidth and satellite capacity never paid
+    bytes_encoded: int = 0    # block payload bytes moved (Set + served Get)
+    bytes_raw: int = 0        # dtype-true bytes those payloads decode to
+
+
+def _note_codec_bytes(cs: "CacheStats", tr: "IslTransport",
+                      payload: bytes) -> None:
+    """Account one block payload's encoded-vs-raw size (a header-only
+    scan; nothing dequantizes) on the cache and transport stats."""
+    raw = payload_raw_bytes(payload)
+    cs.bytes_encoded += len(payload)
+    cs.bytes_raw += raw
+    tr.stats.bytes_raw += raw
 
 
 # ---------------------------------------------------------------------------
@@ -932,6 +953,7 @@ class ConstellationKVC:
             worst = max(worst,
                         self._dir_register(block_hash, len(chunks), tr))
             cs.blocks_set += 1
+            _note_codec_bytes(cs, tr, payload)
             self._ground_demoted.discard(block_hash)
         tr.record_op(worst)
         if not stored_ok and block_hash not in self._known_blocks:
@@ -1084,6 +1106,7 @@ class ConstellationKVC:
                         tr.record_op(lat)
                         cs.block_hits += 1
                         cs.ground_hits += 1
+                        _note_codec_bytes(cs, tr, payload)
                         return payload
                 cs.block_misses += 1
                 tr.record_op(dir_lat)
@@ -1139,6 +1162,7 @@ class ConstellationKVC:
                     tr.record_op(dir_lat + max(worst, attempt_s))
                     cs.block_hits += 1
                     cs.ground_hits += 1
+                    _note_codec_bytes(cs, tr, payload)
                     if degraded:
                         cs.degraded_reads += 1
                     return payload
@@ -1156,7 +1180,9 @@ class ConstellationKVC:
         cs.block_hits += 1
         if degraded:
             cs.degraded_reads += 1
-        return join_chunks(chunks)
+        payload = join_chunks(chunks)
+        _note_codec_bytes(cs, tr, payload)
+        return payload
 
     def lookup_longest(
         self, hashes: Sequence[bytes], *,
@@ -1777,15 +1803,20 @@ class KVCManager:
             )
             past: bytes | None = None
             if n_cached:
-                past = self.cache.get_block(hashes[n_cached - 1])
-                if past is None:  # lazily evicted under us - recompute all
-                    n_cached = 0
+                # lazily-evicted tails (or broken delta chains) shrink
+                # the resumable prefix; a None past means recompute all
+                past, n_cached = self._fetch_cumulative(hashes, n_cached)
         payloads: list[bytes] = []
         for i in range(n_cached, len(hashes)):
             block_tokens = [t for b in blocks[: i + 1] for t in b]
             payload = self.kvc_fn(block_tokens, past, i * self.block_size)
             payloads.append(payload)
-            past = payload
+            # a delta payload covers only its own block: the *cumulative*
+            # resume state for the next kvc_fn call is the running cat
+            if past is not None and is_delta_payload(payload):
+                past = cat_payloads([past, payload])
+            else:
+                past = payload
         if not payloads:
             return 0
         with self.lock:
@@ -1869,16 +1900,46 @@ class KVCManager:
             else:
                 n = self.cache.lookup_longest(hashes)
             n0 = n
-            while n > 0:
-                payload = self.cache.get_block(hashes[n - 1])
-                if payload is not None:
-                    if n < n0:
-                        self._count_shortened_prefix()
-                    return payload, n * self.block_size
-                n -= 1  # lazy eviction pruned the index; try shorter prefix
+            payload, n = self._fetch_cumulative(hashes, n)
+            if payload is not None:
+                if n < n0:
+                    self._count_shortened_prefix()
+                return payload, n * self.block_size
             if n0 > 0:
                 self._count_shortened_prefix()
             return None, 0
+
+    def _fetch_cumulative(
+        self, hashes: Sequence[bytes], n: int
+    ) -> tuple[bytes | None, int]:
+        """Payload covering blocks ``[0, n')`` for the largest ``n' <= n``
+        the fabric can still serve, walking back on lazy evictions.
+
+        A non-delta payload is cumulative: one Get covers the whole
+        prefix.  A delta payload covers only its own block, so the chain
+        is fetched back to its nearest cumulative base -- every leg a
+        real, priced Get -- and reassembled into a cat container whose
+        decode concatenates the segments along the token axis.  A
+        missing block below a delta makes everything above it
+        unreconstructible: the walk restarts from just under the hole.
+        """
+        while n > 0:
+            segs: list[bytes] = []
+            j = n - 1
+            while True:
+                payload = self.cache.get_block(hashes[j])
+                if payload is None:
+                    n = j      # blocks >= j are gone or chained onto j
+                    break
+                segs.append(payload)
+                if not is_delta_payload(payload):
+                    segs.reverse()
+                    return cat_payloads(segs), n
+                if j == 0:     # a delta with no base under it: unusable
+                    n = 0
+                    break
+                j -= 1
+        return None, 0
 
     def _count_shortened_prefix(self) -> None:
         """The index/lookup promised a prefix the fabric could not serve

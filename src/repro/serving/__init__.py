@@ -119,6 +119,27 @@ degrades **gracefully** instead of falling off a cliff:
   failed requests and the stripe rebuilt by ``reconcile()``, while
   ``dir_replication=1`` demonstrably loses the entries).
 
+Payload codec
+=============
+
+Everything the constellation stores or moves is a **versioned, self-
+describing payload** (``core.chunking.PayloadCodec``): ``f32`` ships
+the legacy raw-array container byte-for-byte; ``int8`` / ``int4``
+quantize float K/V symmetrically per last-axis channel with one scale
+table per engine-block chunk of tokens (integer pools stay raw), and
+``int8+delta`` / ``int4+delta`` make each cumulative Set ship only its
+own block's tokens plus a back-pointer to the previous block's hash --
+``KVCManager`` walks the chain with real priced Gets and reassembles
+on restore.  Decoding is always codec-agnostic (headers carry codec id
+and source dtype, so bf16 pools dequantize back to bf16 exactly), and
+the router prices *encoded* bytes: registered blocks via their real
+``payload_bytes``, unregistered ones via the adapter's codec-derived
+``payload_bytes_per_token`` -- estimates and experienced fetches agree
+on sizes by construction.  ``CacheStats.bytes_encoded`` /
+``bytes_raw`` (and ``EngineStats.dequant_overlap_s``, the dequantize
+leg hidden on the fetch-ahead worker) surface the compression through
+``EngineCluster.fabric_stats``.
+
 Single-replica layering
 =======================
 

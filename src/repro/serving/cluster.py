@@ -33,6 +33,7 @@ import dataclasses
 import threading
 from typing import Sequence
 
+from repro.core.chunking import PayloadCodec
 from repro.core.constellation import Sat
 from repro.core.protocol import (
     CacheStats,
@@ -84,6 +85,7 @@ class EngineCluster:
         max_seq_len: int = 512,
         max_batch: int = 8,
         seed: int = 0,
+        payload_codec: "PayloadCodec | str | None" = None,
         **engine_kwargs,
     ) -> None:
         if anchors is not None:
@@ -96,7 +98,11 @@ class EngineCluster:
         self.rotate_every_s = rotate_every_s
         self.rotations = 0
         self.tokenizer = ByteTokenizer(model.cfg.vocab_size)
-        adapter = SkyKVCAdapter(model, params)
+        # one codec for the whole cluster: the shared kvc_fn, every
+        # replica's adapter, and the router's size model must agree on
+        # what bytes a block payload is
+        codec = PayloadCodec.parse(payload_codec, block_size)
+        adapter = SkyKVCAdapter(model, params, codec=codec)
         # the shared fabric handle: one radix index + recency policy +
         # lock, adopted by the base store and every sibling below
         self.manager = KVCManager(
@@ -110,13 +116,16 @@ class EngineCluster:
         self.engines = [
             Engine(model, params, manager=self.manager.sibling(view),
                    block_size=block_size, max_seq_len=max_seq_len,
-                   max_batch=max_batch, seed=seed + i, **engine_kwargs)
+                   max_batch=max_batch, seed=seed + i,
+                   payload_codec=codec, **engine_kwargs)
             for i, view in enumerate(self.views)
         ]
         self.handles = [ReplicaHandle(i, view)
                         for i, view in enumerate(self.views)]
         self.router = router if router is not None else make_router(
-            policy, self.handles, manager=self.manager, seed=router_seed)
+            policy, self.handles, manager=self.manager, seed=router_seed,
+            bytes_per_token=adapter.payload_bytes_per_token(),
+            delta_payloads=codec.delta)
         self.decisions: list[RouteDecision] = []   # last serve's verdicts
 
     @property
@@ -303,6 +312,15 @@ class EngineCluster:
             "orphaned_chunks": cache.orphaned_chunks + base.orphaned_chunks,
             "shortened_prefixes": (cache.shortened_prefixes
                                    + base.shortened_prefixes),
+            # payload codec: block bytes the fabric actually shipped vs
+            # what they decode to (Set + served Get), and the dequantize
+            # time hidden on the fetch-ahead worker
+            "bytes_encoded": cache.bytes_encoded + base.bytes_encoded,
+            "bytes_raw": cache.bytes_raw + base.bytes_raw,
+            "compression_ratio": (
+                (cache.bytes_raw + base.bytes_raw)
+                / max(cache.bytes_encoded + base.bytes_encoded, 1)),
+            "dequant_overlap_s": merged.dequant_overlap_s,
         }
 
     def reset_stats(self) -> None:

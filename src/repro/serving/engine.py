@@ -25,6 +25,7 @@ tier.
 """
 from __future__ import annotations
 
+from repro.core.chunking import PayloadCodec
 from repro.core.protocol import ConstellationKVC, KVCManager
 from repro.models.model import Model
 from repro.serving.executor import DenseRuntime, PagedExecutor
@@ -56,6 +57,7 @@ class Engine:
         num_pages: int | None = None,
         chunk_tokens: int | None = None,
         host_cache_pages: int | None = None,
+        payload_codec: "PayloadCodec | str | None" = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -64,7 +66,11 @@ class Engine:
         self.max_seq_len = max_seq_len
         self.max_batch = max_batch
         self.block_size = block_size
-        self.adapter = SkyKVCAdapter(model, params)
+        # the codec's scale-table chunk (and delta block) is the engine's
+        # block size, so per-chunk scales align with constellation blocks
+        self.adapter = SkyKVCAdapter(
+            model, params,
+            codec=PayloadCodec.parse(payload_codec, block_size))
         # a cluster replica receives a pre-built KVCManager (a sibling
         # over the shared radix index, bound to this replica's anchored
         # constellation view); a standalone engine builds its own from

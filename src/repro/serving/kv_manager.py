@@ -42,6 +42,7 @@ victim and the fabric absorbs it.
 """
 from __future__ import annotations
 
+import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
@@ -259,8 +260,11 @@ class TieredKVManager:
             return
         added = self.manager.add_precomputed_blocks(
             entry.tokens[: n_blocks * bs],
+            # tokens let a +delta codec recompute back-pointer hashes,
+            # so spilled chains are O(1) bytes per block too
             lambda nb: self.adapter.pages_to_payload(
-                entry.k, entry.v, nb * bs),
+                entry.k, entry.v, nb * bs,
+                tokens=entry.tokens[: n_blocks * bs]),
         )
         self.stats.spilled_blocks += added
 
@@ -355,9 +359,21 @@ class TieredKVManager:
         return waited
 
     def pages_async(self, payload: bytes, n_tokens: int):
-        """Fetch-ahead payload -> pages decode on the adapter worker."""
-        return self.adapter.pages_async(payload, n_tokens,
-                                        self.pool.page_size)
+        """Fetch-ahead payload -> pages decode on the adapter worker.
+
+        Under a quantized codec this is where the dequantize leg runs:
+        on the worker, overlapped with live decode steps, never on the
+        serving loop.  The wall-clock it spends there is accounted as
+        ``EngineStats.dequant_overlap_s`` -- decompression time the
+        requests did not experience."""
+        def decode():
+            t0 = time.perf_counter()
+            out = self.adapter.payload_to_pages(payload, n_tokens,
+                                                self.pool.page_size)
+            self.stats.dequant_overlap_s += time.perf_counter() - t0
+            return out
+
+        return self.adapter.run_async(decode)
 
     def write_back_async(self, tokens: list[int]) -> None:
         """Set KVC for a finished prefill *off* the decode loop: the

@@ -98,7 +98,9 @@ class Router:
 
     def __init__(self, handles: list[ReplicaHandle], *,
                  manager=None, block_size: int | None = None,
-                 max_seen_blocks: int = 65536) -> None:
+                 max_seen_blocks: int = 65536,
+                 bytes_per_token: float | None = None,
+                 delta_payloads: bool = False) -> None:
         if not handles:
             raise ValueError("router needs at least one replica")
         self.handles = handles
@@ -106,6 +108,14 @@ class Router:
         self.block_size = (block_size if block_size is not None
                            else (manager.block_size if manager else 128))
         self.max_seen_blocks = max_seen_blocks
+        # codec-derived size model (SkyKVCAdapter.payload_bytes_per_token):
+        # when a cached block carries no registered payload_bytes, hop
+        # estimates price encoded bytes from this instead of assuming a
+        # full f32 stripe -- so a quantized fabric's router and its
+        # experienced fetches agree on sizes by construction.  Under
+        # delta payloads the tail Get ships one block, not the prefix.
+        self.bytes_per_token = bytes_per_token
+        self.delta_payloads = delta_payloads
 
     # -- shared signals -------------------------------------------------
     def _cached_prefix(
@@ -126,6 +136,11 @@ class Router:
         tail = hashes[n - 1] if n else None
         if n and meta is not None and meta.payload_bytes:
             return n, meta.payload_bytes, tail
+        if n and self.bytes_per_token:
+            # unregistered block: fall back to the codec's size model
+            blocks = 1 if self.delta_payloads else n
+            return n, max(1, round(blocks * self.block_size
+                                   * self.bytes_per_token)), tail
         return n, None, tail
 
     def _commit(self, h: ReplicaHandle, hashes: list[bytes],
@@ -194,10 +209,13 @@ class PrefixAffinityRouter(Router):
 
     def __init__(self, handles: list[ReplicaHandle], *, manager=None,
                  block_size: int | None = None, w_affinity: float = 1.0,
-                 w_load: float = 0.0,
-                 max_seen_blocks: int = 65536) -> None:
+                 w_load: float = 0.0, max_seen_blocks: int = 65536,
+                 bytes_per_token: float | None = None,
+                 delta_payloads: bool = False) -> None:
         super().__init__(handles, manager=manager, block_size=block_size,
-                         max_seen_blocks=max_seen_blocks)
+                         max_seen_blocks=max_seen_blocks,
+                         bytes_per_token=bytes_per_token,
+                         delta_payloads=delta_payloads)
         self.w_affinity = w_affinity
         self.w_load = w_load
 
@@ -237,11 +255,14 @@ class PrefixAffinityRouter(Router):
 
 def make_router(policy: str, handles: list[ReplicaHandle], *,
                 manager=None, block_size: int | None = None,
-                seed: int = 0) -> Router:
+                seed: int = 0, bytes_per_token: float | None = None,
+                delta_payloads: bool = False) -> Router:
     """``"prefix_affinity"`` or ``"random"`` -> a configured router."""
     if policy == "prefix_affinity":
         return PrefixAffinityRouter(handles, manager=manager,
-                                    block_size=block_size)
+                                    block_size=block_size,
+                                    bytes_per_token=bytes_per_token,
+                                    delta_payloads=delta_payloads)
     if policy == "random":
         return RandomRouter(handles, manager=manager,
                             block_size=block_size, seed=seed)

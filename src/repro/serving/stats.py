@@ -68,6 +68,10 @@ class EngineStats:
     # to a shorter served prefix (a later chunk gone from every replica)
     degraded_lookups: int = 0
     shortened_prefixes: int = 0
+    # payload codec: wall-clock seconds the quantized-payload dequantize
+    # leg spent on the fetch-ahead worker -- decompression that ran
+    # overlapped with live decode steps instead of on the serving loop
+    dequant_overlap_s: float = 0.0
     ttft_s: list[float] = field(default_factory=list)   # per request
     itl_s: list[float] = field(default_factory=list)    # per decoded token
     # the subset of itl_s observed by running sequences while an

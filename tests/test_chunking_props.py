@@ -1,23 +1,35 @@
-"""Property tests for ``core.chunking``: split/join, serialization, and
-k-replica placement (hypothesis; each has the seed-level example inline
-so the file still exercises the contract when hypothesis is stubbed)."""
+"""Property tests for ``core.chunking``: split/join, serialization,
+k-replica placement, and the versioned payload codec (hypothesis; each
+has the seed-level example inline so the file still exercises the
+contract when hypothesis is stubbed)."""
+import ml_dtypes
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.chunking import (
+    PayloadCodec,
     arrays_to_bytes,
     bytes_to_arrays,
     bytes_to_dequantized,
+    cat_payloads,
     chunk_server,
+    decode_payload_arrays,
+    delta_info,
     dequantize_int8,
+    encode_arrays,
     join_chunks,
+    make_delta_payload,
     num_chunks,
+    payload_raw_bytes,
     quantize_int8,
     quantized_to_bytes,
     replica_delta,
     split_chunks,
 )
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
 
 
 @given(data=st.binary(max_size=8192), chunk=st.integers(1, 1024))
@@ -126,3 +138,123 @@ def test_chunk_server_is_base_striping(cid, n):
     sid = chunk_server(cid, n)
     assert 0 <= sid < n
     assert sid == cid % n
+
+
+# ---------------------------------------------------------------------------
+# The versioned payload codec (SKYC containers)
+# ---------------------------------------------------------------------------
+
+def _kv_array(dtype, n_tok, chans, seed):
+    """A KVC-shaped [L, T, C] array (token axis 1, channels last)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((2, n_tok, chans)).astype(np.float32) * 10
+    return a.astype(dtype)
+
+
+@given(
+    name=st.sampled_from(["int8", "int4"]),
+    src=st.sampled_from(["float32", "bfloat16"]),
+    seg=st.sampled_from([0, 3, 8]),
+    n_tok=st.sampled_from([0, 1, 5, 17]),
+    chans=st.integers(1, 6),
+    seed=st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=80, deadline=None)
+def test_codec_roundtrip_restores_dtype_and_shape(
+        name, src, seg, n_tok, chans, seed):
+    """Every quantized codec x source dtype x scale-table chunking
+    (0 = whole tensor, ragged and exact chunkings, empty tensors) round
+    trips to the recorded dtype/shape, deterministically, with a
+    header-only raw-byte scan that is exact."""
+    dt = _BF16 if src == "bfloat16" else np.dtype(np.float32)
+    a = _kv_array(dt, n_tok, chans, seed)
+    codec = PayloadCodec(name, seg)
+    enc = encode_arrays([a], codec)
+    assert encode_arrays([a], codec) == enc          # deterministic
+    (back,) = decode_payload_arrays(enc)
+    assert back.dtype == dt and back.shape == a.shape
+    assert payload_raw_bytes(enc) == a.nbytes        # header-only scan
+    assert decode_payload_arrays(enc)[0].tobytes() == back.tobytes()
+    if a.size:
+        qmax = 127.0 if name == "int8" else 7.0
+        af = np.asarray(a, np.float32)
+        err = np.abs(np.asarray(back, np.float32) - af)
+        # one quantization step (of the global amax -- per-chunk scales
+        # are never larger), plus bf16 output rounding (<= amax/128)
+        amax = np.abs(af).max()
+        bound = amax / qmax + (amax / 128.0 if dt == _BF16 else 0.0)
+        assert err.max() <= bound + 1e-6
+
+
+@given(
+    name=st.sampled_from(["int8", "int4"]),
+    n_blocks=st.integers(1, 4),
+    bt=st.sampled_from([2, 4]),
+    chans=st.integers(1, 4),
+    seed=st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_delta_chain_cat_decode_matches_full_encode(
+        name, n_blocks, bt, chans, seed):
+    """A delta chain (base + per-block deltas, cat-reassembled) decodes
+    EXACTLY like the full array encoded in one shot: scale-table chunks
+    align with block boundaries, so quantizing per block is quantizing
+    per chunk."""
+    codec = PayloadCodec(name, bt)
+    a = _kv_array(np.float32, n_blocks * bt, chans, seed)
+    (full,) = decode_payload_arrays(encode_arrays([a], codec))
+    segs = []
+    for i in range(n_blocks):
+        inner = encode_arrays([a[:, i * bt:(i + 1) * bt]], codec)
+        segs.append(inner if i == 0 else
+                    make_delta_payload(inner, b"\x01" * 32, i * bt))
+    cat = cat_payloads(segs)
+    (out,) = decode_payload_arrays(cat)
+    assert out.dtype == full.dtype and out.shape == full.shape
+    assert np.array_equal(out, full)
+    # back-pointers round trip, and the raw scan sums the segments
+    if n_blocks > 1:
+        prev_hash, prev_tokens, inner = delta_info(segs[1])
+        assert prev_hash == b"\x01" * 32 and prev_tokens == bt
+        assert decode_payload_arrays(inner)[0].shape[1] == bt
+    assert payload_raw_bytes(cat) == a.nbytes
+
+
+@given(
+    name=st.sampled_from(["int8", "int4"]),
+    seed=st.integers(0, 2**32 - 1),
+    frac=st.floats(0.0, 1.0),
+)
+@settings(max_examples=80, deadline=None)
+def test_truncated_codec_payload_rejected(name, seed, frac):
+    """Any strict prefix of a quantized container fails loudly with
+    ValueError -- no decoder ever returns short arrays from short
+    bytes."""
+    a = _kv_array(np.float32, 6, 4, seed)
+    enc = encode_arrays([a, a + 1.0], PayloadCodec(name, 4))
+    cut = min(int(len(enc) * frac), len(enc) - 1)
+    with pytest.raises(ValueError):
+        decode_payload_arrays(enc[:cut])
+
+
+@given(seed=st.integers(0, 2**32 - 1), frac=st.floats(0.3, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_truncated_delta_and_cat_rejected(seed, frac):
+    a = _kv_array(np.float32, 4, 3, seed)
+    inner = encode_arrays([a], PayloadCodec("int8", 4))
+    delta = make_delta_payload(inner, b"\x02" * 32, 4)
+    cat = cat_payloads([inner, delta])
+    for payload in (delta, cat):
+        cut = min(int(len(payload) * frac), len(payload) - 1)
+        with pytest.raises(ValueError):
+            decode_payload_arrays(payload[:cut])
+
+
+@given(specs=_arrays())
+@settings(max_examples=40, deadline=None)
+def test_f32_codec_is_byte_identical_legacy(specs):
+    """The default codec emits the legacy SKYM container byte-for-byte,
+    so an upgraded fabric reads old payloads and vice versa."""
+    arrays = _build(specs)
+    assert encode_arrays(arrays, PayloadCodec("f32")) == (
+        arrays_to_bytes(arrays))

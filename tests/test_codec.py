@@ -1,0 +1,325 @@
+"""The versioned payload codec, end to end below the engines: container
+formats and header rejection, dtype-true round trips (the bf16 asymmetry
+fix), KVCManager delta-chain reassembly over a real priced fabric, and
+the router's codec-derived size model.
+
+The deterministic contract under test:
+
+* payloads are self-describing -- decode never needs a codec, source
+  dtypes are restored exactly (bf16 in -> bf16 out), integer pools are
+  stored verbatim, and corrupt/truncated headers fail loudly;
+* a delta chain reassembled by ``KVCManager`` decodes byte-identically
+  to the full-prefix encode (scale chunks align with blocks), a missing
+  mid-chain block shortens the resumable prefix to just before it, and
+  re-adding recomputes only the broken tail;
+* the router prices *encoded* bytes: registered blocks by their real
+  ``payload_bytes`` (estimate == experienced-path estimate on a
+  quantized fabric), unregistered ones by the codec's bytes-per-token
+  model.
+"""
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConstellationKVC,
+    ConstellationSpec,
+    IslTransport,
+    KVCManager,
+    LosWindow,
+    Sat,
+    Strategy,
+    chain_hashes,
+)
+from repro.core.chunking import (
+    PayloadCodec,
+    arrays_to_bytes,
+    bytes_to_dequantized,
+    cat_payloads,
+    decode_payload_arrays,
+    delta_info,
+    dequantize_int8,
+    encode_arrays,
+    is_delta_payload,
+    make_delta_payload,
+    payload_raw_bytes,
+    quantize_int8,
+    quantized_to_bytes,
+    split_cat_payload,
+)
+from repro.serving import PrefixAffinityRouter, ReplicaHandle
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+SPEC = ConstellationSpec(15, 15, 550.0)
+BS = 8  # manager block size (tokens) in the fabric-level tests
+
+
+def make_kvc(**kw):
+    return ConstellationKVC(
+        SPEC, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+        num_servers=10, chunk_bytes=1024,
+        transport=IslTransport(SPEC, chunk_processing_time_s=1e-4), **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# dtype-true round trips (the bf16 asymmetry fix)
+# ---------------------------------------------------------------------------
+
+def test_bf16_roundtrips_as_bf16():
+    """quantized_to_bytes used to serialize bf16 inputs but dequantize to
+    float32 -- doubling the restore's memory and breaking bit-compat with
+    the pool it refills.  The codec header records the source dtype."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((2, 16, 8)).astype(np.float32).astype(_BF16)
+    (back,) = bytes_to_dequantized(quantized_to_bytes([a]))
+    assert back.dtype == _BF16
+    assert back.shape == a.shape
+
+
+def test_legacy_pair_payloads_still_decode():
+    """Pre-codec SKYM [q, scale, ...] payloads written by old fabrics
+    decode exactly as before (to float32 -- they never recorded dtype)."""
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((4, 6)).astype(np.float32)
+    qa = quantize_int8(a)
+    legacy = arrays_to_bytes([qa.q, qa.scale])
+    (back,) = bytes_to_dequantized(legacy)
+    assert back.dtype == np.float32
+    assert np.array_equal(back, dequantize_int8(qa))
+
+
+def test_integer_pools_stored_verbatim():
+    """Already-quantized device pools (int8), block tables (int32) and
+    masks (bool) pass through quantized codecs bit-exactly -- quantizing
+    codes would corrupt them."""
+    rng = np.random.default_rng(2)
+    arrays = [
+        rng.integers(-128, 128, (2, 9, 4), dtype=np.int8),
+        rng.integers(0, 1 << 30, (7,), dtype=np.int32),
+        rng.integers(0, 2, (3, 5)).astype(bool),
+    ]
+    for name in ("int8", "int4"):
+        back = decode_payload_arrays(
+            encode_arrays(arrays, PayloadCodec(name, 4)))
+        for a, b in zip(arrays, back):
+            assert b.dtype == a.dtype
+            assert np.array_equal(a, b)
+
+
+def test_empty_payloads_roundtrip():
+    for name in ("f32", "int8", "int4"):
+        enc = encode_arrays([], PayloadCodec(name, 4))
+        assert decode_payload_arrays(enc) == []
+        assert payload_raw_bytes(enc) == 0
+
+
+def test_codec_parse_specs():
+    assert PayloadCodec.parse(None, 16) == PayloadCodec("f32", 16)
+    assert PayloadCodec.parse("int8", 16) == PayloadCodec("int8", 16)
+    c = PayloadCodec.parse("int4+delta", 16)
+    assert c.name == "int4" and c.delta and c.block_tokens == 16
+    assert PayloadCodec.parse(c) is c
+    with pytest.raises(ValueError):
+        PayloadCodec.parse("int2", 16)
+    with pytest.raises(ValueError):
+        PayloadCodec("int8", 0, delta=True)   # delta needs block_tokens
+    assert PayloadCodec("int8", 0).bytes_per_value(4) == 1.0
+    assert PayloadCodec("int4", 0).bytes_per_value(4) == 0.5
+    assert PayloadCodec("f32", 0).bytes_per_value(2) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# header rejection: every decoder fails loudly on corrupt containers
+# ---------------------------------------------------------------------------
+
+def _enc(n_tok=8, seg=4, name="int8"):
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((2, n_tok, 3)).astype(np.float32)
+    return a, encode_arrays([a], PayloadCodec(name, seg))
+
+
+def test_rejects_unsupported_codec_version():
+    _, enc = _enc()
+    bad = enc[:4] + b"\x63\x00" + enc[6:]     # version 99
+    with pytest.raises(ValueError, match="version"):
+        decode_payload_arrays(bad)
+
+
+def test_rejects_unknown_container_kind():
+    _, enc = _enc()
+    bad = enc[:6] + b"\x09" + enc[7:]         # kind 9
+    with pytest.raises(ValueError, match="kind"):
+        decode_payload_arrays(bad)
+
+
+def test_rejects_unknown_codec_id():
+    _, enc = _enc()
+    bad = enc[:7] + b"\x2a" + enc[8:]         # codec id 42
+    with pytest.raises(ValueError, match="codec id"):
+        decode_payload_arrays(bad)
+
+
+def test_rejects_tampered_scale_table_chunking():
+    """Rewriting the scale-table chunk size in flight desynchronizes the
+    table from the codes -- the decoder checks the shape it implies."""
+    a, enc = _enc(n_tok=8, seg=4)             # 2 chunks of 4 tokens
+    # ENC layout: magic(4) ver+kind+id(4) n(4) | dlen(1) "<f4"(3)
+    # ndim(1) shape(24) store(1) -> seg int32 at offset 42
+    off = 12 + 1 + 3 + 1 + 24 + 1
+    bad = enc[:off] + (1).to_bytes(4, "little") + enc[off + 4:]
+    with pytest.raises(ValueError, match="scale table"):
+        decode_payload_arrays(bad)
+
+
+def test_delta_and_cat_accessors_reject_wrong_kind():
+    a, enc = _enc()
+    with pytest.raises(ValueError):
+        delta_info(enc)                       # ENC is not a delta
+    with pytest.raises(ValueError):
+        split_cat_payload(enc)                # ...nor a cat
+    with pytest.raises(ValueError):
+        cat_payloads([])                      # cat of nothing
+    assert cat_payloads([enc]) is enc         # single segment: no wrapper
+
+
+def test_legacy_odd_pair_count_rejected():
+    q = np.zeros((2, 3), np.int8)
+    with pytest.raises(ValueError):
+        bytes_to_dequantized(arrays_to_bytes([q]))  # q without its scale
+
+
+def test_raw_bytes_scan_is_best_effort():
+    """Opaque test bytes stored on the fabric count at face value."""
+    assert payload_raw_bytes(b"not a payload at all") == 20
+    assert payload_raw_bytes(b"SKYM\x01\x00garbage") == 13
+
+
+# ---------------------------------------------------------------------------
+# KVCManager delta chains over a real priced fabric
+# ---------------------------------------------------------------------------
+
+_CODEC = PayloadCodec("int8", BS)
+
+
+def _tokenize(prompt):
+    return [ord(c) % 96 for c in prompt]
+
+
+def _series(tokens):
+    """The 'model state' for a token prefix: its cumulative sum, shaped
+    [L, T, C] so the token axis (1) matches real KVC payloads."""
+    return np.cumsum(np.asarray(tokens, np.float32)).reshape(1, -1, 1)
+
+
+def _delta_kvc_fn(tokens, past, past_len):
+    arr = _series(tokens)
+    if past is None or past_len == 0:
+        return encode_arrays([arr[:, :BS]], _CODEC)
+    prev = chain_hashes(list(tokens[:past_len]), BS)[-1]
+    inner = encode_arrays([arr[:, past_len:]], _CODEC)
+    return make_delta_payload(inner, prev, past_len)
+
+
+def test_manager_reassembles_delta_chains():
+    kvc = make_kvc()
+    mgr = KVCManager(_tokenize, _delta_kvc_fn, kvc, block_size=BS)
+    tokens = _tokenize("delta chains over the constellation!")[: 4 * BS]
+    assert mgr.add_blocks_tokens(tokens) == 4
+    payload, n = mgr.get_cache_tokens(tokens)
+    assert n == 4 * BS
+    # the reassembled cat decodes EXACTLY like a one-shot aligned encode
+    (got,) = decode_payload_arrays(payload)
+    (want,) = decode_payload_arrays(encode_arrays([_series(tokens)], _CODEC))
+    assert np.array_equal(got, want)
+    # each stored block past the base is O(block) bytes, not O(prefix)
+    hashes = chain_hashes(tokens, BS)
+    sizes = [len(kvc.get_block(h)) for h in hashes]
+    assert all(is_delta_payload(kvc.get_block(h)) for h in hashes[1:])
+    assert max(sizes[1:]) <= sizes[0] + 64    # headers, not growth
+    # a hit fetched every chain link with real priced Gets
+    assert kvc.stats.block_hits >= 4
+
+
+def test_manager_shortens_broken_delta_chain_and_recovers():
+    """Evicting a mid-chain block behind the index's back makes every
+    later block unreconstructible: the resumable prefix shrinks to just
+    before the hole, and a re-add recomputes only the broken tail."""
+    kvc = make_kvc()
+    mgr = KVCManager(_tokenize, _delta_kvc_fn, kvc, block_size=BS)
+    tokens = _tokenize("a chain with a hole punched in it....")[: 4 * BS]
+    mgr.add_blocks_tokens(tokens)
+    hashes = chain_hashes(tokens, BS)
+    kvc.on_block_lost = None                  # evict without notifying
+    kvc.purge_block(hashes[1])
+    payload, n = mgr.get_cache_tokens(tokens)
+    assert n == BS                            # shortened to the base block
+    (got,) = decode_payload_arrays(payload)
+    (want,) = decode_payload_arrays(
+        encode_arrays([_series(tokens)[:, :BS]], _CODEC))
+    assert np.array_equal(got, want)
+    # re-adding resumes from the surviving base and repairs the chain
+    kvc.on_block_lost = mgr._on_block_lost
+    assert mgr.add_blocks_tokens(tokens) == 3
+    payload, n = mgr.get_cache_tokens(tokens)
+    assert n == 4 * BS
+    (got,) = decode_payload_arrays(payload)
+    (want,) = decode_payload_arrays(encode_arrays([_series(tokens)], _CODEC))
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# router pricing on a quantized fabric
+# ---------------------------------------------------------------------------
+
+def test_estimator_agreement_on_quantized_fabric():
+    """The hop signal on an int8 fabric prices the *encoded* payload the
+    hit will fetch -- registered payload_bytes are encoded sizes, so the
+    router's estimate equals the experienced-path estimate without any
+    codec plumbed into the router at all."""
+    kvc = make_kvc()
+    mgr = KVCManager(_tokenize, _delta_kvc_fn, kvc, block_size=BS)
+    tokens = _tokenize("hop aware routing over a quantized torus")[: 4 * BS]
+    mgr.add_blocks_tokens(tokens)
+    far, near = kvc.view(Sat(0, 0)), kvc.view(Sat(7, 7))
+    handles = [ReplicaHandle(0, view=far), ReplicaHandle(1, view=near)]
+    router = PrefixAffinityRouter(handles, manager=mgr)
+    d = router.route(tokens)
+    assert d.replica == 1 and d.cached_blocks == 4
+    hashes = chain_hashes(tokens, BS)
+    n, meta = mgr.index.longest_cached_prefix(hashes)
+    assert d.hop_latency_s == near.estimate_get_latency_s(
+        payload_bytes=meta.payload_bytes, block_hash=hashes[n - 1])
+    # registered bytes are the ENCODED (delta) size: one int8 block +
+    # headers, far below a raw f32 cumulative payload
+    assert meta.payload_bytes == len(kvc.get_block(hashes[-1]))
+    assert meta.payload_bytes < _series(tokens).nbytes
+
+
+def test_router_codec_size_fallback_for_unregistered_blocks():
+    """Blocks cached without registered payload_bytes are priced from
+    the adapter's codec-derived bytes-per-token model; delta fabrics
+    price one block, cumulative fabrics the whole prefix."""
+    kvc = make_kvc()
+    mgr = KVCManager(_tokenize, _delta_kvc_fn, kvc, block_size=BS)
+    tokens = _tokenize("fallback pricing for unregistered blocks!")[: 3 * BS]
+    mgr.add_blocks_tokens(tokens)
+    hashes = chain_hashes(tokens, BS)
+    # wipe the registered size, as a pre-codec index snapshot would have
+    _, meta = mgr.index.longest_cached_prefix(hashes)
+    meta.payload_bytes = 0
+    view = kvc.view(Sat(7, 7))
+    handles = [ReplicaHandle(0, view=view)]
+    cumulative = PrefixAffinityRouter(
+        handles, manager=mgr, bytes_per_token=4.0)
+    blocks_n, est_bytes, tail = cumulative._cached_prefix(hashes)
+    assert blocks_n == 3 and tail == hashes[2]
+    assert est_bytes == 3 * BS * 4
+    delta = PrefixAffinityRouter(
+        [ReplicaHandle(0, view=view)], manager=mgr,
+        bytes_per_token=4.0, delta_payloads=True)
+    _, est_bytes_delta, _ = delta._cached_prefix(hashes)
+    assert est_bytes_delta == BS * 4          # the tail Get ships one block
+    # with neither registered bytes nor a size model, no estimate
+    bare = PrefixAffinityRouter([ReplicaHandle(0, view=view)], manager=mgr)
+    assert bare._cached_prefix(hashes)[1] is None
