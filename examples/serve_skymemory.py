@@ -47,11 +47,22 @@ depth by default so the demo runs in ~a minute on CPU) from an
   ``reconcile`` pass rebuilds wiped stripes from satellite inventories
   (``dir_repaired_entries``) and sweeps orphaned chunks.
 
+* **Streaming serve** -- ``--stream`` replaces the closed batch with an
+  open multi-tenant arrival process (``--tenants N`` seeded tenants
+  mixing Poisson / bursty document-reuse / diurnal traffic at
+  ``--arrival-rate`` requests per virtual second for ``--duration``
+  virtual seconds): every request is routed at its arrival time into
+  long-lived engine worker loops, router load releases per request, an
+  admission controller sheds low-priority arrivals under overload, and
+  the run reports *goodput* (SLO-attained tokens/s), per-tenant
+  attainment, and the tail of per-request inter-token latency.
+
 Run: PYTHONPATH=src python examples/serve_skymemory.py
      [--full] [--replicas N] [--requests N] [--policy random]
      [--replication K] [--dir-replication K] [--outages N]
      [--degrade-links N] [--ground-stations N]
      [--payload-codec {f32,int8,int4}]
+     [--stream] [--arrival-rate R] [--duration S] [--tenants N]
 """
 import argparse
 import sys
@@ -78,9 +89,13 @@ from repro.core import (  # noqa: E402
 from repro.core.faults import FaultEvent  # noqa: E402
 from repro.models.model import Model  # noqa: E402
 from repro.serving import (  # noqa: E402
+    SLO,
+    AdmissionController,
     EngineCluster,
     Request,
     SamplingParams,
+    TrafficGenerator,
+    standard_tenants,
 )
 
 CONTEXT = (
@@ -118,6 +133,20 @@ def main() -> None:
                     help="constellation payload encoding (f32 = raw "
                          "arrays; int8/int4 = per-channel quantized "
                          "with per-block scale tables)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve an open multi-tenant arrival stream "
+                         "through the engine worker loops instead of "
+                         "one closed batch")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="aggregate request rate across tenants, in "
+                         "requests per virtual second (--stream)")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="length of the arrival stream in virtual "
+                         "seconds (--stream)")
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="number of seeded tenants: one protected "
+                         "'pro' Poisson tenant plus alternating bursty "
+                         "document-reuse and diurnal tenants (--stream)")
     args = ap.parse_args()
 
     cfg = get_config("skymemory-tinyllama")
@@ -209,18 +238,70 @@ def main() -> None:
         injector = FaultInjector(kvc, FaultPlan(events))
         injector.arm()
 
-    t0 = time.perf_counter()
-    results = cluster.serve(reqs)
-    wall = time.perf_counter() - t0
+    if args.stream:
+        tenants = standard_tenants(args.tenants, args.arrival_rate,
+                                   max_new_tokens=args.max_new)
+        arrivals = list(TrafficGenerator(tenants, seed=0)
+                        .until(args.duration))
+        print(f"streaming: {len(arrivals)} arrivals over "
+              f"{args.duration:.1f} virtual s from {len(tenants)} "
+              f"tenant(s) ({', '.join(t.name for t in tenants)}) at "
+              f"{args.arrival_rate:.1f} req/s aggregate")
+        # warm the compiled step functions once so the paced stream
+        # measures serving, not XLA compilation
+        cluster.serve([Request(prompt="[warmup] " + CONTEXT,
+                               sampling=SamplingParams(max_new_tokens=4))])
+        cluster.reset_stats()
+        admission = AdmissionController(
+            capacity_tokens=args.replicas * 4 * 256, protect_priority=1)
+        report = cluster.serve_stream(
+            arrivals,
+            slos={"pro": SLO(ttft_s=2.0, itl_p95_s=0.5)},
+            default_slo=SLO(ttft_s=4.0, itl_p95_s=1.0),
+            admission=admission,
+        )
+        results = report.results()
+        wall = report.elapsed_s
+        for rec in report.records:
+            a = rec.arrival
+            if rec.shed:
+                print(f"  t={a.t_s:5.2f}s {a.tenant:>9}: shed "
+                      f"(over capacity, priority "
+                      f"{a.request.priority})")
+                continue
+            r = rec.result
+            print(f"  t={a.t_s:5.2f}s {a.tenant:>9} -> replica "
+                  f"{rec.decision.replica}: prompt={r.prompt_tokens}tok "
+                  f"cached={r.cached_tokens} -> {len(r.token_ids)} new "
+                  f"| ttft={r.ttft_s*1e3:.0f}ms "
+                  f"{'slo-ok' if rec.attained else 'slo-miss'}")
+        s = report.slo
+        tail = s["itl_tail_s"]
+        print(f"\ngoodput: {s['goodput_tokens_per_s']:.1f} SLO-attained "
+              f"tok/s of {s['tokens_per_s']:.1f} tok/s raw | attainment "
+              f"{s['attainment']*100:.0f}% "
+              f"({s['attained']}/{s['completed']} completed) | shed "
+              f"{s['shed']} of {s['offered']} offered | itl tail "
+              f"p95={tail['p95']*1e3:.1f}ms p99={tail['p99']*1e3:.1f}ms "
+              f"| rotations={report.rotations}")
+        for name, b in s["per_tenant"].items():
+            print(f"  tenant {name:>9}: offered={b['offered']} "
+                  f"shed={b['shed']} completed={b['completed']} "
+                  f"attained={b['attained']} "
+                  f"({b['attainment']*100:.0f}%)")
+    else:
+        t0 = time.perf_counter()
+        results = cluster.serve(reqs)
+        wall = time.perf_counter() - t0
 
-    for r, d in zip(results, cluster.decisions):
-        hit = r.cached_tokens / max(r.prompt_tokens, 1) * 100
-        print(f"req {r.request_id} -> replica {d.replica} "
-              f"(affinity={d.affinity_tokens}tok "
-              f"hop={d.hop_latency_s*1e3:.1f}ms): "
-              f"prompt={r.prompt_tokens}tok cached={r.cached_tokens} "
-              f"({hit:.0f}% hit) -> {len(r.token_ids)} new tok "
-              f"ttft={r.ttft_s*1e3:.0f}ms")
+        for r, d in zip(results, cluster.decisions):
+            hit = r.cached_tokens / max(r.prompt_tokens, 1) * 100
+            print(f"req {r.request_id} -> replica {d.replica} "
+                  f"(affinity={d.affinity_tokens}tok "
+                  f"hop={d.hop_latency_s*1e3:.1f}ms): "
+                  f"prompt={r.prompt_tokens}tok cached={r.cached_tokens} "
+                  f"({hit:.0f}% hit) -> {len(r.token_ids)} new tok "
+                  f"ttft={r.ttft_s*1e3:.0f}ms")
 
     print("\nper-replica:")
     for rs in cluster.replica_stats():

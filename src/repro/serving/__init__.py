@@ -29,6 +29,43 @@ constellation fabric** (the paper's "Scale Out" axis):
   shifts).  ``EngineStats.merge`` folds per-replica stats into true
   cluster-level TTFT/ITL percentiles and constellation hit rates.
 
+Streaming tier
+==============
+
+The cluster serves **open-ended streams**, not just closed batches:
+
+* **Engine worker loops** (``Engine.start`` / ``submit`` / ``stop``) --
+  each replica runs a long-lived worker thread over its scheduler's
+  persistent ``submit()``/``service()`` stream: it keeps stepping while
+  the queue drains (mid-decode admission picks new arrivals up between
+  steps), idles when empty, and drains cleanly on ``stop()``.
+  ``Engine.pump`` services one round inline for threadless
+  deterministic interleaves; closed-batch ``generate`` is a thin
+  wrapper that submits, services to empty, and restamps batch wall
+  time.  Non-paged families stream by micro-batching through the dense
+  runtime.
+* **Per-request routing and release** (``EngineCluster.submit`` /
+  ``serve_stream``) -- every request is routed at its *arrival time* on
+  the fabric clock, and its ``committed_tokens`` return to the router
+  the moment it finishes (a future callback), so the load tie-break
+  compares true in-flight work instead of end-of-batch totals.
+* **Traffic** (``repro.serving.traffic``) -- seeded open-ended arrival
+  processes: Poisson, diurnal-modulated (thinned nonhomogeneous
+  Poisson), and bursty multi-tenant streams with per-tenant prompt
+  length, document prefix-reuse, decode length, and priority --
+  ``TrafficGenerator`` merges them into one deterministic
+  ``Arrival(t_s, tenant, Request)`` iterator.
+* **SLOs + admission control** (``repro.serving.slo``) -- per-tenant
+  TTFT / per-request-ITL-p95 targets (``SLO``), goodput accounting
+  (``SLOTracker``: SLO-attained tokens/s, per-tenant attainment, tail
+  ITL), and the overload valve (``AdmissionController``): past a
+  committed-token capacity, arrivals below ``protect_priority`` are
+  shed at the front door while protected tenants always enter and
+  additionally ride the scheduler's priority preemption inside the
+  engines.  Shedding decides on load, never latency, so deterministic
+  replays (``serve_stream(parallel=False)``, pump-budget interleave,
+  rotation on virtual-time crossings) reproduce byte-identical runs.
+
 Constellation latency is **experienced, not just recorded**: with a
 ``core.protocol.SimClock`` on the fabric, every Get KVC completes at a
 virtual time (``IslTransport.last_ready_at``).  The scheduler treats a
@@ -239,7 +276,12 @@ keep a dense batched cache (``DenseRuntime``) but share the vectorized
 sampler and the one-sync-per-step loop; paging their decode state is
 future work.
 """
-from repro.serving.cluster import EngineCluster, spread_anchors
+from repro.serving.cluster import (
+    EngineCluster,
+    StreamRecord,
+    StreamReport,
+    spread_anchors,
+)
 from repro.serving.engine import Engine
 from repro.serving.executor import DenseRuntime, PagedExecutor
 from repro.serving.kv_manager import HostPageCache, TieredKVManager
@@ -249,6 +291,7 @@ from repro.serving.request import (
     Request,
     SeqState,
 )
+from repro.serving.slo import SLO, AdmissionController, SLOTracker, itl_tail
 from repro.serving.router import (
     PrefixAffinityRouter,
     RandomRouter,
@@ -265,15 +308,30 @@ from repro.serving.sampler import (
 )
 from repro.serving.scheduler import Scheduler, chunk_spans, head_span
 from repro.serving.skycache import SkyKVCAdapter
-from repro.serving.stats import EngineStats
+from repro.serving.stats import EngineStats, SampleReservoir
 from repro.serving.tokenizer import ByteTokenizer
+from repro.serving.traffic import (
+    Arrival,
+    TenantSpec,
+    TrafficGenerator,
+    standard_tenants,
+)
 
 __all__ = [
+    "AdmissionController",
+    "Arrival",
     "Engine",
     "EngineCluster",
     "EngineStats",
     "FinishReason",
     "GenerationResult",
+    "SLO",
+    "SLOTracker",
+    "SampleReservoir",
+    "StreamRecord",
+    "StreamReport",
+    "TenantSpec",
+    "TrafficGenerator",
     "PrefixAffinityRouter",
     "RandomRouter",
     "ReplicaHandle",
@@ -294,6 +352,8 @@ __all__ = [
     "sample_batch",
     "spread_anchors",
     "stack_sampling",
+    "standard_tenants",
+    "itl_tail",
     "SkyKVCAdapter",
     "ByteTokenizer",
 ]

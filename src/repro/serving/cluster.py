@@ -13,14 +13,27 @@
   replica by prefix affinity, anchor-to-home-satellite hop latency, and
   load before any engine sees them.
 
-``serve`` routes a request stream, runs each replica's share on its own
-thread (replicas really do compute concurrently -- the shared fabric is
-lock-protected, and the ``SimClock`` makes every replica *experience*
-its anchor's fetch latency), and returns results in request order.
+Two serving surfaces share the machinery:
+
+* ``serve`` -- the closed batch: routes a fixed request list up front,
+  runs each replica's share on its own thread (replicas really do
+  compute concurrently -- the shared fabric is lock-protected, and the
+  ``SimClock`` makes every replica *experience* its anchor's fetch
+  latency), and returns results in request order.
+* ``submit`` / ``serve_stream`` -- the streaming tier: each request is
+  routed at its *arrival time* on the fabric clock, handed to a
+  long-lived engine worker loop, and its router load released the
+  moment it finishes (per-request release -- the load tie-break
+  compares true in-flight work).  ``serve_stream`` drives a seeded
+  arrival stream (``serving.traffic``) through per-tenant SLO
+  accounting and overload shedding (``serving.slo``), returning a
+  ``StreamReport`` with goodput, attainment, and tail-ITL counters.
+
 ``rotate_every_s`` starts an orbital ticker for the rotation-during-
 serving scenario: the constellation rotates on the same clock while
 requests are in flight, migrating chunks and shifting prefix affinity
-under the live cluster.
+under the live cluster (deterministic streaming runs rotate on virtual
+arrival-time crossings instead of a wall-clock thread).
 
 Cluster-level reporting: ``merged_stats`` folds per-replica
 ``EngineStats`` (true cluster percentiles, not averaged ones), and
@@ -31,7 +44,10 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Sequence
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
 
 from repro.core.chunking import PayloadCodec
 from repro.core.constellation import Sat
@@ -53,8 +69,53 @@ from repro.serving.router import (
     make_router,
 )
 from repro.serving.skycache import SkyKVCAdapter
+from repro.serving.slo import SLO, AdmissionController, SLOTracker
 from repro.serving.stats import EngineStats
 from repro.serving.tokenizer import ByteTokenizer, truncate_prompt
+from repro.serving.traffic import Arrival
+
+
+@dataclass
+class StreamRecord:
+    """One arrival's fate on the streaming path."""
+
+    arrival: Arrival
+    shed: bool = False
+    decision: RouteDecision | None = None
+    future: Future | None = None
+    result: GenerationResult | None = None
+    attained: bool = False
+
+
+@dataclass
+class StreamReport:
+    """What ``serve_stream`` hands back: per-arrival records plus the
+    SLO tracker's goodput/attainment counter block."""
+
+    records: list[StreamRecord] = field(default_factory=list)
+    elapsed_s: float = 0.0
+    slo: dict = field(default_factory=dict)
+    rotations: int = 0
+
+    def results(self) -> list[GenerationResult]:
+        return [r.result for r in self.records if r.result is not None]
+
+    def shed(self) -> list[StreamRecord]:
+        return [r for r in self.records if r.shed]
+
+
+def _raise_aggregated(errors: list[tuple[str, BaseException]]) -> None:
+    """Surface EVERY failure, not just the first: a lone exception
+    re-raises as itself; several aggregate into one RuntimeError whose
+    message lists each (ExceptionGroup-style), chained to the first."""
+    if not errors:
+        return
+    if len(errors) == 1:
+        raise errors[0][1]
+    msg = "; ".join(f"{label}: {type(e).__name__}: {e}"
+                    for label, e in errors)
+    raise RuntimeError(
+        f"{len(errors)} replica failures: {msg}") from errors[0][1]
 
 
 def spread_anchors(kvc: ConstellationKVC, n: int) -> list[Sat]:
@@ -154,7 +215,7 @@ class EngineCluster:
             buckets.setdefault(d.replica, []).append((i, req))
 
         results: list[GenerationResult | None] = [None] * len(requests)
-        errors: list[BaseException] = []
+        errors: list[tuple[str, BaseException]] = []
 
         def run_replica(ridx: int, items: list[tuple[int, Request]]) -> None:
             try:
@@ -162,7 +223,7 @@ class EngineCluster:
                 for (i, _), res in zip(items, out):
                     results[i] = res
             except BaseException as e:  # surfaced after join
-                errors.append(e)
+                errors.append((f"replica {ridx}", e))
 
         ticker = self._start_rotation_ticker()
         try:
@@ -187,9 +248,180 @@ class EngineCluster:
             # compares in-flight work, not all-time totals
             for d in self.decisions:
                 self.router.release(d.replica, d.committed_tokens)
-        if errors:
-            raise errors[0]
+        _raise_aggregated(errors)
         return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # streaming: per-request routing over long-lived engine workers
+    # ------------------------------------------------------------------
+    def start_workers(self) -> None:
+        """Start every replica's long-lived worker loop (idempotent)."""
+        for e in self.engines:
+            e.start()
+
+    def stop_workers(self, *, drain: bool = True) -> None:
+        """Stop every replica's worker loop; ``drain=True`` finishes the
+        backlog first."""
+        errors: list[tuple[str, BaseException]] = []
+        for i, e in enumerate(self.engines):
+            try:
+                e.stop(drain=drain)
+            except BaseException as exc:
+                errors.append((f"replica {i}", exc))
+        _raise_aggregated(errors)
+
+    def submit(self, request: Request, *,
+               release: bool = True) -> tuple[Future, RouteDecision]:
+        """Route ONE request now -- at its arrival, not as part of a
+        batch -- and hand it to the winning replica's stream.  With
+        ``release=True`` the router's committed tokens come back the
+        moment this request finishes (per-request release: the load
+        tie-break compares true in-flight work); ``release=False`` leaves
+        them to the caller (the end-of-run baseline)."""
+        toks = truncate_prompt(self.tokenizer.encode(request.prompt),
+                               self.max_seq_len)
+        d = self.router.route(
+            toks, est_new_tokens=request.sampling.max_new_tokens)
+        self.decisions.append(d)
+        fut = self.engines[d.replica].submit(request)
+        if release:
+            fut.add_done_callback(
+                lambda _f, d=d: self.router.release(d.replica,
+                                                    d.committed_tokens))
+        return fut, d
+
+    def serve_stream(
+        self,
+        arrivals: Iterable[Arrival],
+        *,
+        parallel: bool = True,
+        slos: dict[str, SLO] | None = None,
+        default_slo: SLO | None = None,
+        admission: AdmissionController | None = None,
+        release_mode: str = "per_request",
+        pump_steps_per_s: float = 200.0,
+    ) -> StreamReport:
+        """Serve an open arrival stream: route each request at its
+        arrival time, shed under overload, and account goodput.
+
+        ``parallel=True`` is the realtime mode: every replica runs its
+        worker loop and the front door paces wall time to each arrival's
+        virtual time by the fabric clock rate.  ``parallel=False`` is
+        the deterministic mode: no threads -- each virtual-second gap
+        buys a fixed budget of ``pump`` rounds round-robined over the
+        replicas and rotation ticks on virtual arrival-time crossings,
+        so the full interleave (and with greedy sampling, every output
+        byte) is a pure function of the arrival stream.
+
+        ``release_mode``: ``"per_request"`` returns each request's
+        committed tokens to the router when it finishes;
+        ``"end_of_run"`` holds them to the end (the closed-batch-style
+        baseline the benchmark compares against).
+        """
+        if release_mode not in ("per_request", "end_of_run"):
+            raise ValueError(f"unknown release_mode: {release_mode!r}")
+        per_request = release_mode == "per_request"
+        tracker = SLOTracker(slos, default=default_slo)
+        records: list[StreamRecord] = []
+        deferred: list[RouteDecision] = []
+        self.decisions = []
+        rate = self.clock.rate if self.clock is not None else 1.0
+
+        def admit_and_submit(arr: Arrival) -> None:
+            tracker.note_offered(arr.tenant)
+            if admission is not None and not admission.admit(
+                    arr.request.priority, self.router.total_load()):
+                tracker.note_shed(arr.tenant)
+                records.append(StreamRecord(arrival=arr, shed=True))
+                return
+            fut, d = self.submit(arr.request, release=per_request)
+            if not per_request:
+                deferred.append(d)
+            records.append(StreamRecord(arrival=arr, decision=d,
+                                        future=fut))
+
+        t0 = time.perf_counter()
+        try:
+            if parallel:
+                ticker = self._start_rotation_ticker()
+                self.start_workers()
+                try:
+                    for arr in arrivals:
+                        # pace wall time to the arrival's virtual time
+                        # (direct sleep, not SimClock.wait_until: front-
+                        # door pacing must not pollute transport wait
+                        # accounting)
+                        dt = arr.t_s / rate - (time.perf_counter() - t0)
+                        if dt > 0:
+                            time.sleep(dt)
+                        admit_and_submit(arr)
+                finally:
+                    self.stop_workers(drain=True)
+                    if ticker is not None:
+                        ticker()
+            else:
+                self._serve_stream_deterministic(
+                    arrivals, admit_and_submit, pump_steps_per_s)
+        finally:
+            for d in deferred:     # end-of-run release (the baseline)
+                self.router.release(d.replica, d.committed_tokens)
+        elapsed = time.perf_counter() - t0
+
+        errors: list[tuple[str, BaseException]] = []
+        for rec in records:
+            if rec.future is None:
+                continue
+            err = rec.future.exception()
+            if err is not None:
+                errors.append(
+                    (f"request {rec.arrival.request.request_id}", err))
+                continue
+            rec.result = rec.future.result()
+            rec.attained = tracker.observe(
+                rec.arrival.tenant,
+                ttft_s=rec.result.ttft_s,
+                itl_samples_s=rec.result.itl_samples_s,
+                new_tokens=len(rec.result.token_ids))
+        _raise_aggregated(errors)
+        return StreamReport(records=records, elapsed_s=elapsed,
+                            slo=tracker.report(elapsed),
+                            rotations=self.rotations)
+
+    def _serve_stream_deterministic(self, arrivals, admit_and_submit,
+                                    pump_steps_per_s: float) -> None:
+        """The threadless interleave: per arrival, rotate on virtual-
+        time crossings, spend the gap's pump budget round-robin, settle
+        write-backs (so the shared index -- and with it every routing
+        signal -- is in a schedule-independent state), then submit."""
+        prev_t = 0.0
+        next_rot = self.rotate_every_s or float("inf")
+        for arr in arrivals:
+            while arr.t_s >= next_rot:
+                with self.manager.lock:
+                    self.kvc.rotate(1)
+                    self.rotations += 1
+                next_rot += self.rotate_every_s
+            budget = int((arr.t_s - prev_t) * pump_steps_per_s)
+            prev_t = arr.t_s
+            for _ in range(budget):
+                if not self._pump_all():
+                    break
+            self._settle_write_backs()
+            admit_and_submit(arr)
+        while self._pump_all():
+            pass
+        self._settle_write_backs()
+
+    def _pump_all(self) -> bool:
+        busy = False
+        for e in self.engines:
+            busy |= e.pump()
+        return busy
+
+    def _settle_write_backs(self) -> None:
+        for e in self.engines:
+            if e.paged:
+                e.kv.drain_write_back()
 
     def _start_rotation_ticker(self):
         """Orbital rotation on the serving clock: while requests are in

@@ -25,6 +25,8 @@ tier.
 """
 from __future__ import annotations
 
+from concurrent.futures import Future
+
 from repro.core.chunking import PayloadCodec
 from repro.core.protocol import ConstellationKVC, KVCManager
 from repro.models.model import Model
@@ -39,6 +41,7 @@ from repro.serving.scheduler import (  # noqa: F401  (re-exported API)
 from repro.serving.skycache import SkyKVCAdapter
 from repro.serving.stats import EngineStats
 from repro.serving.tokenizer import ByteTokenizer
+from repro.serving.worker import StreamWorker
 
 
 class Engine:
@@ -138,14 +141,45 @@ class Engine:
                 write_back=write_back, seed=seed,
             )
         self.stats = EngineStats()
+        # streaming front door (worker thread started on demand)
+        self.worker = StreamWorker(self)
 
     # ------------------------------------------------------------------
     def generate(self, requests: list[Request]) -> list[GenerationResult]:
         if not requests:
             return []
+        if self.running:
+            raise RuntimeError(
+                "engine worker loop is running; submit() requests instead "
+                "of calling generate(), or stop() the worker first")
         if self.paged:
             return self.scheduler.run(requests)
         return self._dense.generate(requests)
+
+    # ------------------------------------------------------------------
+    # streaming: delegated to the StreamWorker (see serving/worker.py
+    # for the loop, the single-writer queue-ownership invariant, and the
+    # dense micro-batching inbox)
+    # ------------------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self.worker.running
+
+    @property
+    def backlog(self) -> bool:
+        return self.worker.backlog
+
+    def submit(self, request: Request) -> Future:
+        return self.worker.submit(request)
+
+    def pump(self) -> bool:
+        return self.worker.pump()
+
+    def start(self) -> None:
+        self.worker.start()
+
+    def stop(self, *, drain: bool = True) -> None:
+        self.worker.stop(drain=drain)
 
     # ------------------------------------------------------------------
     # facade surface: one stats / chunk-log / write-back view across the

@@ -39,6 +39,10 @@ class Request:
     # the scheduler offloads the lowest-priority running sequence first
     # (ties broken against the most recently admitted)
     priority: int = 0
+    # multi-tenant streams: which tenant's SLO this request counts
+    # against (empty for single-tenant callers -- nothing downstream
+    # requires it)
+    tenant: str = ""
     request_id: int = field(default_factory=lambda: next(_ids))
 
 
@@ -55,6 +59,10 @@ class GenerationResult:
     ttft_s: float = 0.0         # queue-entry -> first token latency
     finish_reason: str = FinishReason.MAX_NEW_TOKENS.value
     preemptions: int = 0        # times this sequence was swapped out
+    tenant: str = ""            # copied from the request (SLO accounting)
+    # this request's own inter-token gaps (streaming SLO attainment
+    # judges each request's ITL tail, not the engine-wide distribution)
+    itl_samples_s: list[float] = field(default_factory=list)
 
 
 @dataclass
@@ -91,6 +99,11 @@ class Seq:
     replay_tokens: list[int] | None = None
     replay_next: int | None = None
     preempt_count: int = 0
+    # streaming: the submit()-returned future this seq resolves on
+    # finish (None on the closed-batch path until run() attaches one),
+    # and this seq's own inter-token gaps for per-request ITL tails
+    future: object | None = None
+    itl: list[float] = field(default_factory=list)
     # legacy (non-paged) path only:
     dense_state: dict | None = None
     last_logits: jnp.ndarray | None = None
@@ -129,4 +142,6 @@ def seq_result(s: Seq, tokenizer) -> GenerationResult:
         ttft_s=s.ttft_s,
         finish_reason=s.finish_reason,
         preemptions=s.preempt_count,
+        tenant=s.request.tenant,
+        itl_samples_s=list(s.itl),
     )

@@ -33,6 +33,7 @@ unit-tested without building a single engine.
 from __future__ import annotations
 
 import random
+import threading
 from dataclasses import dataclass, field
 
 from repro.core.hashing import chain_hashes
@@ -116,6 +117,12 @@ class Router:
         # delta payloads the tail Get ships one block, not the prefix.
         self.bytes_per_token = bytes_per_token
         self.delta_payloads = delta_payloads
+        # streaming serves route at the front door while per-request
+        # releases arrive from engine worker threads (future callbacks):
+        # one lock keeps load accounting and affinity memory coherent.
+        # Always taken BEFORE the manager lock (never after), so it
+        # cannot deadlock against engines holding the fabric lock.
+        self.lock = threading.Lock()
 
     # -- shared signals -------------------------------------------------
     def _cached_prefix(
@@ -151,14 +158,22 @@ class Router:
         return committed
 
     def release(self, replica: int, n_tokens: int) -> None:
-        """Return finished work's tokens to the load accounting (for
-        streaming callers; batch serves route everything up front)."""
-        h = self.handles[replica]
-        h.load_tokens = max(0, h.load_tokens - n_tokens)
+        """Return finished work's tokens to the load accounting (per
+        request on the streaming path; batch serves release at end)."""
+        with self.lock:
+            h = self.handles[replica]
+            h.load_tokens = max(0, h.load_tokens - n_tokens)
+
+    def total_load(self) -> int:
+        """Outstanding committed tokens across every replica -- the
+        overload signal the streaming admission controller sheds on."""
+        with self.lock:
+            return sum(h.load_tokens for h in self.handles)
 
     def reset(self) -> None:
-        for h in self.handles:
-            h.reset()
+        with self.lock:
+            for h in self.handles:
+                h.reset()
 
     def route(self, tokens: list[int], *,
               est_new_tokens: int = 0) -> RouteDecision:
@@ -178,17 +193,19 @@ class RandomRouter(Router):
     def route(self, tokens: list[int], *,
               est_new_tokens: int = 0) -> RouteDecision:
         hashes = chain_hashes(tokens, self.block_size)
-        h = self.handles[self._rng.randrange(len(self.handles))]
-        load_before = h.load_tokens
-        return RouteDecision(
-            replica=h.index,
-            affinity_tokens=h.affinity_blocks(hashes) * self.block_size,
-            cached_blocks=self._cached_prefix(hashes)[0],
-            hop_latency_s=0.0,
-            load_tokens=load_before,
-            committed_tokens=self._commit(h, hashes, len(tokens),
-                                          est_new_tokens),
-        )
+        cached = self._cached_prefix(hashes)[0]
+        with self.lock:
+            h = self.handles[self._rng.randrange(len(self.handles))]
+            load_before = h.load_tokens
+            return RouteDecision(
+                replica=h.index,
+                affinity_tokens=h.affinity_blocks(hashes) * self.block_size,
+                cached_blocks=cached,
+                hop_latency_s=0.0,
+                load_tokens=load_before,
+                committed_tokens=self._commit(h, hashes, len(tokens),
+                                              est_new_tokens),
+            )
 
 
 class PrefixAffinityRouter(Router):
@@ -223,34 +240,35 @@ class PrefixAffinityRouter(Router):
               est_new_tokens: int = 0) -> RouteDecision:
         hashes = chain_hashes(tokens, self.block_size)
         cached, payload_bytes, tail_hash = self._cached_prefix(hashes)
-        best_h: ReplicaHandle | None = None
-        best_key = None
-        best_aff = 0
-        best_hop = 0.0
-        for h in self.handles:
-            aff_tokens = h.affinity_blocks(hashes) * self.block_size
-            hop_s = 0.0
-            if cached and h.view is not None:
-                hop_s = h.view.estimate_get_latency_s(
-                    payload_bytes=payload_bytes, block_hash=tail_hash)
-            score = (self.w_affinity * aff_tokens
-                     - self.w_load * h.load_tokens)
-            # hop latency splits equal-score candidates; remaining ties
-            # go to the emptier replica, then the lower index
-            key = (score, -hop_s, -h.load_tokens, -h.index)
-            if best_key is None or key > best_key:
-                best_h, best_key = h, key
-                best_aff, best_hop = aff_tokens, hop_s
-        load_before = best_h.load_tokens
-        return RouteDecision(
-            replica=best_h.index,
-            affinity_tokens=best_aff,
-            cached_blocks=cached,
-            hop_latency_s=best_hop,
-            load_tokens=load_before,
-            committed_tokens=self._commit(best_h, hashes, len(tokens),
-                                          est_new_tokens),
-        )
+        with self.lock:
+            best_h: ReplicaHandle | None = None
+            best_key = None
+            best_aff = 0
+            best_hop = 0.0
+            for h in self.handles:
+                aff_tokens = h.affinity_blocks(hashes) * self.block_size
+                hop_s = 0.0
+                if cached and h.view is not None:
+                    hop_s = h.view.estimate_get_latency_s(
+                        payload_bytes=payload_bytes, block_hash=tail_hash)
+                score = (self.w_affinity * aff_tokens
+                         - self.w_load * h.load_tokens)
+                # hop latency splits equal-score candidates; remaining
+                # ties go to the emptier replica, then the lower index
+                key = (score, -hop_s, -h.load_tokens, -h.index)
+                if best_key is None or key > best_key:
+                    best_h, best_key = h, key
+                    best_aff, best_hop = aff_tokens, hop_s
+            load_before = best_h.load_tokens
+            return RouteDecision(
+                replica=best_h.index,
+                affinity_tokens=best_aff,
+                cached_blocks=cached,
+                hop_latency_s=best_hop,
+                load_tokens=load_before,
+                committed_tokens=self._commit(best_h, hashes, len(tokens),
+                                              est_new_tokens),
+            )
 
 
 def make_router(policy: str, handles: list[ReplicaHandle], *,

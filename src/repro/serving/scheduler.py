@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 
 import jax.numpy as jnp
 import numpy as np
@@ -99,17 +99,22 @@ class Scheduler:
         self.stats = EngineStats()
         self.chunk_log: list[tuple[int, int, int]] = []  # (slot, start, n)
         self._admit_counter = 0
+        self._reset_stream()
 
-    # ------------------------------------------------------------------
-    def run(self, requests: list[Request]) -> list[GenerationResult]:
-        t_start = time.perf_counter()
-        seqs = [self._make_seq(r) for r in requests]
-        self._pending: deque[Seq] = deque(seqs)
+    def _reset_stream(self) -> None:
+        """(Re)initialize the persistent streaming machine state.  The
+        scheduler is long-lived now: ``submit``/``service`` operate on
+        this state across an open-ended stream, and ``run`` is a closed
+        batch riding the same machinery."""
+        b = self.max_batch
+        # submit() appends here from any thread; the servicing thread
+        # drains it into _pending (deque append/popleft are atomic, and
+        # _pending stays single-threaded for the preemption requeues)
+        self._inbox: deque[Seq] = deque()
+        self._pending: deque[Seq] = deque()
         self._active: dict[int, Seq] = {}
         self._prefilling: dict[int, Seq] = {}  # insertion order == FIFO
-        self._free_slots = list(range(self.max_batch - 1, -1, -1))
-        b = self.max_batch
-        self.chunk_log = []
+        self._free_slots = list(range(b - 1, -1, -1))
         self._lengths = np.zeros(b, np.int32)
         self._tokens = np.zeros(b, np.int32)
         self._samp = [SamplingParams() for _ in range(b)]
@@ -117,27 +122,112 @@ class Scheduler:
         self._samp_dirty = self._bt_dirty = True
         self._admit_stall = False  # a stop-the-world wave ran under decodes
 
-        while self._pending or self._active or self._prefilling:
-            # -- growth: running sequences claim next-write pages first --
-            if self._active:
-                self._grow_active()
-            # -- admission: fill freed slots from the queue --------------
-            self._admit()
-            if not (self._active or self._prefilling):
-                if self._pending:
-                    raise RuntimeError(
-                        "cannot admit request: KV page pool too small for "
-                        f"a {self._need_tokens(self._pending[0])}-token "
-                        "footprint even with every slot preempted")
-                break
+    # ------------------------------------------------------------------
+    # streaming entry points
+    # ------------------------------------------------------------------
+    @property
+    def backlog(self) -> bool:
+        """Anything submitted but not yet finished/failed."""
+        return bool(self._inbox or self._pending
+                    or self._active or self._prefilling)
+
+    def submit(self, request: Request) -> Future:
+        """Enqueue one request; the returned future resolves to its
+        ``GenerationResult`` when it finishes (or raises if it can never
+        be admitted).  Thread-safe: the worker loop (or ``run``) does the
+        actual stepping."""
+        s = self._make_seq(request)
+        s.future = Future()
+        self._inbox.append(s)
+        return s.future
+
+    def service(self) -> bool:
+        """One scheduling round: drain the inbox, grow/admit, and run one
+        fused device step if anything is live.  Returns whether backlog
+        remains.  Single-threaded: only the worker loop or ``run`` may
+        call this."""
+        self._drain_inbox()
+        # -- growth: running sequences claim next-write pages first -----
+        if self._active:
+            self._grow_active()
+        # -- admission: fill freed slots from the queue ------------------
+        self._admit()
+        if self._active or self._prefilling:
             self._step_once()
+        elif self._pending:
+            # the machine is idle (every slot free, nothing to preempt)
+            # and the head still cannot admit: its footprint can never
+            # fit.  Fail that request alone; the stream continues.
+            s = self._pending.popleft()
+            self._fail_seq(s, RuntimeError(
+                "cannot admit request: KV page pool too small for "
+                f"a {self._need_tokens(s)}-token "
+                "footprint even with every slot preempted"))
+        return self.backlog
+
+    def _drain_inbox(self) -> None:
+        while self._inbox:
+            self._pending.append(self._inbox.popleft())
+
+    def cancel_queued(self) -> int:
+        """Cancel every submitted-but-unstarted request (fresh QUEUED
+        seqs; preempted ones are mid-request and keep their claim).
+        Returns how many were cancelled -- the ``stop(drain=False)``
+        path."""
+        self._drain_inbox()
+        kept: deque[Seq] = deque()
+        n = 0
+        for s in self._pending:
+            if (s.state is SeqState.QUEUED and s.future is not None
+                    and s.future.cancel()):
+                n += 1
+            else:
+                kept.append(s)
+        self._pending = kept
+        return n
+
+    def fail_all(self, exc: BaseException) -> None:
+        """A worker-loop crash: fail every in-flight future so no waiter
+        hangs, release their slots/pages, and reset the machine."""
+        self._drain_inbox()
+        seqs = list(self._pending)
+        for slot, s in (list(self._active.items())
+                        + list(self._prefilling.items())):
+            self.kv.release(slot)
+            seqs.append(s)
+        for s in seqs:
+            if s.future is not None:
+                try:
+                    s.future.set_exception(exc)
+                except InvalidStateError:
+                    pass
+        self._reset_stream()
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[GenerationResult]:
+        """Closed-batch serve: a thin wrapper over the streaming path.
+        Submits everything, services until the stream drains, and returns
+        results in request order with the legacy batch-wall stamping."""
+        t_start = time.perf_counter()
+        self.chunk_log = []
+        futs = [self.submit(r) for r in requests]
+        while self.service():
+            pass
 
         self.kv.drain_write_back()   # settle Set KVC before handing back
         wall = time.perf_counter() - t_start
         out = []
-        for s in seqs:
-            s.wall_s = wall
-            out.append(seq_result(s, self.tokenizer))
+        first_err: BaseException | None = None
+        for fut in futs:
+            err = fut.exception()
+            if err is not None:
+                first_err = first_err or err
+                continue
+            res = fut.result()
+            res.wall_time_s = wall
+            out.append(res)
+        if first_err is not None:
+            raise first_err
         return out
 
     # ------------------------------------------------------------------
@@ -181,6 +271,7 @@ class Scheduler:
             self.stats.decoded_tokens += 1
             itl = now - self._last_tok_t[slot]
             self.stats.itl_s.append(itl)
+            s.itl.append(itl)
             if in_admission:
                 self.stats.itl_admission_s.append(itl)
             self._last_tok_t[slot] = now
@@ -826,3 +917,26 @@ class Scheduler:
         self._free_slots.append(slot)
         self._samp_dirty = self._bt_dirty = True
         self.stats.requests += 1
+        self._finalize(s)
+
+    def _finalize(self, s: Seq) -> None:
+        """Resolve a finished sequence's future with its result.  The
+        per-request wall clock ends here (a closed batch overwrites it
+        with the batch wall afterwards, the legacy contract); future
+        callbacks -- e.g. the cluster router's per-request load release
+        -- run inline on the servicing thread."""
+        s.wall_s = time.perf_counter() - s.enqueue_t
+        if s.future is None:
+            return
+        try:
+            s.future.set_result(seq_result(s, self.tokenizer))
+        except InvalidStateError:
+            pass                      # cancelled while finishing
+
+    def _fail_seq(self, s: Seq, exc: BaseException) -> None:
+        if s.future is None:
+            raise exc
+        try:
+            s.future.set_exception(exc)
+        except InvalidStateError:
+            pass

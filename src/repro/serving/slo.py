@@ -1,0 +1,167 @@
+"""Per-tenant SLOs, goodput accounting, and overload admission control.
+
+Under sustained arrivals the honest serving metric is not tokens/s but
+*goodput*: tokens delivered inside their tenant's latency SLO
+(TTFT + per-request ITL tail), measured over the run.  This module is
+the accounting side of the streaming tier:
+
+* ``SLO`` -- one tenant's targets: time-to-first-token and the p95 of
+  the request's own inter-token gaps (a per-request tail, so one stalled
+  request cannot hide inside an engine-wide distribution).
+* ``SLOTracker`` -- folds completed/shed requests into per-tenant
+  attainment, goodput tokens, and stream-wide ITL tail percentiles;
+  ``report(elapsed_s)`` is the counter block benchmarks and the example
+  print.
+* ``AdmissionController`` -- the overload valve at the cluster's front
+  door: when outstanding routed work exceeds ``capacity_tokens``, new
+  requests *below* ``protect_priority`` are shed; protected tenants are
+  always admitted and additionally ride the scheduler's
+  preemption-by-offload priority inside each engine.  Deciding on
+  committed-token load (not latency) keeps the shed set a pure function
+  of the arrival history, so deterministic replays stay deterministic.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.stats import SampleReservoir
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Latency targets for one tenant (virtual==wall seconds at the
+    serving host; ``inf`` disables a bound)."""
+
+    ttft_s: float = math.inf
+    itl_p95_s: float = math.inf
+
+
+def itl_tail(samples_s: list[float], q: float = 95.0) -> float:
+    """The q-th percentile of one request's inter-token gaps."""
+    if not samples_s:
+        return 0.0
+    return float(np.percentile(np.asarray(samples_s, np.float64), q))
+
+
+@dataclass
+class TenantCounters:
+    offered: int = 0
+    shed: int = 0
+    completed: int = 0
+    attained: int = 0
+    tokens: int = 0
+    attained_tokens: int = 0
+
+    def attainment(self) -> float:
+        return self.attained / max(self.completed, 1)
+
+
+class SLOTracker:
+    """Stream-wide SLO bookkeeping (one instance per serve_stream)."""
+
+    def __init__(self, slos: dict[str, SLO] | None = None, *,
+                 default: SLO | None = None) -> None:
+        self.slos = dict(slos or {})
+        self.default = default if default is not None else SLO()
+        self.per_tenant: dict[str, TenantCounters] = {}
+        self.itl_all_s = SampleReservoir()
+
+    def slo_for(self, tenant: str) -> SLO:
+        return self.slos.get(tenant, self.default)
+
+    def _bucket(self, tenant: str) -> TenantCounters:
+        return self.per_tenant.setdefault(tenant, TenantCounters())
+
+    # ------------------------------------------------------------------
+    def note_offered(self, tenant: str) -> None:
+        self._bucket(tenant).offered += 1
+
+    def note_shed(self, tenant: str) -> None:
+        b = self._bucket(tenant)
+        b.shed += 1
+
+    def observe(self, tenant: str, *, ttft_s: float,
+                itl_samples_s: list[float], new_tokens: int) -> bool:
+        """Fold one completed request; returns whether it attained its
+        tenant's SLO (TTFT within target AND the request's own ITL p95
+        within target)."""
+        slo = self.slo_for(tenant)
+        ok = (ttft_s <= slo.ttft_s
+              and itl_tail(itl_samples_s) <= slo.itl_p95_s)
+        b = self._bucket(tenant)
+        b.completed += 1
+        b.tokens += new_tokens
+        self.itl_all_s.extend(itl_samples_s)
+        if ok:
+            b.attained += 1
+            b.attained_tokens += new_tokens
+        return ok
+
+    # ------------------------------------------------------------------
+    def report(self, elapsed_s: float) -> dict:
+        """The goodput/attainment counter block."""
+        total = TenantCounters()
+        for b in self.per_tenant.values():
+            total.offered += b.offered
+            total.shed += b.shed
+            total.completed += b.completed
+            total.attained += b.attained
+            total.tokens += b.tokens
+            total.attained_tokens += b.attained_tokens
+        xs = np.asarray(self.itl_all_s or [0.0], np.float64)
+        return {
+            "elapsed_s": elapsed_s,
+            "offered": total.offered,
+            "shed": total.shed,
+            "completed": total.completed,
+            "attained": total.attained,
+            "attainment": total.attainment(),
+            "tokens": total.tokens,
+            "tokens_per_s": total.tokens / max(elapsed_s, 1e-9),
+            "goodput_tokens_per_s":
+                total.attained_tokens / max(elapsed_s, 1e-9),
+            "itl_tail_s": {
+                "p95": float(np.percentile(xs, 95)),
+                "p99": float(np.percentile(xs, 99)),
+                "max": float(xs.max()),
+            },
+            "per_tenant": {
+                name: {
+                    "offered": b.offered,
+                    "shed": b.shed,
+                    "completed": b.completed,
+                    "attained": b.attained,
+                    "attainment": b.attainment(),
+                    "tokens": b.tokens,
+                    "attained_tokens": b.attained_tokens,
+                }
+                for name, b in sorted(self.per_tenant.items())
+            },
+        }
+
+
+@dataclass
+class AdmissionController:
+    """Load-threshold shedding at the streaming front door.
+
+    ``admit`` is a pure function of the router's outstanding committed
+    tokens: below ``capacity_tokens`` everyone enters; above it only
+    priorities >= ``protect_priority`` do (they are never shed -- inside
+    the engines the scheduler's priority preemption then defers the
+    admitted low-priority work too).  ``shed_count`` is the controller's
+    own tally, independent of any tracker."""
+
+    capacity_tokens: int
+    protect_priority: int = 1
+    shed_count: int = field(default=0, init=False)
+
+    def admit(self, priority: int, load_tokens: int) -> bool:
+        if priority >= self.protect_priority:
+            return True
+        if load_tokens < self.capacity_tokens:
+            return True
+        self.shed_count += 1
+        return False

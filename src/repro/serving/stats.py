@@ -7,10 +7,19 @@ keeps one instance per replica and folds them with ``EngineStats.merge``
 / ``EngineStats.merged`` -- counters add and the raw TTFT/ITL sample
 lists concatenate, so ``latency_percentiles`` on the merged object are
 true cluster-level percentiles, not averages of per-replica percentiles.
+
+The TTFT/ITL sample fields are ``SampleReservoir`` lists: open-ended
+streaming serves decode without a natural end, so unbounded per-token
+sample lists would grow without limit.  Below the cap the reservoir IS
+the full sample list (closed-batch runs and their percentile tests see
+exact data); past it, uniform reservoir sampling keeps the percentiles
+honest at O(1) memory -- the same scheme ``TransportStats`` uses for
+transport op latencies.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 from dataclasses import dataclass, field
 from typing import Iterable
 
@@ -22,6 +31,42 @@ def _percentiles(xs: list[float]) -> dict[str, float]:
         return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
     p50, p95, p99 = np.percentile(np.asarray(xs, np.float64), [50, 95, 99])
     return {"p50": float(p50), "p95": float(p95), "p99": float(p99)}
+
+
+class SampleReservoir(list):
+    """A ``list`` whose growth is bounded by uniform reservoir sampling.
+
+    Drop-in for the plain sample lists ``EngineStats`` carried before
+    streaming: equality, ``len``, indexing, and iteration behave like a
+    list, and every sample lands in arrival order until ``cap`` -- so
+    short (closed-batch) runs see exactly the data they always did.
+    Past ``cap``, each new sample replaces a uniformly random slot with
+    probability ``cap / n_seen`` (seeded, like ``TransportStats``), so
+    percentiles over an open-ended stream stay unbiased at fixed memory.
+    """
+
+    __slots__ = ("cap", "n_seen", "_rng")
+
+    def __init__(self, iterable: Iterable[float] = (), *,
+                 cap: int = 8192, seed: int = 0x5EED) -> None:
+        super().__init__()
+        self.cap = cap
+        self.n_seen = 0
+        self._rng = random.Random(seed)
+        self.extend(iterable)
+
+    def append(self, x: float) -> None:
+        self.n_seen += 1
+        if len(self) < self.cap:
+            super().append(x)
+        else:
+            j = self._rng.randrange(self.n_seen)
+            if j < self.cap:
+                self[j] = x
+
+    def extend(self, xs: Iterable[float]) -> None:
+        for x in xs:
+            self.append(x)
 
 
 @dataclass
@@ -72,12 +117,21 @@ class EngineStats:
     # leg spent on the fetch-ahead worker -- decompression that ran
     # overlapped with live decode steps instead of on the serving loop
     dequant_overlap_s: float = 0.0
-    ttft_s: list[float] = field(default_factory=list)   # per request
-    itl_s: list[float] = field(default_factory=list)    # per decoded token
+    ttft_s: list[float] = field(default_factory=SampleReservoir)
+    # per decoded token:
+    itl_s: list[float] = field(default_factory=SampleReservoir)
     # the subset of itl_s observed by running sequences while an
     # admission was in flight -- the tail the chunked scheduler exists
     # to flatten (a whole-run p99 dilutes a few admission stalls away)
-    itl_admission_s: list[float] = field(default_factory=list)
+    itl_admission_s: list[float] = field(default_factory=SampleReservoir)
+
+    def __post_init__(self) -> None:
+        # callers (and tests) may pass plain lists; rebind them as
+        # reservoirs so an open-ended stream cannot grow them unbounded
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, list) and not isinstance(v, SampleReservoir):
+                setattr(self, f.name, SampleReservoir(v))
 
     def latency_percentiles(self) -> dict[str, dict[str, float]]:
         """p50/p95/p99 of time-to-first-token and inter-token latency --

@@ -1,0 +1,412 @@
+"""Streaming tier: traffic generator determinism, SLO/goodput
+arithmetic, admission control, bounded stat reservoirs, per-request vs
+end-of-run router release, worker-loop lifecycle, and deterministic
+replay of an open arrival stream through a real cluster.
+
+The contract under test:
+
+* every arrival process (poisson / diurnal / bursty) is a pure function
+  of ``(seed, tenant spec)``: same seed => byte-identical streams,
+  different seeds differ, and the merged stream is time-ordered;
+* SLO attainment is per-request (TTFT AND the request's own ITL p95),
+  goodput counts only attained tokens, and the admission controller
+  never sheds protected priorities;
+* ``SampleReservoir`` is exact below its cap (existing percentile tests
+  keep their meaning) and bounded above it;
+* per-request release returns each request's committed tokens the moment
+  it finishes, while end-of-run release holds them -- so mid-stream load
+  differs and the post-run state agrees;
+* engine worker loops drain cleanly on ``stop()`` with requests still in
+  flight, and ``serve_stream(parallel=False)`` replays byte-identically.
+"""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import (
+    ConstellationKVC,
+    ConstellationSpec,
+    IslTransport,
+    LosWindow,
+    Sat,
+    Strategy,
+)
+from repro.models.model import Model
+from repro.serving import (
+    SLO,
+    AdmissionController,
+    Arrival,
+    Engine,
+    EngineCluster,
+    EngineStats,
+    Request,
+    SampleReservoir,
+    SamplingParams,
+    SLOTracker,
+    TenantSpec,
+    TrafficGenerator,
+    itl_tail,
+    standard_tenants,
+)
+
+SPEC = ConstellationSpec(15, 15, 550.0)
+
+
+def make_kvc(clock=None, **kw):
+    transport = IslTransport(SPEC, clock=clock,
+                             chunk_processing_time_s=1e-4)
+    return ConstellationKVC(
+        SPEC, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+        num_servers=10, chunk_bytes=1024, transport=transport, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# traffic generator: seeded determinism
+# ---------------------------------------------------------------------------
+
+def _one_tenant(process, **kw):
+    return TenantSpec(name=f"t-{process}", rate_rps=20.0,
+                      process=process, **kw)
+
+
+def _fingerprint(arrivals):
+    return [(a.t_s, a.tenant, a.request.prompt, a.request.priority,
+             a.request.sampling.max_new_tokens)
+            for a in arrivals]
+
+
+@pytest.mark.parametrize("process", ["poisson", "diurnal", "bursty"])
+def test_arrival_process_deterministic_per_seed(process):
+    spec = _one_tenant(process)
+    a = TrafficGenerator([spec], seed=3).take(40)
+    b = TrafficGenerator([spec], seed=3).take(40)
+    c = TrafficGenerator([spec], seed=4).take(40)
+    assert _fingerprint(a) == _fingerprint(b)          # same seed: identical
+    assert _fingerprint(a) != _fingerprint(c)          # different seed: not
+    ts = [x.t_s for x in a]
+    assert ts == sorted(ts)                            # monotone times
+    assert all(x.t_s >= 0.0 for x in a)
+    assert len({x.request.request_id for x in a}) == 40
+
+
+def test_diurnal_rate_actually_modulates():
+    """Thinning must keep arrivals denser near the peak of the cycle
+    than in the trough (statistically, with a fixed seed)."""
+    spec = _one_tenant("diurnal", diurnal_period_s=8.0,
+                       diurnal_amplitude=0.9)
+    arrivals = TrafficGenerator([spec], seed=0).until(64.0)
+    phase = [(a.t_s % 8.0) / 8.0 for a in arrivals]
+    near_peak = sum(1 for p in phase if p < 0.5)       # sin peaks at 0.25
+    near_trough = len(phase) - near_peak
+    assert near_peak > near_trough * 1.5
+
+
+def test_bursty_clusters_arrivals():
+    spec = _one_tenant("bursty", burst_size=5, burst_spread_s=0.01)
+    arrivals = TrafficGenerator([spec], seed=1).take(60)
+    gaps = [b.t_s - a.t_s for a, b in zip(arrivals, arrivals[1:])]
+    tight = sum(1 for g in gaps if g < 0.02)
+    assert tight > len(gaps) // 2                      # mostly intra-burst
+
+
+def test_merged_multi_tenant_stream_ordered_and_deterministic():
+    tenants = standard_tenants(3, 30.0, max_new_tokens=4)
+    a = TrafficGenerator(tenants, seed=9).until(2.0)
+    b = TrafficGenerator(tenants, seed=9).until(2.0)
+    assert _fingerprint(a) == _fingerprint(b)
+    ts = [x.t_s for x in a]
+    assert ts == sorted(ts)
+    assert {x.tenant for x in a} == {t.name for t in tenants}
+    # the protected tenant carries its priority into the Request
+    assert all(x.request.priority == 1 for x in a if x.tenant == "pro")
+    assert all(x.request.tenant == x.tenant for x in a)
+
+
+def test_prefix_reuse_duplicates_document_prefixes():
+    spec = _one_tenant("poisson", prefix_reuse_p=1.0, num_documents=2)
+    arrivals = TrafficGenerator([spec], seed=5).take(20)
+    prefixes = {a.request.prompt[:40] for a in arrivals}
+    assert len(prefixes) <= 2                          # shared documents
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting + admission control
+# ---------------------------------------------------------------------------
+
+def test_itl_tail_is_per_request_percentile():
+    assert itl_tail([]) == 0.0
+    assert itl_tail([0.01] * 19 + [1.0]) < 1.0         # p95 clips one spike
+    assert itl_tail([0.01] * 19 + [1.0], q=100.0) == pytest.approx(1.0)
+
+
+def test_slo_tracker_attainment_and_goodput():
+    tracker = SLOTracker({"pro": SLO(ttft_s=0.1, itl_p95_s=0.05)},
+                         default=SLO(ttft_s=1.0))
+    for _ in range(3):
+        tracker.note_offered("pro")
+    tracker.note_offered("free")
+    tracker.note_shed("free")
+    ok = tracker.observe("pro", ttft_s=0.05,
+                         itl_samples_s=[0.01, 0.02], new_tokens=10)
+    late = tracker.observe("pro", ttft_s=0.5,           # TTFT blown
+                           itl_samples_s=[0.01], new_tokens=10)
+    jitter = tracker.observe("pro", ttft_s=0.05,        # ITL tail blown
+                             itl_samples_s=[0.2] * 4, new_tokens=10)
+    assert ok and not late and not jitter
+    rep = tracker.report(elapsed_s=2.0)
+    assert rep["offered"] == 4 and rep["shed"] == 1
+    assert rep["completed"] == 3 and rep["attained"] == 1
+    assert rep["attainment"] == pytest.approx(1 / 3)
+    assert rep["tokens_per_s"] == pytest.approx(15.0)
+    assert rep["goodput_tokens_per_s"] == pytest.approx(5.0)
+    assert rep["per_tenant"]["pro"]["attained_tokens"] == 10
+    assert rep["per_tenant"]["free"]["shed"] == 1
+
+
+def test_admission_controller_protects_priority():
+    adm = AdmissionController(capacity_tokens=100, protect_priority=1)
+    assert adm.admit(0, load_tokens=50)                # under capacity
+    assert not adm.admit(0, load_tokens=150)           # overload: shed
+    assert adm.admit(1, load_tokens=150)               # protected: never
+    assert adm.admit(2, load_tokens=10**9)
+    assert adm.shed_count == 1
+
+
+# ---------------------------------------------------------------------------
+# bounded engine-stat samples
+# ---------------------------------------------------------------------------
+
+def test_sample_reservoir_exact_below_cap_bounded_above():
+    r = SampleReservoir(cap=16)
+    r.extend(float(i) for i in range(10))
+    assert list(r) == [float(i) for i in range(10)]    # exact, in order
+    r.extend(float(i) for i in range(10, 5000))
+    assert len(r) == 16                                # bounded forever
+    assert r.n_seen == 5000
+    assert all(0.0 <= x < 5000.0 for x in r)
+    # seeded: two reservoirs fed identically agree
+    r2 = SampleReservoir(cap=16)
+    r2.extend(float(i) for i in range(5000))
+    assert list(r) == list(r2)
+
+
+def test_engine_stats_samples_are_bounded():
+    st = EngineStats(ttft_s=[0.1, 0.2])                # plain-list kwargs
+    assert isinstance(st.ttft_s, SampleReservoir)
+    assert st.ttft_s == [0.1, 0.2]                     # exact while short
+    for i in range(20000):
+        st.itl_s.append(i * 1e-6)
+    assert len(st.itl_s) <= 8192
+    merged = EngineStats.merged([st, EngineStats(itl_s=[1.0])])
+    assert len(merged.itl_s) <= 8192
+    assert 0.0 < merged.latency_percentiles()["itl_s"]["p99"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# streaming through a real tiny cluster
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _cluster(model, params, **kw):
+    kw.setdefault("num_replicas", 2)
+    return EngineCluster(
+        model, params, make_kvc(), policy="prefix_affinity",
+        block_size=16, max_seq_len=256, max_batch=4, **kw,
+    )
+
+
+def _arrivals(n=6, max_new=4, rate=50.0):
+    tenants = standard_tenants(2, rate, max_new_tokens=max_new,
+                               prompt_chars=(24, 48))
+    return TrafficGenerator(tenants, seed=11).take(n)
+
+
+def test_worker_loop_drains_in_flight_requests(dense_setup):
+    """stop(drain=True) with requests still queued finishes every one:
+    all futures resolve, nothing is cancelled, the backlog is empty."""
+    _, model, params = dense_setup
+    eng = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=2)
+    eng.start()
+    with pytest.raises(RuntimeError):
+        eng.generate([Request(prompt="closed batch while streaming",
+                              sampling=SamplingParams(max_new_tokens=1))])
+    futs = [eng.submit(Request(prompt=f"stream request {i}",
+                               sampling=SamplingParams(max_new_tokens=3)))
+            for i in range(5)]
+    eng.stop(drain=True)                   # requests still in flight
+    assert not eng.backlog and not eng.running
+    for f in futs:
+        res = f.result(timeout=0)          # already resolved
+        assert len(res.token_ids) == 3
+        assert res.finish_reason == "max_new_tokens"
+    assert eng.stats.requests == 5
+    # stopped engine accepts closed batches again
+    out = eng.generate([Request(prompt="after the stream",
+                                sampling=SamplingParams(max_new_tokens=2))])
+    assert len(out[0].token_ids) == 2
+
+
+def test_worker_stop_without_drain_cancels_queued(dense_setup):
+    _, model, params = dense_setup
+    eng = Engine(model, params, kvc=make_kvc(), block_size=16,
+                 max_seq_len=256, max_batch=2)
+    # no worker running: queued seqs sit in the inbox until stop()
+    futs = [eng.submit(Request(prompt=f"doomed {i}",
+                               sampling=SamplingParams(max_new_tokens=4)))
+            for i in range(3)]
+    eng.stop(drain=False)
+    assert all(f.cancelled() for f in futs)
+    assert not eng.backlog
+
+
+def test_per_request_release_vs_end_of_run(dense_setup):
+    """Per-request release returns committed tokens as each request
+    finishes; the end-of-run baseline holds every commitment until the
+    stream is over.  Observed at the router: with release=False the load
+    survives the futures resolving, with release=True it drains."""
+    _, model, params = dense_setup
+    cluster = _cluster(model, params)
+    req = Request(prompt="hold my committed tokens",
+                  sampling=SamplingParams(max_new_tokens=2))
+
+    fut, d = cluster.submit(req, release=False)
+    cluster.start_workers()
+    cluster.stop_workers(drain=True)
+    assert fut.result(timeout=0) is not None
+    assert cluster.router.total_load() == d.committed_tokens  # still held
+    cluster.router.release(d.replica, d.committed_tokens)
+    assert cluster.router.total_load() == 0
+
+    fut2, d2 = cluster.submit(req, release=True)
+    assert cluster.router.total_load() == d2.committed_tokens
+    cluster.start_workers()
+    cluster.stop_workers(drain=True)
+    assert fut2.result(timeout=0) is not None
+    assert cluster.router.total_load() == 0            # released per request
+
+
+def test_serve_stream_realtime_with_admission(dense_setup):
+    _, model, params = dense_setup
+    cluster = _cluster(model, params)
+    arrivals = _arrivals(n=6)
+    report = cluster.serve_stream(
+        arrivals, parallel=True,
+        slos={"pro": SLO(ttft_s=60.0)},
+        admission=AdmissionController(capacity_tokens=10**9))
+    assert len(report.records) == 6
+    assert not report.shed()                           # capacity is huge
+    assert all(len(r.token_ids) > 0 for r in report.results())
+    assert report.slo["completed"] == 6
+    assert report.slo["tokens_per_s"] > 0.0
+    assert cluster.router.total_load() == 0            # all released
+    assert cluster.merged_stats().requests == 6
+
+
+def test_serve_stream_sheds_low_priority_only(dense_setup):
+    """With zero capacity every unprotected arrival is shed and every
+    protected one completes."""
+    _, model, params = dense_setup
+    cluster = _cluster(model, params, num_replicas=1)
+    arrivals = _arrivals(n=8)
+    report = cluster.serve_stream(
+        arrivals, parallel=False,
+        admission=AdmissionController(capacity_tokens=0,
+                                      protect_priority=1))
+    shed = report.shed()
+    assert shed and all(r.arrival.request.priority == 0 for r in shed)
+    done = report.results()
+    assert done and all(r.tenant == "pro" for r in done)
+    assert report.slo["shed"] == len(shed)
+    per = report.slo["per_tenant"]
+    assert per["pro"]["shed"] == 0
+
+
+def test_serve_stream_deterministic_replays_byte_identical(dense_setup):
+    _, model, params = dense_setup
+
+    def run():
+        cluster = _cluster(model, params, rotate_every_s=0.05)
+        report = cluster.serve_stream(_arrivals(n=6), parallel=False)
+        return ([(r.arrival.tenant, r.shed,
+                  r.decision.replica if r.decision else None,
+                  tuple(r.result.token_ids) if r.result else None)
+                 for r in report.records], report.rotations)
+
+    recs_a, rot_a = run()
+    recs_b, rot_b = run()
+    assert recs_a == recs_b                            # byte-identical
+    assert rot_a == rot_b and rot_a > 0                # rotation replayed
+    assert any(t for t, *_ in recs_a)
+
+
+def test_cluster_serve_aggregates_replica_failures(dense_setup):
+    """The closed-batch path reports EVERY failed replica, not just the
+    first: the aggregate names each one and chains a cause."""
+    _, model, params = dense_setup
+    cluster = EngineCluster(
+        model, params, make_kvc(), policy="random",
+        block_size=16, max_seq_len=256, max_batch=4, num_replicas=2)
+
+    def boom(reqs, **kw):
+        raise RuntimeError("replica exploded")
+
+    for e in cluster.engines:
+        e.generate = boom
+    reqs = [Request(prompt=f"doomed request {i} with its own prefix",
+                    sampling=SamplingParams(max_new_tokens=2))
+            for i in range(4)]
+    with pytest.raises(RuntimeError) as ei:
+        cluster.serve(reqs, parallel=True)
+    msg = str(ei.value)
+    assert "2 replica failures" in msg
+    assert "replica 0" in msg and "replica 1" in msg
+    assert isinstance(ei.value.__cause__, RuntimeError)
+
+
+def test_submit_concurrent_from_many_threads(dense_setup):
+    """The front door is thread-safe: concurrent submits all route,
+    all complete, and the load accounting balances to zero."""
+    _, model, params = dense_setup
+    cluster = _cluster(model, params)
+    cluster.start_workers()
+    futs = []
+    lock = threading.Lock()
+
+    def feed(i):
+        f, _ = cluster.submit(Request(
+            prompt=f"concurrent stream {i}",
+            sampling=SamplingParams(max_new_tokens=2)))
+        with lock:
+            futs.append(f)
+
+    threads = [threading.Thread(target=feed, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    cluster.stop_workers(drain=True)
+    assert len(futs) == 6
+    assert all(len(f.result(timeout=0).token_ids) == 2 for f in futs)
+    deadline = time.perf_counter() + 2.0
+    while cluster.router.total_load() and time.perf_counter() < deadline:
+        time.sleep(0.01)                   # done-callbacks are async
+    assert cluster.router.total_load() == 0
+
+
+def test_arrival_is_frozen_record():
+    req = Request(prompt="x", sampling=SamplingParams(max_new_tokens=1))
+    a = Arrival(t_s=1.0, tenant="t", request=req)
+    with pytest.raises(AttributeError):
+        a.t_s = 2.0
