@@ -33,6 +33,7 @@ Run: PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -430,6 +431,7 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
         ("striped_directory", _striped_directory),
         ("quantized_payloads", _quantized_payloads),
         ("sustained_load", _sustained_load),
+        ("chaos_sustained_load", _chaos_sustained_load),
     ]
     for key, fn in scenarios:
         jax.clear_caches()
@@ -462,6 +464,9 @@ def serving_throughput(quick: bool = True, smoke: bool = False,
     uacc = record["sustained_load"]["acceptance"]
     if not all(uacc.values()):
         raise SystemExit(f"sustained_load acceptance failed: {uacc}")
+    cacc = record["chaos_sustained_load"]["acceptance"]
+    if not all(cacc.values()):
+        raise SystemExit(f"chaos_sustained_load acceptance failed: {cacc}")
     return rows
 
 
@@ -1713,6 +1718,238 @@ def _sustained_load(model, params, *, smoke: bool):
         f"rotations={report_pr.rotations}",
     ), (
         "sustained_load[acceptance]", 0.0,
+        " ".join(f"{k}={v}" for k, v in acceptance.items()),
+    )]
+    return rows, record
+
+
+def _chaos_sustained_load(model, params, *, smoke: bool):
+    """Chaos under sustained load: the full composite fault arc --
+    satellite kills, link cuts, a directory-stripe wipeout, and a
+    replica-home-pair kill forcing ground fall-through -- driven through
+    ``serve_stream``'s deterministic pump-budget mode mid-overload
+    (2-replica clocked int8 fabric over a write-through ground tier,
+    bursty multi-tenant mix offered at ~1.2x the probe-calibrated
+    service rate).  The windowed goodput timeline tags every fixed
+    virtual-time window pre_churn / churn / post_heal, and the bars are
+    ratios of *goodput retention* (attained tokens per offered request,
+    which cancels burst-volume noise between windows) across phases,
+    after discarding the first two windows as queue-fill warmup:
+
+    * retention through the churn windows holds >= 70% of pre-churn and
+      recovers to >= 90% after the heals land (repair-on-heal), i.e.
+      the fabric absorbs the arc -- replica fall-through, ground
+      fall-through, repair -- without denting the goodput timeline;
+    * the protected tenant sheds nothing and no admitted request fails,
+      all the way through the arc;
+    * the whole run -- records, fault counters, windowed timeline --
+      replays byte-identically for the same (traffic seed, fault seed);
+    * a k=1 control on the same geometry demonstrably degrades further:
+      with no surviving orbital replica it loses more of its repair
+      sources (fewer repaired chunks, and a strictly larger share of
+      the survivors must be rebuilt from the ground segment) while
+      holding at most the replicated fabric's churn retention.
+
+    Capacity is probe-calibrated on the first arrivals of the actual
+    stream (representative prompts, not synthetic fillers); with every
+    SLO target open (inf) attained == completed, so the phase bars
+    measure admission/shedding behaviour, not host wall noise.  The
+    workload is identical in smoke and full modes: the bars are
+    calibrated against this fixed seeded stream, and only the model
+    (and hence the probe-measured service rate) changes."""
+    from repro.core import (
+        ConstellationKVC, ConstellationSpec, FaultPlan, GroundStationTier,
+        IslTransport, LosWindow, Sat, SimClock, Strategy,
+    )
+    from repro.serving import (
+        AdmissionController, EngineCluster, Request, SamplingParams,
+        TrafficGenerator, standard_tenants,
+    )
+
+    max_seq_len = 512
+    block = 64          # doc prefixes must span whole blocks to cache
+    clock_rate = 5.0
+    n_requests = 96
+    max_new = 4
+    overload = 1.2
+    n_windows = 8       # 2 warmup+pre, 2 pre, 2 churn, 2 post-heal
+
+    def build(k: int) -> EngineCluster:
+        spec = ConstellationSpec(15, 15, 550.0)
+        kvc = ConstellationKVC(
+            spec, LosWindow(Sat(7, 7), 9, 9), Strategy.ROTATION_HOP,
+            num_servers=10, chunk_bytes=6 * 1024, replication=k,
+            dir_replication=k,
+            transport=IslTransport(spec, clock=SimClock(rate=clock_rate),
+                                   chunk_processing_time_s=2e-4,
+                                   probe_timeout_s=5e-3),
+            ground=GroundStationTier(spec, processing_time_s=1e-3),
+            ground_write="all",
+        )
+        cluster = EngineCluster(
+            model, params, kvc, num_replicas=2, policy="prefix_affinity",
+            router_seed=0, block_size=block, max_seq_len=max_seq_len,
+            max_batch=4, rotate_every_s=2.0, payload_codec="int8",
+            num_pages=25,
+        )
+        for i, eng in enumerate(cluster.engines):
+            eng.generate([Request(prompt=f"[warm {i}] chaos warm",
+                                  sampling=SamplingParams(max_new_tokens=2))])
+        cluster.reset_stats()
+        return cluster
+
+    # the standard 4-tenant mix (protected pro + bursty + diurnal) at 4
+    # requests per virtual second, with the *protected* tenant carrying
+    # fattened shared documents (multi-block prefixes): its cache mass
+    # is what the fault arc attacks, and its zero-shed bar is what the
+    # admission controller must hold through the churn.  seed 11 spreads
+    # arrivals evenly across the 8 windows (no end-of-stream burst
+    # clump that would confound the post-heal windows with drain sheds)
+    tenants = standard_tenants(4, 4.0, max_new_tokens=max_new,
+                               prompt_chars=(48, 96), prefix_reuse_p=0.5)
+    tenants[0] = dataclasses.replace(tenants[0], prefix_reuse_p=0.9,
+                                     num_documents=2, doc_chars=320)
+    arrivals = TrafficGenerator(tenants, seed=11).take(n_requests)
+    t_last = arrivals[-1].t_s
+    # epsilon keeps the final arrival inside window n_windows-1 instead
+    # of opening a degenerate extra window at exactly t_last
+    window_s = t_last / n_windows * (1.0 + 1e-9)
+    churn_start = 4.0 * window_s
+    heal_at = 6.0 * window_s
+
+    # ---- probe: this host's service rate on representative requests --
+    probe = build(2)
+    for a in arrivals[:8]:
+        probe.submit(Request(prompt=a.request.prompt,
+                             sampling=a.request.sampling,
+                             priority=a.request.priority,
+                             tenant=a.request.tenant))
+    rounds = 0
+    while probe._pump_all():
+        rounds += 1
+    service_req_per_round = 8 / max(rounds, 1)
+    virtual_rate = sum(t.rate_rps for t in tenants)
+    pump_steps_per_s = virtual_rate / (service_req_per_round * overload)
+    # tight enough that the admission controller visibly sheds filler
+    # under the sustained overload, loose enough that the steady-state
+    # backlog does not swamp the post-heal windows with tail sheds
+    capacity_tokens = 3900
+
+    def arc(kvc) -> FaultPlan:
+        return FaultPlan.chaos_arc(
+            kvc, seed=29, churn_start_s=churn_start,
+            churn_window_s=window_s, heal_s=heal_at,
+            n_sat_kills=2, n_link_cuts=2, dir_stripe_wipeout=True,
+            ground_pair_server=4)
+
+    def run(k: int):
+        cluster = build(k)
+        report = cluster.serve_stream(
+            arrivals, parallel=False,
+            admission=AdmissionController(capacity_tokens=capacity_tokens,
+                                          protect_priority=1),
+            pump_steps_per_s=pump_steps_per_s,
+            faults=arc(cluster.kvc), slo_window_s=window_s)
+        fp = [(r.arrival.tenant, r.shed,
+               r.decision.replica if r.decision else None,
+               tuple(r.result.token_ids) if r.result else None)
+              for r in report.records]
+        cached = sum(r.cached_tokens for r in report.results())
+        return report, fp, cached
+
+    report, fp_a, cached_k2 = run(2)
+    report_b, fp_b, _ = run(2)
+    report_k1, _, cached_k1 = run(1)
+
+    def phase_retention(rep) -> dict:
+        """Attained tokens per offered request per phase, skipping the
+        first ``warmup`` windows (queue still filling, retention
+        artificially high)."""
+        rows_w = sorted(rep.slo["windows"], key=lambda r: r["t0_s"])
+        agg: dict[str, list[int]] = {}
+        for i, r in enumerate(rows_w):
+            if i < 2:
+                continue
+            a = agg.setdefault(r["phase"], [0, 0])
+            a[0] += r["attained_tokens"]
+            a[1] += r["offered"]
+        return {ph: v[0] / max(v[1], 1) for ph, v in agg.items()}
+
+    ret = phase_retention(report)
+    churn_ratio = ret["churn"] / max(ret["pre_churn"], 1e-9)
+    heal_ratio = ret["post_heal"] / max(ret["pre_churn"], 1e-9)
+    ret_k1 = phase_retention(report_k1)
+    churn_ratio_k1 = ret_k1["churn"] / max(ret_k1["pre_churn"], 1e-9)
+
+    def ground_repair_frac(f) -> float:
+        return f["repaired_from_ground"] / max(f["repaired_chunks"], 1)
+
+    pro = report.slo["per_tenant"]["pro"]
+    served = [r for r in report.records if not r.shed]
+    f2, f1 = report.faults, report_k1.faults
+
+    acceptance = {
+        "goodput_holds_70pct_through_churn": churn_ratio >= 0.70,
+        "goodput_recovers_90pct_post_heal": heal_ratio >= 0.90,
+        "protected_tenant_never_shed":
+            pro["shed"] == 0 and pro["completed"] == pro["offered"],
+        "zero_failed_requests":
+            all(r.result is not None and len(r.result.token_ids) > 0
+                for r in served),
+        "deterministic_replay_byte_identical":
+            fp_a == fp_b and report.faults == report_b.faults
+            and report.slo["windows"] == report_b.slo["windows"],
+        "arc_actually_bit":
+            f2["sat_kills"] >= 2 and f2["sat_heals"] >= 2
+            and f2["link_kills"] >= 1 and f2["chunks_dropped"] > 0
+            and f2["degraded_reads"] + f2["degraded_lookups"]
+            + f2["ground_hits"] > 0,
+        "k1_control_degrades_further":
+            f1["repaired_chunks"] < f2["repaired_chunks"]
+            and ground_repair_frac(f1) > ground_repair_frac(f2)
+            and churn_ratio_k1 <= churn_ratio + 1e-9,
+    }
+    record = {
+        "requests": n_requests,
+        "overload_factor": overload,
+        "pump_steps_per_s": pump_steps_per_s,
+        "service_requests_per_round": service_req_per_round,
+        "capacity_tokens": capacity_tokens,
+        "window_s": window_s,
+        "churn_start_s": churn_start,
+        "heal_at_s": heal_at,
+        "rotations": report.rotations,
+        "faults": report.faults,
+        "streaming": report.slo,
+        "phase_retention_tokens_per_offered": ret,
+        "churn_over_pre_ratio": churn_ratio,
+        "post_heal_over_pre_ratio": heal_ratio,
+        "cached_tokens_k2": cached_k2,
+        "ground_repair_fraction_k2": ground_repair_frac(f2),
+        "k1_control": {
+            "faults": report_k1.faults,
+            "phase_retention_tokens_per_offered": ret_k1,
+            "churn_over_pre_ratio": churn_ratio_k1,
+            "cached_tokens": cached_k1,
+            "ground_repair_fraction": ground_repair_frac(f1),
+            "shed": report_k1.slo["shed"],
+        },
+        "acceptance": acceptance,
+    }
+    s = report.slo
+    rows = [(
+        "chaos_sustained_load", 0.0,
+        f"churn/pre={churn_ratio:.2f} post_heal/pre={heal_ratio:.2f} "
+        f"shed={s['shed']}/{s['offered']} pro_shed={pro['shed']} "
+        f"kills={f2['sat_kills']} degraded={f2['degraded_reads']} "
+        f"ground_hits={f2['ground_hits']} "
+        f"repaired={f2['repaired_chunks']} "
+        f"(ground {ground_repair_frac(f2):.2f}) | "
+        f"k1: churn/pre={churn_ratio_k1:.2f} "
+        f"repaired={f1['repaired_chunks']} "
+        f"(ground {ground_repair_frac(f1):.2f})",
+    ), (
+        "chaos_sustained_load[acceptance]", 0.0,
         " ".join(f"{k}={v}" for k, v in acceptance.items()),
     )]
     return rows, record

@@ -55,7 +55,12 @@ depth by default so the demo runs in ~a minute on CPU) from an
   long-lived engine worker loops, router load releases per request, an
   admission controller sheds low-priority arrivals under overload, and
   the run reports *goodput* (SLO-attained tokens/s), per-tenant
-  attainment, and the tail of per-request inter-token latency.
+  attainment, and the tail of per-request inter-token latency.  With
+  ``--outages`` the stream composes the composite chaos arc
+  (``FaultPlan.chaos_arc``): seeded kills open a churn window mid-run,
+  heals trigger repair-on-heal, and the report prints a windowed
+  goodput timeline tagged pre_churn / churn / post_heal plus the fault
+  counters the stream experienced.
 
 Run: PYTHONPATH=src python examples/serve_skymemory.py
      [--full] [--replicas N] [--requests N] [--policy random]
@@ -214,7 +219,7 @@ def main() -> None:
         for i in range(args.requests)
     ]
     events = []
-    if args.outages:
+    if args.outages and not args.stream:
         kills = plan_survivable_kills(kvc, args.outages, seed=5)
         events += FaultPlan.outages(
             kills, kill_at_s=0.5, stagger_s=0.5, downtime_s=1e9).events
@@ -254,11 +259,32 @@ def main() -> None:
         cluster.reset_stats()
         admission = AdmissionController(
             capacity_tokens=args.replicas * 4 * 256, protect_priority=1)
+        faults = window_s = None
+        if args.outages:
+            # with --stream, --outages arms the composite chaos arc
+            # instead of the closed-batch outage plan: seeded satellite
+            # kills open a churn window a third of the way into the
+            # stream, the heals land at two thirds and trigger
+            # repair-on-heal, and the goodput timeline below tags every
+            # window pre_churn / churn / post_heal
+            window_s = args.duration / 6.0
+            faults = FaultPlan.chaos_arc(
+                kvc, seed=5, churn_start_s=2 * window_s,
+                churn_window_s=window_s, heal_s=4 * window_s,
+                n_sat_kills=args.outages,
+                n_link_cuts=1 if args.degrade_links else 0,
+                dir_stripe_wipeout=True,
+                ground_pair_server=0 if ground is not None else None)
+            print(f"fault plan: chaos arc (seed 5) -- {args.outages} "
+                  f"satellite kill(s) opening churn at "
+                  f"t={2 * window_s:.1f}s, heals + repair-on-heal at "
+                  f"t={4 * window_s:.1f}s")
         report = cluster.serve_stream(
             arrivals,
             slos={"pro": SLO(ttft_s=2.0, itl_p95_s=0.5)},
             default_slo=SLO(ttft_s=4.0, itl_p95_s=1.0),
             admission=admission,
+            faults=faults, slo_window_s=window_s,
         )
         results = report.results()
         wall = report.elapsed_s
@@ -289,6 +315,27 @@ def main() -> None:
                   f"shed={b['shed']} completed={b['completed']} "
                   f"attained={b['attained']} "
                   f"({b['attainment']*100:.0f}%)")
+        if window_s is not None and s.get("windows"):
+            print("\ngoodput timeline (fixed virtual-time windows):")
+            for w in s["windows"]:
+                print(f"  [{w['t0_s']:5.1f}s..{w['t1_s']:5.1f}s] "
+                      f"{w['phase']:>9}: offered={w['offered']} "
+                      f"shed={w['shed']} "
+                      f"goodput={w['goodput_tokens_per_s']:.1f} tok/s")
+            for ph, agg in s.get("phases", {}).items():
+                print(f"  phase {ph:>9}: windows={agg['windows']} "
+                      f"goodput={agg['goodput_tokens_per_s']:.1f} tok/s")
+        if report.faults:
+            f = report.faults
+            print(f"fault arc: kills={f.get('sat_kills', 0)} "
+                  f"heals={f.get('sat_heals', 0)} "
+                  f"link_cuts={f.get('link_kills', 0)} | "
+                  f"degraded_reads={f.get('degraded_reads', 0)} "
+                  f"degraded_lookups={f.get('degraded_lookups', 0)} "
+                  f"ground_hits={f.get('ground_hits', 0)} | "
+                  f"repaired={f.get('repaired_chunks', 0)} "
+                  f"(from ground {f.get('repaired_from_ground', 0)}) "
+                  f"dir_repaired={f.get('dir_repaired_entries', 0)}")
     else:
         t0 = time.perf_counter()
         results = cluster.serve(reqs)

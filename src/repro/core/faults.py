@@ -33,6 +33,15 @@ Three pieces:
   *lookups* fall through to surviving directory-stripe replicas, and
   ``reconcile()`` rebuilds both from what survives (chunk re-replication
   plus inventory-driven metadata reconstruction).
+
+Two drive modes: on the *clock* (above -- realtime serving), or *held*
+(``hold()`` / ``manual=True``): the chunk-op tick becomes a no-op and
+only an explicit ``advance_to(rel_s)`` applies events.  Held mode is how
+``EngineCluster.serve_stream``'s deterministic pump-budget interleave
+replays a chaos arc byte-identically: the fabric clock is wall-anchored
+(nondeterministic), so the serve loop drives the injector on virtual
+*arrival-time* crossings instead -- exactly like rotation --
+interleaving fault events and rotations in virtual-time order.
 """
 from __future__ import annotations
 
@@ -235,6 +244,19 @@ class FaultPlan:
     def __post_init__(self) -> None:
         self.events = sorted(self.events, key=lambda e: e.at_s)
 
+    @property
+    def churn_span(self) -> tuple[float, float] | None:
+        """``(first_kill_s, last_heal_s)`` -- the plan's churn phase
+        boundaries, relative to arming.  ``None`` with no kills; with
+        kills but no heals the churn never ends (``inf``), which also
+        covers the end-of-run-drain idiom of heals parked at ``1e9``.
+        The SLO timeline tags its goodput windows with these."""
+        kills = [e.at_s for e in self.events if e.action == "kill"]
+        if not kills:
+            return None
+        heals = [e.at_s for e in self.events if e.action == "heal"]
+        return (min(kills), max(heals) if heals else math.inf)
+
     @classmethod
     def outages(
         cls,
@@ -290,6 +312,82 @@ class FaultPlan:
                     FaultEvent(at_s=t + downtime_s, action="heal", link=link))
         return cls(events)
 
+    @classmethod
+    def chaos_arc(
+        cls,
+        kvc,
+        *,
+        seed: int,
+        churn_start_s: float,
+        churn_window_s: float = 1.0,
+        heal_s: float | None = None,
+        n_sat_kills: int = 2,
+        n_link_cuts: int = 0,
+        dir_stripe_wipeout: bool = False,
+        ground_pair_server: int | None = None,
+    ) -> "FaultPlan":
+        """A composite kill->degrade->heal arc over ``kvc``'s CURRENT
+        geometry -- the PR 6/7 fault scenarios rolled into one seeded
+        schedule meant to run *under live traffic*:
+
+        * ``n_sat_kills`` survivable satellite kills (no data or
+          directory home set completed, accounting for every other kill
+          in this arc) -- degraded reads/lookups, never losses;
+        * ``n_link_cuts`` ISL cuts, each severing the last greedy-route
+          hop into a seeded chunk server's home -- ops detour, never
+          fail;
+        * ``dir_stripe_wipeout``: kill EVERY directory home of one
+          seeded stripe -- its metadata is gone until heal + reconcile,
+          so lookups for that stripe's blocks clean-miss and recompute;
+        * ``ground_pair_server``: kill that server's ENTIRE replica home
+          set -- its chunks lose every orbital copy, and Gets must fall
+          through to an attached ground tier (or purge without one).
+
+        Every kill lands at a seeded-uniform time in ``[churn_start_s,
+        churn_start_s + churn_window_s)`` -- the *ordering* of the kills
+        varies with the seed -- and every faulted element heals at
+        ``heal_s`` (``None`` parks heals at 1e9: the end-of-run drain
+        idiom).  Same ``(geometry, seed)``, same schedule."""
+        rng = random.Random(seed)
+        heal_at = 1e9 if heal_s is None else heal_s
+        events: list[FaultEvent] = []
+        killed: set[Sat] = set()
+
+        def kill_heal_sat(sat: Sat) -> None:
+            t = churn_start_s + rng.random() * churn_window_s
+            events.append(FaultEvent(at_s=t, action="kill", sat=sat))
+            events.append(FaultEvent(at_s=heal_at, action="heal", sat=sat))
+            killed.add(sat)
+
+        if ground_pair_server is not None:
+            for r in range(kvc.replication):
+                sat = kvc.replica_sat(ground_pair_server, r)
+                if sat not in killed:
+                    kill_heal_sat(sat)
+        if dir_stripe_wipeout:
+            kd = getattr(kvc, "dir_replication", kvc.replication)
+            sid = rng.randrange(kvc.num_servers)
+            for r in range(kd):
+                sat = kvc.replica_sat(sid, r)
+                if sat not in killed:
+                    kill_heal_sat(sat)
+        for sat in plan_survivable_kills(kvc, n_sat_kills,
+                                         seed=rng.randrange(1 << 30),
+                                         already_killed=killed):
+            kill_heal_sat(sat)
+        spec = kvc.spec
+        for sid in rng.sample(range(kvc.num_servers),
+                              min(n_link_cuts, kvc.num_servers)):
+            path = spec.greedy_route(kvc.window.center,
+                                     kvc.replica_sat(sid, 0))
+            if len(path) < 2:
+                continue
+            link = (path[-2], path[-1])
+            t = churn_start_s + rng.random() * churn_window_s
+            events.append(FaultEvent(at_s=t, action="kill", link=link))
+            events.append(FaultEvent(at_s=heal_at, action="heal", link=link))
+        return cls(events)
+
 
 @dataclass
 class FaultInjectorStats:
@@ -315,14 +413,22 @@ class FaultInjector:
     under one lock, so concurrent serving threads each see a consistent
     prefix of the plan.  With no clock (unclocked fabric) only events at
     ``at_s <= 0`` fire on advance; ``drain()`` force-applies the rest.
+
+    ``hold()`` (or ``manual=True``) detaches the injector from the
+    clock: the chunk-op tick no-ops and only ``advance_to(rel_s)``
+    applies events -- the deterministic serve loop's drive, where
+    "time" is the virtual arrival timeline, not the wall-anchored
+    clock.
     """
 
     def __init__(self, kvc, plan: FaultPlan, *,
-                 repair_on_heal: bool = False) -> None:
+                 repair_on_heal: bool = False,
+                 manual: bool = False) -> None:
         # views delegate storage to their base; faults live on the base
         self.kvc = getattr(kvc, "base", kvc)
         self.plan = plan
         self.repair_on_heal = repair_on_heal
+        self.manual = manual
         self.state = FaultState()
         self.stats = FaultInjectorStats()
         self._idx = 0
@@ -343,13 +449,40 @@ class FaultInjector:
             self._t0 = self._now()
             self._idx = 0
 
+    def hold(self) -> None:
+        """Detach from the clock: the per-chunk-op ``advance()`` tick
+        becomes a no-op and only ``advance_to`` applies events."""
+        self.manual = True
+
+    @property
+    def next_event_at_s(self) -> float | None:
+        """Relative time of the next unapplied event (None when the
+        plan is exhausted) -- the deterministic serve loop peeks this to
+        interleave fault crossings with rotation crossings in
+        virtual-time order."""
+        if self._idx >= len(self.plan.events):
+            return None
+        return self.plan.events[self._idx].at_s
+
     def advance(self) -> int:
         """Apply every event whose (relative) time has passed; returns
-        how many fired.  No-op until ``arm()``."""
-        if self._t0 is None or self._idx >= len(self.plan.events):
+        how many fired.  No-op until ``arm()``, and always a no-op when
+        held (``manual``): a clock read mid-pump must never fire events
+        a deterministic replay expects at a virtual-time crossing."""
+        if self.manual or self._t0 is None \
+                or self._idx >= len(self.plan.events):
             return 0
         rel = self._now() - self._t0
         return self._apply_until(rel)
+
+    def advance_to(self, rel_s: float) -> int:
+        """Apply every event scheduled at or before ``rel_s`` (seconds
+        relative to arming), regardless of the clock; returns how many
+        fired.  Arms implicitly if needed.  This is the held-mode drive:
+        the caller owns the timeline."""
+        if self._t0 is None:
+            self._t0 = self._now()
+        return self._apply_until(rel_s)
 
     def drain(self) -> int:
         """Force-apply every remaining event (end-of-scenario settling:
@@ -403,15 +536,21 @@ class FaultInjector:
         return False
 
 
-def plan_survivable_kills(kvc, n_kills: int, *, seed: int = 0) -> list[Sat]:
+def plan_survivable_kills(kvc, n_kills: int, *, seed: int = 0,
+                          already_killed: set[Sat] = frozenset()
+                          ) -> list[Sat]:
     """Pick up to ``n_kills`` chunk-server satellites to kill such that,
     at the store's replication factor, no chunk loses its *entire*
     replica home set -- and, since PR 7, no directory stripe loses its
     entire metadata home set either -- the benchmark's "replication
     survives this" schedule.  A factor of 1 (data or metadata) means
     nothing at that tier is survivable, so that tier's constraint is
-    waived; that is the collapse baseline.  Seeded and deterministic for
-    a given store geometry."""
+    waived; that is the collapse baseline.  ``already_killed`` names
+    satellites some other part of the schedule kills anyway (a composite
+    chaos arc's deliberate home-pair / stripe wipeouts): the picks here
+    must not complete a home set *in combination with them*, and are
+    never drawn from them.  Seeded and deterministic for a given store
+    geometry."""
     rng = random.Random(seed)
     home_sets: list[set[Sat]] = []
     if kvc.replication > 1:
@@ -425,9 +564,12 @@ def plan_survivable_kills(kvc, n_kills: int, *, seed: int = 0) -> list[Sat]:
             {kvc.replica_sat(sid, r) for r in range(kd)}
             for sid in range(kvc.num_servers)
         ]
-    cands = list(dict.fromkeys(kvc.server_map))
+    # home sets the deliberate kills already complete are lost either
+    # way -- only constrain the ones still survivable
+    killed: set[Sat] = set(already_killed)
+    home_sets = [homes for homes in home_sets if not homes <= killed]
+    cands = [s for s in dict.fromkeys(kvc.server_map) if s not in killed]
     rng.shuffle(cands)
-    killed: set[Sat] = set()
     out: list[Sat] = []
     for sat in cands:
         if len(out) >= n_kills:

@@ -63,8 +63,36 @@ The cluster serves **open-ended streams**, not just closed batches:
   shed at the front door while protected tenants always enter and
   additionally ride the scheduler's priority preemption inside the
   engines.  Shedding decides on load, never latency, so deterministic
-  replays (``serve_stream(parallel=False)``, pump-budget interleave,
-  rotation on virtual-time crossings) reproduce byte-identical runs.
+  replays (``serve_stream(parallel=False)``, pump-budget interleave
+  with the fractional budget carried across arrival gaps, rotation on
+  virtual-time crossings) reproduce byte-identical runs.
+
+Chaos under sustained load
+==========================
+
+The fault machinery and the streaming tier compose:
+``serve_stream(faults=...)`` drives a seeded ``FaultPlan`` (or prebuilt
+``FaultInjector``) *while the traffic generator runs* --
+``FaultPlan.chaos_arc`` builds the composite schedule (survivable
+satellite kills + ISL cuts rerouted into detours + a directory-stripe
+wipeout + a replica-home-pair kill forcing ground fall-through), armed
+at stream start so event times share the arrival timeline.  In realtime
+mode the injector advances on the fabric clock from inside chunk ops;
+in deterministic mode it is *held* and driven on virtual arrival-time
+crossings under the manager lock, interleaved with rotation in
+virtual-time order and with ``reconcile()`` fired on heal crossings, so
+a kill->degrade->heal->repair arc replays byte-identically.  The
+measurement side: ``SLOTracker(window_s=...)`` buckets attained tokens
+into fixed virtual-time windows keyed by arrival ``t_s``, each tagged
+with its fault phase (``FaultPhases``: pre_churn / churn / post_heal
+from the plan's ``churn_span``), so "goodput holds within X% through
+churn and recovers after heal" is a computable bar -- and the
+``StreamReport.faults`` block carries the stream's own degradation
+deltas (``degraded_reads`` / ``degraded_lookups`` / ``ground_hits`` /
+``lost_blocks`` / ``repaired_*``) next to the injector's event tallies.
+The ``chaos_sustained_load`` benchmark runs the arc against a 2-replica
+clocked int8 fabric at ~1.2x capacity and holds those bars, with a
+k=1 control demonstrably degrading further.
 
 Constellation latency is **experienced, not just recorded**: with a
 ``core.protocol.SimClock`` on the fabric, every Get KVC completes at a
@@ -291,7 +319,13 @@ from repro.serving.request import (
     Request,
     SeqState,
 )
-from repro.serving.slo import SLO, AdmissionController, SLOTracker, itl_tail
+from repro.serving.slo import (
+    SLO,
+    AdmissionController,
+    FaultPhases,
+    SLOTracker,
+    itl_tail,
+)
 from repro.serving.router import (
     PrefixAffinityRouter,
     RandomRouter,
@@ -323,6 +357,7 @@ __all__ = [
     "Engine",
     "EngineCluster",
     "EngineStats",
+    "FaultPhases",
     "FinishReason",
     "GenerationResult",
     "SLO",

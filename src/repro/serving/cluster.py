@@ -43,6 +43,7 @@ transport latency percentiles next to them.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from concurrent.futures import Future
@@ -51,6 +52,7 @@ from typing import Iterable, Sequence
 
 from repro.core.chunking import PayloadCodec
 from repro.core.constellation import Sat
+from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.protocol import (
     CacheStats,
     ConstellationKVC,
@@ -69,7 +71,12 @@ from repro.serving.router import (
     make_router,
 )
 from repro.serving.skycache import SkyKVCAdapter
-from repro.serving.slo import SLO, AdmissionController, SLOTracker
+from repro.serving.slo import (
+    SLO,
+    AdmissionController,
+    FaultPhases,
+    SLOTracker,
+)
 from repro.serving.stats import EngineStats
 from repro.serving.tokenizer import ByteTokenizer, truncate_prompt
 from repro.serving.traffic import Arrival
@@ -90,12 +97,18 @@ class StreamRecord:
 @dataclass
 class StreamReport:
     """What ``serve_stream`` hands back: per-arrival records plus the
-    SLO tracker's goodput/attainment counter block."""
+    SLO tracker's goodput/attainment counter block.  ``faults`` (only
+    populated when a fault arc ran) holds the stream's OWN fault
+    counters: fabric degradation deltas (``degraded_reads``,
+    ``degraded_lookups``, ``ground_hits``, ``lost_blocks``,
+    ``repaired_*``, ...) plus the injector's applied-event tallies --
+    deltas over the stream, so a faulted warmup can't leak in."""
 
     records: list[StreamRecord] = field(default_factory=list)
     elapsed_s: float = 0.0
     slo: dict = field(default_factory=dict)
     rotations: int = 0
+    faults: dict = field(default_factory=dict)
 
     def results(self) -> list[GenerationResult]:
         return [r.result for r in self.records if r.result is not None]
@@ -290,6 +303,15 @@ class EngineCluster:
                                                     d.committed_tokens))
         return fut, d
 
+    # fabric counters whose stream-wide deltas a fault arc's report
+    # carries: the degradation a request stream actually experienced
+    _FAULT_STAT_KEYS = (
+        "degraded_reads", "degraded_lookups", "ground_hits",
+        "lost_blocks", "repaired_chunks", "repaired_from_ground",
+        "dir_repaired_entries", "detoured_ops", "orphaned_chunks",
+        "shortened_prefixes",
+    )
+
     def serve_stream(
         self,
         arrivals: Iterable[Arrival],
@@ -300,6 +322,8 @@ class EngineCluster:
         admission: AdmissionController | None = None,
         release_mode: str = "per_request",
         pump_steps_per_s: float = 200.0,
+        faults: "FaultPlan | FaultInjector | None" = None,
+        slo_window_s: float | None = None,
     ) -> StreamReport:
         """Serve an open arrival stream: route each request at its
         arrival time, shed under overload, and account goodput.
@@ -307,11 +331,29 @@ class EngineCluster:
         ``parallel=True`` is the realtime mode: every replica runs its
         worker loop and the front door paces wall time to each arrival's
         virtual time by the fabric clock rate.  ``parallel=False`` is
-        the deterministic mode: no threads -- each virtual-second gap
-        buys a fixed budget of ``pump`` rounds round-robined over the
-        replicas and rotation ticks on virtual arrival-time crossings,
-        so the full interleave (and with greedy sampling, every output
-        byte) is a pure function of the arrival stream.
+        the deterministic mode: no threads -- elapsed virtual time buys
+        ``pump`` rounds round-robined over the replicas (fractional
+        budget carried across gaps) and rotation ticks on virtual
+        arrival-time crossings, so the full interleave (and with greedy
+        sampling, every output byte) is a pure function of the arrival
+        stream.
+
+        ``faults`` composes a chaos arc with the stream: a ``FaultPlan``
+        (wrapped in a repairing injector here) or a prebuilt
+        ``FaultInjector``, (re)armed at stream start so event times are
+        relative to t=0 of the arrival timeline.  In realtime mode the
+        injector advances on the fabric clock from inside chunk ops, as
+        always; in deterministic mode it is *held* and driven on
+        virtual-time crossings interleaved with rotation -- with
+        ``reconcile()`` fired on satellite-heal crossings -- so a seeded
+        kill->degrade->heal->repair arc replays byte-identically.  The
+        report's ``faults`` block carries the stream's degradation
+        deltas and the injector's event tallies.
+
+        ``slo_window_s`` turns on the tracker's windowed goodput
+        timeline (fixed virtual-time windows keyed by arrival ``t_s``,
+        tagged pre_churn/churn/post_heal from the fault plan's
+        ``churn_span``).
 
         ``release_mode``: ``"per_request"`` returns each request's
         committed tokens to the router when it finishes;
@@ -321,17 +363,34 @@ class EngineCluster:
         if release_mode not in ("per_request", "end_of_run"):
             raise ValueError(f"unknown release_mode: {release_mode!r}")
         per_request = release_mode == "per_request"
-        tracker = SLOTracker(slos, default=default_slo)
+        injector: FaultInjector | None = None
+        if isinstance(faults, FaultPlan):
+            injector = FaultInjector(self.kvc, faults,
+                                     repair_on_heal=True)
+        elif faults is not None:
+            injector = faults
+        phases = None
+        if injector is not None:
+            span = injector.plan.churn_span
+            if span is not None:
+                phases = FaultPhases(*span)
+        tracker = SLOTracker(slos, default=default_slo,
+                             window_s=slo_window_s, phases=phases)
         records: list[StreamRecord] = []
         deferred: list[RouteDecision] = []
         self.decisions = []
         rate = self.clock.rate if self.clock is not None else 1.0
+        stats_before = None
+        if injector is not None:
+            fabric = self.fabric_stats()
+            stats_before = {k: fabric[k] for k in self._FAULT_STAT_KEYS}
+            inj_before = dataclasses.asdict(injector.stats)
 
         def admit_and_submit(arr: Arrival) -> None:
-            tracker.note_offered(arr.tenant)
+            tracker.note_offered(arr.tenant, t_s=arr.t_s)
             if admission is not None and not admission.admit(
                     arr.request.priority, self.router.total_load()):
-                tracker.note_shed(arr.tenant)
+                tracker.note_shed(arr.tenant, t_s=arr.t_s)
                 records.append(StreamRecord(arrival=arr, shed=True))
                 return
             fut, d = self.submit(arr.request, release=per_request)
@@ -343,6 +402,8 @@ class EngineCluster:
         t0 = time.perf_counter()
         try:
             if parallel:
+                if injector is not None:
+                    injector.arm()      # event times relative to now
                 ticker = self._start_rotation_ticker()
                 self.start_workers()
                 try:
@@ -360,8 +421,12 @@ class EngineCluster:
                     if ticker is not None:
                         ticker()
             else:
+                if injector is not None:
+                    injector.hold()     # crossings drive it, not the clock
+                    injector.arm()
                 self._serve_stream_deterministic(
-                    arrivals, admit_and_submit, pump_steps_per_s)
+                    arrivals, admit_and_submit, pump_steps_per_s,
+                    injector=injector)
         finally:
             for d in deferred:     # end-of-run release (the baseline)
                 self.router.release(d.replica, d.committed_tokens)
@@ -381,31 +446,90 @@ class EngineCluster:
                 rec.arrival.tenant,
                 ttft_s=rec.result.ttft_s,
                 itl_samples_s=rec.result.itl_samples_s,
-                new_tokens=len(rec.result.token_ids))
+                new_tokens=len(rec.result.token_ids),
+                t_s=rec.arrival.t_s)
         _raise_aggregated(errors)
+        fault_block: dict = {}
+        if injector is not None:
+            fabric = self.fabric_stats()
+            fault_block = {k: fabric[k] - stats_before[k]
+                           for k in self._FAULT_STAT_KEYS}
+            for k, v in dataclasses.asdict(injector.stats).items():
+                fault_block[k] = v - inj_before[k]
         return StreamReport(records=records, elapsed_s=elapsed,
                             slo=tracker.report(elapsed),
-                            rotations=self.rotations)
+                            rotations=self.rotations,
+                            faults=fault_block)
 
     def _serve_stream_deterministic(self, arrivals, admit_and_submit,
-                                    pump_steps_per_s: float) -> None:
-        """The threadless interleave: per arrival, rotate on virtual-
-        time crossings, spend the gap's pump budget round-robin, settle
-        write-backs (so the shared index -- and with it every routing
-        signal -- is in a schedule-independent state), then submit."""
+                                    pump_steps_per_s: float,
+                                    injector: FaultInjector | None = None,
+                                    ) -> None:
+        """The threadless interleave: walk the virtual timeline arrival
+        by arrival, crossing every rotation tick AND fault event that
+        falls in the gap in time order (each under the manager lock,
+        with the pump budget up to the crossing spent first, so the
+        fabric state a crossing mutates is exactly what a realtime run
+        would have served by then), settle write-backs (so the shared
+        index -- and with it every routing signal -- is in a
+        schedule-independent state), then submit.
+
+        The pump budget is an *accumulator*: elapsed virtual time times
+        ``pump_steps_per_s``, spending whole rounds and carrying the
+        fractional remainder across gaps -- service rate is a function
+        of elapsed virtual time, never of how finely the arrival stream
+        slices it.  A satellite-heal crossing triggers ``reconcile()``
+        (via the injector's ``repair_on_heal``, or directly here when
+        the caller's injector doesn't repair), so kill->degrade->heal->
+        repair arcs replay byte-identically."""
+        acc = 0.0
         prev_t = 0.0
-        next_rot = self.rotate_every_s or float("inf")
-        for arr in arrivals:
-            while arr.t_s >= next_rot:
-                with self.manager.lock:
-                    self.kvc.rotate(1)
-                    self.rotations += 1
-                next_rot += self.rotate_every_s
-            budget = int((arr.t_s - prev_t) * pump_steps_per_s)
-            prev_t = arr.t_s
-            for _ in range(budget):
+        next_rot = self.rotate_every_s or math.inf
+
+        def spend_until(t: float) -> None:
+            nonlocal acc, prev_t
+            acc += (t - prev_t) * pump_steps_per_s
+            prev_t = t
+            rounds = int(acc)
+            acc -= rounds
+            for _ in range(rounds):
                 if not self._pump_all():
+                    break       # idle rounds don't bank service
+
+        def cross_until(t: float) -> None:
+            nonlocal next_rot
+            while True:
+                ev_t = math.inf
+                if injector is not None:
+                    nxt = injector.next_event_at_s
+                    if nxt is not None:
+                        ev_t = nxt
+                cross = min(next_rot, ev_t)
+                if cross > t:
                     break
+                spend_until(cross)
+                # settle async write-backs BEFORE the crossing mutates
+                # the fabric: whether a background write has landed by
+                # now is thread-schedule noise, and a kill must drop a
+                # schedule-independent store (same chunks_dropped every
+                # replay), just as a rotation must migrate one
+                self._settle_write_backs()
+                if next_rot <= ev_t:
+                    with self.manager.lock:
+                        self.kvc.rotate(1)
+                        self.rotations += 1
+                    next_rot += self.rotate_every_s
+                else:
+                    with self.manager.lock:
+                        heals = injector.stats.sat_heals
+                        injector.advance_to(ev_t)
+                        if (injector.stats.sat_heals > heals
+                                and not injector.repair_on_heal):
+                            self.kvc.reconcile()
+            spend_until(t)
+
+        for arr in arrivals:
+            cross_until(arr.t_s)
             self._settle_write_backs()
             admit_and_submit(arr)
         while self._pump_all():
@@ -433,10 +557,21 @@ class EngineCluster:
         stop = threading.Event()
 
         def tick() -> None:
-            while not stop.wait(self.rotate_every_s / rate):
+            # deadline-based, not sleep-after-work: each rotation's wall
+            # deadline advances by exactly one period regardless of how
+            # long the rotate (or the wait for the manager lock) took,
+            # so the realized period never drifts under load and a slow
+            # tick catches up instead of rescheduling everything after
+            # it.  This keeps the realtime rotation count aligned with
+            # the deterministic mode's virtual-time crossings.
+            period = self.rotate_every_s / rate
+            next_deadline = time.perf_counter() + period
+            while not stop.wait(max(0.0, next_deadline
+                                    - time.perf_counter())):
                 with self.manager.lock:
                     self.kvc.rotate(1)
                     self.rotations += 1
+                next_deadline += period
 
         thread = threading.Thread(target=tick, name="orbital-rotation",
                                   daemon=True)

@@ -70,6 +70,21 @@ class TenantSpec:
     max_new_tokens: int = 16
     priority: int = 0                 # Request.priority (SLO tier)
 
+    def __post_init__(self) -> None:
+        # fail loudly at construction, not corruptly at draw time:
+        if not self.rate_rps > 0.0:
+            raise ValueError(
+                f"TenantSpec {self.name!r}: rate_rps must be > 0 (got "
+                f"{self.rate_rps}); a zero/negative rate would raise "
+                "from inside expovariate on the first draw")
+        if not 0.0 <= self.diurnal_amplitude <= 1.0:
+            raise ValueError(
+                f"TenantSpec {self.name!r}: diurnal_amplitude must be "
+                f"in [0, 1] (got {self.diurnal_amplitude}); beyond 1 "
+                "the instantaneous rate goes negative and the thinning "
+                "loop silently drops that phase of the day -- a hidden "
+                "traffic hole, not more swing")
+
 
 _WORDS = (
     "sky", "memory", "orbit", "cache", "relay", "prefix", "block",

@@ -48,7 +48,14 @@ from repro.core import (
 from repro.core.chunking import arrays_to_bytes
 from repro.core.faults import FaultEvent, FaultState, link_key
 from repro.models.model import Model
-from repro.serving import Engine, EngineCluster, Request, SamplingParams
+from repro.serving import (
+    Engine,
+    EngineCluster,
+    Request,
+    SamplingParams,
+    TrafficGenerator,
+    standard_tenants,
+)
 
 SPEC = ConstellationSpec(15, 15, 550.0)
 SEED = int(os.environ.get("SKYMEM_CHAOS_SEED", "0"))
@@ -1083,3 +1090,44 @@ def test_chaos_same_seed_same_serve_results(dense_setup):
                  r.cached_tokens) for r in out]
 
     assert run() == run()
+
+
+def test_chaos_arc_under_sustained_load_replays(dense_setup):
+    """Seed-generic composite arc (sat kills + link cut + heals) driven
+    through the deterministic serve_stream interleave: for ANY chaos
+    seed the run replays byte-identically -- same records, same fault
+    counters, same phase-tagged goodput timeline -- and the arc's kills
+    and heals all land mid-stream."""
+    _, model, params = dense_setup
+    tenants = standard_tenants(2, 4.0, max_new_tokens=4,
+                               prompt_chars=(24, 48))
+    arrivals = TrafficGenerator(tenants, seed=7 + SEED).take(8)
+    span = arrivals[-1].t_s
+
+    def run():
+        kvc = make_kvc(replication=2)
+        cluster = EngineCluster(
+            model, params, kvc, num_replicas=2, router_seed=0,
+            block_size=16, max_seq_len=256, max_batch=4,
+            rotate_every_s=span / 4)
+        plan = FaultPlan.chaos_arc(
+            kvc, seed=13 + SEED, churn_start_s=span * 0.25,
+            churn_window_s=span * 0.2, heal_s=span * 0.7,
+            n_sat_kills=2, n_link_cuts=1)
+        report = cluster.serve_stream(arrivals, parallel=False,
+                                      faults=plan, slo_window_s=span / 4)
+        fp = [(r.arrival.tenant, r.shed,
+               tuple(r.result.token_ids) if r.result else None)
+              for r in report.records]
+        return fp, report.faults, [w["phase"] for w in
+                                   report.slo["windows"]]
+
+    fp_a, faults_a, phases_a = run()
+    fp_b, faults_b, phases_b = run()
+    assert fp_a == fp_b
+    assert faults_a == faults_b
+    assert phases_a == phases_b
+    assert faults_a["sat_kills"] >= 2 and faults_a["sat_heals"] >= 2
+    assert faults_a["link_kills"] >= 1 and faults_a["link_heals"] >= 1
+    assert "pre_churn" in phases_a and "post_heal" in phases_a
+    assert all(t is not None and len(t) > 0 for _, _, t in fp_a)

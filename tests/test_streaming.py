@@ -18,9 +18,16 @@ The contract under test:
   differs and the post-run state agrees;
 * engine worker loops drain cleanly on ``stop()`` with requests still in
   flight, and ``serve_stream(parallel=False)`` replays byte-identically.
+* the deterministic pump budget accumulates fractionally across arrival
+  gaps (service rate is a function of elapsed virtual time, not arrival
+  granularity), the realtime rotation ticker holds its period under a
+  slow rotate (deadline scheduling), and a seeded chaos arc driven
+  through ``serve_stream`` replays byte-identically with its windowed
+  goodput timeline tagged by fault phase.
 """
 import threading
 import time
+import types
 
 import jax
 import pytest
@@ -29,9 +36,12 @@ from repro.configs import get_config, smoke_config
 from repro.core import (
     ConstellationKVC,
     ConstellationSpec,
+    FaultInjector,
+    FaultPlan,
     IslTransport,
     LosWindow,
     Sat,
+    SimClock,
     Strategy,
 )
 from repro.models.model import Model
@@ -42,6 +52,7 @@ from repro.serving import (
     Engine,
     EngineCluster,
     EngineStats,
+    FaultPhases,
     Request,
     SampleReservoir,
     SamplingParams,
@@ -410,3 +421,252 @@ def test_arrival_is_frozen_record():
     a = Arrival(t_s=1.0, tenant="t", request=req)
     with pytest.raises(AttributeError):
         a.t_s = 2.0
+
+
+def test_tenant_spec_rejects_corrupting_parameters():
+    """Parameters that would silently corrupt (amplitude > 1: negative
+    instantaneous rate, thinned into a hidden traffic hole) or crash
+    deep in a draw (rate <= 0: expovariate) fail at construction."""
+    with pytest.raises(ValueError, match="rate_rps"):
+        TenantSpec(name="bad", rate_rps=0.0)
+    with pytest.raises(ValueError, match="rate_rps"):
+        TenantSpec(name="bad", rate_rps=-1.0)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        TenantSpec(name="bad", rate_rps=1.0, diurnal_amplitude=1.5)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        TenantSpec(name="bad", rate_rps=1.0, diurnal_amplitude=-0.1)
+    # the closed boundaries stay legal
+    TenantSpec(name="ok", rate_rps=1e-6, diurnal_amplitude=1.0)
+    TenantSpec(name="ok", rate_rps=1.0, diurnal_amplitude=0.0)
+
+
+# ---------------------------------------------------------------------------
+# deterministic pump budget + rotation ticker timing
+# ---------------------------------------------------------------------------
+
+class _TimingProbe:
+    """A minimal stand-in for EngineCluster's timing surface: counts
+    pump rounds / rotations without engines, so the two timing-bug
+    regression tests measure the loop arithmetic itself."""
+
+    def __init__(self, rotate_every_s=None, clock_rate=1.0,
+                 rotate_cost_s=0.0):
+        self.rotate_every_s = rotate_every_s
+        self.clock = types.SimpleNamespace(rate=clock_rate)
+        self.rotations = 0
+        self.rounds = 0
+        self.done = False
+        self.manager = types.SimpleNamespace(lock=threading.RLock())
+
+        def rotate(n):
+            if rotate_cost_s:
+                time.sleep(rotate_cost_s)
+        self.kvc = types.SimpleNamespace(rotate=rotate)
+
+    def _pump_all(self):
+        if self.done:
+            return False
+        self.rounds += 1
+        return True
+
+    def _settle_write_backs(self):
+        pass
+
+
+def _det_pump_rounds(gaps, pump_steps_per_s=200.0):
+    """Pump rounds the deterministic interleave spends across ``gaps``
+    (final idle drain excluded via the probe's ``done`` latch)."""
+    probe = _TimingProbe()
+    req = Request(prompt="x", sampling=SamplingParams(max_new_tokens=1))
+    arrs, t = [], 0.0
+    for g in gaps:
+        t += g
+        arrs.append(Arrival(t_s=t, tenant="t", request=req))
+
+    def admit(arr):
+        if arr is arrs[-1]:
+            probe.done = True
+
+    EngineCluster._serve_stream_deterministic(
+        probe, arrs, admit, pump_steps_per_s)
+    return probe.rounds
+
+
+def test_pump_budget_carries_fraction_across_gaps():
+    """Regression (pump-budget truncation): N small gaps must buy the
+    same total service as one large gap of the same virtual span.  The
+    pre-fix code truncated each gap's budget independently -- 100 gaps
+    of 4ms at 200 steps/s bought 0 rounds instead of 80."""
+    many = _det_pump_rounds([0.004] * 100)   # 0.8 rounds per gap
+    one = _det_pump_rounds([0.4])            # same span, one gap
+    assert one == 80
+    assert abs(many - one) <= 1
+    # granularity in between agrees too
+    assert abs(_det_pump_rounds([0.016] * 25) - one) <= 1
+
+
+def test_rotation_ticker_holds_period_with_slow_rotate():
+    """Regression (ticker drift): with a rotate that costs 50% of the
+    period, deadline scheduling must still land ~elapsed/period
+    rotations (the pre-fix sleep-after-work ticker realized a period of
+    rotate_every_s/rate + rotate_cost and lost ~1/3 of them), matching
+    the deterministic mode's virtual-time crossing count +-1."""
+    period = 0.06
+    probe = _TimingProbe(rotate_every_s=period, clock_rate=1.0,
+                         rotate_cost_s=0.03)
+    t0 = time.perf_counter()
+    stopper = EngineCluster._start_rotation_ticker(probe)
+    time.sleep(10.5 * period)
+    elapsed = time.perf_counter() - t0
+    stopper()
+    realtime = probe.rotations
+    assert abs(realtime - elapsed / period) <= 1.0
+
+    # the deterministic mode's crossings over the same virtual span
+    det = _TimingProbe(rotate_every_s=period)
+    det.done = True                          # no service, just crossings
+    req = Request(prompt="x", sampling=SamplingParams(max_new_tokens=1))
+    EngineCluster._serve_stream_deterministic(
+        det, [Arrival(t_s=elapsed, tenant="t", request=req)],
+        lambda arr: None, 0.0)
+    assert abs(det.rotations - realtime) <= 1
+
+
+# ---------------------------------------------------------------------------
+# windowed goodput timeline + fault-phase tagging
+# ---------------------------------------------------------------------------
+
+def test_slo_tracker_windows_tag_fault_phases():
+    """Fixed virtual-time windows keyed by arrival t_s, tagged from the
+    churn span: a window is pre_churn only when it ends before the
+    first kill, post_heal only when it starts at/after the last heal,
+    churn otherwise (boundary-straddlers included)."""
+    tracker = SLOTracker(
+        window_s=1.0, phases=FaultPhases(churn_start_s=2.0, heal_s=4.0))
+    tracker.note_offered("a", t_s=0.5)
+    tracker.observe("a", ttft_s=0.0, itl_samples_s=[],
+                    new_tokens=5, t_s=0.5)
+    tracker.note_offered("a", t_s=2.5)
+    tracker.note_shed("a", t_s=2.5)
+    tracker.note_offered("b", t_s=4.5)
+    tracker.observe("b", ttft_s=0.0, itl_samples_s=[],
+                    new_tokens=7, t_s=4.5)
+    rows = tracker.timeline()
+    assert [r["phase"] for r in rows] == [
+        "pre_churn", "pre_churn", "churn", "churn", "post_heal"]
+    assert rows[0]["attained_tokens"] == 5
+    assert rows[0]["goodput_tokens_per_s"] == pytest.approx(5.0)
+    assert rows[1]["offered"] == 0                     # empty window kept
+    assert rows[2]["shed"] == 1 and rows[2]["attained_tokens"] == 0
+    assert rows[4]["attained_tokens"] == 7
+    phases = tracker.phase_report()
+    assert phases["pre_churn"]["goodput_tokens_per_s"] == pytest.approx(2.5)
+    assert phases["churn"]["shed"] == 1
+    assert phases["churn"]["goodput_tokens_per_s"] == pytest.approx(0.0)
+    assert phases["post_heal"]["goodput_tokens_per_s"] == pytest.approx(7.0)
+    rep = tracker.report(elapsed_s=1.0)
+    assert rep["windows"] == rows and rep["phases"] == phases
+    # a window straddling the churn boundary is churn, conservatively
+    assert FaultPhases(2.5, 4.0).tag(2.0, 3.0) == "churn"
+    # no heal ever landing: nothing is post_heal
+    assert FaultPhases(1.0).tag(100.0, 101.0) == "churn"
+    # per-tenant totals are unaffected by windowing
+    assert rep["offered"] == 3 and rep["completed"] == 2
+    # and an unwindowed tracker reports no timeline block
+    assert "windows" not in SLOTracker().report(1.0)
+
+
+# ---------------------------------------------------------------------------
+# chaos arcs driven through serve_stream (deterministic + realtime)
+# ---------------------------------------------------------------------------
+
+def _chaos_cluster(model, params, kvc, **kw):
+    kw.setdefault("num_replicas", 2)
+    return EngineCluster(
+        model, params, kvc, policy="prefix_affinity", router_seed=0,
+        block_size=16, max_seq_len=256, max_batch=4, **kw,
+    )
+
+
+def test_serve_stream_chaos_arc_replays_byte_identical(dense_setup):
+    """The tentpole contract: the same (traffic seed, fault seed) run
+    twice through the deterministic pump-budget mode with a mid-run
+    kill->heal arc yields a byte-identical record stream, identical
+    fault counters, and identical rotation/heal/repair interleave."""
+    _, model, params = dense_setup
+
+    def run():
+        kvc = make_kvc(replication=2)
+        cluster = _chaos_cluster(model, params, kvc, rotate_every_s=0.4)
+        arrs = _arrivals(n=8, rate=4.0)
+        span = arrs[-1].t_s
+        plan = FaultPlan.chaos_arc(
+            kvc, seed=5, churn_start_s=span * 0.25,
+            churn_window_s=span * 0.2, heal_s=span * 0.7,
+            n_sat_kills=2, n_link_cuts=1)
+        report = cluster.serve_stream(arrs, parallel=False, faults=plan,
+                                      slo_window_s=span / 4)
+        fp = [(r.arrival.tenant, r.shed,
+               r.decision.replica if r.decision else None,
+               tuple(r.result.token_ids) if r.result else None)
+              for r in report.records]
+        return fp, report.faults, report.rotations, report.slo["windows"]
+
+    fp_a, faults_a, rot_a, win_a = run()
+    fp_b, faults_b, rot_b, win_b = run()
+    assert fp_a == fp_b                                # byte-identical
+    assert faults_a == faults_b                        # same degradation
+    assert rot_a == rot_b
+    assert win_a == win_b                              # same timeline
+    # the arc really ran mid-stream: kills applied AND heals crossed
+    assert faults_a["sat_kills"] >= 2 and faults_a["sat_heals"] >= 2
+    assert faults_a["link_kills"] >= 1
+    # every phase appears in the tagged timeline
+    assert {w["phase"] for w in win_a} == {
+        "pre_churn", "churn", "post_heal"}
+    assert any(len(t) > 0 for _, _, _, t in fp_a if t is not None)
+
+
+def test_protected_tenant_zero_loss_through_chaos_arc(dense_setup):
+    """Through a mid-run kill/heal arc under hard overload (capacity 0),
+    the protected tenant is never shed and completes every request;
+    every shed arrival is low-priority."""
+    _, model, params = dense_setup
+    kvc = make_kvc(replication=2)
+    cluster = _chaos_cluster(model, params, kvc)
+    arrs = _arrivals(n=10, rate=4.0)
+    span = arrs[-1].t_s
+    plan = FaultPlan.chaos_arc(
+        kvc, seed=7, churn_start_s=span * 0.2,
+        churn_window_s=span * 0.3, heal_s=span * 0.8, n_sat_kills=2)
+    report = cluster.serve_stream(
+        arrs, parallel=False, faults=plan,
+        admission=AdmissionController(capacity_tokens=0,
+                                      protect_priority=1))
+    assert report.faults["sat_kills"] >= 2             # the arc bit
+    pro = report.slo["per_tenant"]["pro"]
+    assert pro["shed"] == 0
+    assert pro["completed"] == pro["offered"] > 0
+    assert all(len(r.token_ids) > 0 for r in report.results())
+    shed = report.shed()
+    assert shed and all(r.arrival.request.priority == 0 for r in shed)
+
+
+def test_serve_stream_realtime_accepts_fault_injector(dense_setup):
+    """Realtime mode composes with a prebuilt injector: events fire on
+    the fabric clock from inside chunk ops, every request completes,
+    and the report carries the stream's fault-counter block."""
+    _, model, params = dense_setup
+    kvc = make_kvc(clock=SimClock(rate=50.0), replication=2)
+    cluster = _chaos_cluster(model, params, kvc, clock=kvc.transport.clock)
+    arrs = _arrivals(n=6)
+    span = arrs[-1].t_s
+    inj = FaultInjector(kvc, FaultPlan.chaos_arc(
+        kvc, seed=3, churn_start_s=span * 0.1,
+        churn_window_s=span * 0.4, n_sat_kills=2), repair_on_heal=True)
+    report = cluster.serve_stream(arrs, parallel=True, faults=inj)
+    assert len(report.results()) == 6
+    assert all(len(r.token_ids) > 0 for r in report.results())
+    assert "degraded_reads" in report.faults
+    inj.drain()                                        # park the heals
+    assert inj.stats.sat_kills >= 2
